@@ -1,0 +1,79 @@
+"""Paper Fig. 4: risk of the predictive mean vs wall time, BayesLR.
+
+MNIST-scale synthetic (12214 train / 2037 test / 50 PCA-like dims). The
+reference predictive mean comes from a long exact-MH run; risk(t) is the MSE
+of each chain's running predictive mean against it. The paper's claim: the
+subsampled chain reaches a given risk many times faster.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RandomWalk, SubsampledMHConfig, run_chain_timed
+from repro.experiments import bayeslr
+
+
+def run(budget_steps_exact=400, budget_steps_sub=1200, epsilon=0.05, batch=500,
+        n_train=12214, n_test=2037, d=50, seed=0, sigma=0.03):
+    data = bayeslr.synth_mnist_like(jax.random.key(seed), n_train, n_test, d)
+    target = bayeslr.make_target(data.x_train, data.y_train)
+    w0 = jnp.zeros(d)
+
+    runs = {}
+    for name, kernel, cfg, steps in [
+        ("exact", "exact", None, budget_steps_exact),
+        ("subsampled", "subsampled",
+         SubsampledMHConfig(batch_size=batch, epsilon=epsilon, sampler="stream"), budget_steps_sub),
+    ]:
+        runs[name] = run_chain_timed(
+            jax.random.key(seed + 1), w0, target, RandomWalk(sigma), steps,
+            kernel=kernel, config=cfg, chunk_size=4096,
+        )
+
+    # reference: tail of the exact chain's running predictive mean
+    x_test = np.asarray(data.x_test)
+    ref_samples = np.asarray(runs["exact"]["samples"])[len(runs["exact"]["samples"]) // 2:]
+    ref = bayeslr.predictive_mean_prob(ref_samples, x_test)[-1]
+
+    out = {}
+    for name, r in runs.items():
+        w = np.asarray(r["samples"])
+        pred = bayeslr.predictive_mean_prob(w, x_test)
+        risk = bayeslr.risk_vs_reference(pred, ref)
+        n_eval = np.asarray([i["n_evaluated"] for i in r["infos"]])
+        out[name] = {
+            "times": r["times"],
+            "risk": risk,
+            "mean_evaluated": float(n_eval.mean()),
+            "steps": len(w),
+            "test_err_final": bayeslr.test_error(w[len(w) // 2:].mean(0),
+                                                 x_test, np.asarray(data.y_test)),
+        }
+    return out
+
+
+def main(fast: bool = True):
+    res = run(budget_steps_exact=150 if fast else 600,
+              budget_steps_sub=450 if fast else 2500)
+    rows = []
+    for name, r in res.items():
+        total_t = r["times"][-1] if len(r["times"]) else 0.0
+        us = 1e6 * total_t / max(r["steps"], 1)
+        # time to reach 2x the exact chain's final risk
+        final_risk_exact = res["exact"]["risk"][-1]
+        thresh = max(2.0 * final_risk_exact, 1e-6)
+        reach = np.argmax(r["risk"] < thresh) if (r["risk"] < thresh).any() else -1
+        t_reach = r["times"][reach] if reach >= 0 else float("nan")
+        rows.append((
+            f"fig4_{name}", us,
+            f"steps={r['steps']}_meanN={r['mean_evaluated']:.0f}"
+            f"_risk={r['risk'][-1]:.2e}_t2x={t_reach:.1f}s_testerr={r['test_err_final']:.3f}",
+        ))
+    return rows, res
+
+
+if __name__ == "__main__":
+    for name, us, derived in main()[0]:
+        print(f"{name},{us:.1f},{derived}")

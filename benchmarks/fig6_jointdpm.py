@@ -1,0 +1,69 @@
+"""Paper Fig. 6d: JointDPM prediction accuracy vs running time,
+exact-MH weights vs subsampled-MH weights."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.experiments import jointdpm
+
+
+def run(n=4000, n_test=800, cycles=40, epsilon=0.3, batch=100, seed=0,
+        eval_every=5):
+    cfg = jointdpm.JDPMConfig()
+    data = jointdpm.synth(jax.random.key(seed), n=n, n_test=n_test)
+    out = {}
+    for name, exact in [("subsampled", False), ("exact", True)]:
+        state = jointdpm.init_state(jax.random.key(seed + 1), data, cfg)
+        gz = jax.jit(lambda k, s, p: jointdpm.gibbs_z_steps(k, s, data, cfg, p))
+        mw = jax.jit(
+            lambda k, s: jointdpm.subsampled_mh_w(
+                k, s, data, cfg, batch_size=batch,
+                epsilon=epsilon, sigma_prop=0.3, exact=exact,
+            )
+        )
+        # warm up compile outside the clock
+        _ = mw(jax.random.key(0), state)
+        _ = gz(jax.random.key(0), state, jnp.arange(min(n // 2, n)))
+        times, accs, n_evals = [], [], []
+        t0 = time.perf_counter()
+        for it in range(cycles):
+            kk = jax.random.fold_in(jax.random.key(seed + 2), it)
+            pts = jax.random.permutation(kk, n)[: n // 2]
+            state = gz(kk, state, pts)
+            state = jointdpm.mh_alpha(jax.random.fold_in(jax.random.key(3), it), state, cfg)
+            for j in range(10):
+                state, info = mw(jax.random.fold_in(jax.random.key(4), 31 * it + j), state)
+                n_evals.append(int(info.n_evaluated))
+            if it % eval_every == 0 or it == cycles - 1:
+                jax.block_until_ready(state.w)
+                prob = jointdpm.predict_proba(state, data.x_test, cfg)
+                accs.append(jointdpm.accuracy(np.asarray(prob), np.asarray(data.y_test)))
+                times.append(time.perf_counter() - t0)
+        out[name] = {
+            "times": times, "accs": accs,
+            "mean_evaluated": float(np.mean(n_evals)),
+            "clusters": int(jnp.sum(state.stats.n > 0.5)),
+        }
+    return out
+
+
+def main(fast: bool = True):
+    res = run(n=2000 if fast else 10_000, cycles=20 if fast else 60)
+    rows = []
+    for name, r in res.items():
+        us = 1e6 * r["times"][-1] / max(len(r["accs"]), 1)
+        rows.append((
+            f"fig6_{name}", us,
+            f"acc={r['accs'][-1]:.3f}_meanNk={r['mean_evaluated']:.0f}"
+            f"_clusters={r['clusters']}_t={r['times'][-1]:.1f}s",
+        ))
+    return rows, res
+
+
+if __name__ == "__main__":
+    for name, us, derived in main()[0]:
+        print(f"{name},{us:.1f},{derived}")

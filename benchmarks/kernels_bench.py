@@ -1,0 +1,59 @@
+"""Kernel benchmarks: fused-CE traffic model + wall time of the jnp paths.
+
+On this CPU container the Pallas kernels run in interpret mode (not
+representative of TPU latency), so we report (a) wall time of the pure-jnp
+reference (the CPU-executable path), and (b) the derived HBM-traffic ratio
+naive/fused — the quantity the kernel actually optimizes on TPU.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import fused_ce_ref, logit_delta_ref
+
+
+def _time(f, *args, n=5):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def main(fast: bool = True):
+    rows = []
+    cases = [(512, 512, 32_000), (512, 1024, 152_064)] if fast else [
+        (512, 512, 32_000), (1024, 1024, 152_064), (2048, 1024, 262_144)]
+    for t, d, v in cases:
+        h = jax.random.normal(jax.random.key(0), (t, d), jnp.bfloat16)
+        tab = jax.random.normal(jax.random.key(1), (v, d), jnp.bfloat16)
+        tgt = jax.random.randint(jax.random.key(2), (t,), 0, v)
+        f = jax.jit(fused_ce_ref)
+        us = _time(f, h, tab, tgt) * 1e6
+        naive_bytes = t * v * 4 + t * d * 2 + v * d * 2  # logits materialized
+        fused_bytes = t * d * 2 + v * d * 2 + t * 4  # streamed tiles
+        rows.append((
+            f"kernel_ce_T{t}_V{v}", us,
+            f"traffic_ratio_naive/fused={naive_bytes / fused_bytes:.1f}x",
+        ))
+    for n, d in [(12214, 50), (100_000, 50)]:
+        x = jax.random.normal(jax.random.key(0), (n, d))
+        y = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (n,)), 1.0, -1.0)
+        w1 = jax.random.normal(jax.random.key(2), (d,))
+        w2 = jax.random.normal(jax.random.key(3), (d,))
+        f = jax.jit(logit_delta_ref)
+        us = _time(f, x, y, w1, w2) * 1e6
+        # pair-fused kernel reads x once instead of twice
+        rows.append((f"kernel_logitdelta_N{n}", us, "x_reads_fused=2->1"))
+    return rows, None
+
+
+if __name__ == "__main__":
+    for name, us, derived in main()[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,10 @@
+"""repro: sublinear-time approximate MCMC transitions for probabilistic
+programs — faithful reproduction + multi-pod JAX framework.
+
+Subpackages: core (the paper's algorithm), ppl (PET scaffolds), experiments
+(the paper's three applications), inference (particle Gibbs, NIW, kernel
+combinators), models (10-arch LM zoo), bayes (LM-scale transition operator),
+kernels (Pallas), distributed / data / optim / checkpoint / runtime
+(substrates), configs, launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,18 @@
+"""Bayesian LM bridge: the paper's transition operator at architecture scale."""
+from .train import (
+    LMTrainInfo,
+    LogLikCache,
+    TrainConfig,
+    make_cached_train_step,
+    make_exact_step,
+    make_train_step,
+)
+
+__all__ = [
+    "LMTrainInfo",
+    "LogLikCache",
+    "TrainConfig",
+    "make_cached_train_step",
+    "make_exact_step",
+    "make_train_step",
+]

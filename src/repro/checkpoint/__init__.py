@@ -1,0 +1,4 @@
+"""Atomic, resharding-on-restore checkpointing."""
+from . import manager
+
+__all__ = ["manager"]

@@ -1,0 +1,80 @@
+"""Core: sublinear-time approximate MH transitions on partitioned scaffolds.
+
+The paper's primary contribution as a composable JAX module:
+
+  - ``PartitionedTarget``: the tensorized global/local scaffold partition,
+  - ``sequential_test``: Alg. 2 (sequential Student-t accept test),
+  - ``subsampled_mh_step`` / ``make_kernel``: Alg. 3,
+  - ``mh_step``: the exact O(N) baseline (Alg. 1),
+  - samplers: O(m)-per-round without-replacement draws,
+  - ``run_chain`` drivers and Sec-3.3 safeguard diagnostics.
+"""
+from .chain import acceptance_rate, run_chain, run_chain_timed
+from .mh import MHInfo, mh_step
+from .proposals import MALA, IndependentGaussian, RandomWalk
+from .samplers import (
+    FisherYatesState,
+    StreamSliceState,
+    fy_draw,
+    fy_from_buffer,
+    fy_init,
+    fy_reset,
+    make_sampler,
+    stream_draw,
+    stream_init,
+    stream_reset,
+)
+from .safeguard import TrialReport, trial_run_report
+from .sequential_test import SeqTestResult, expected_batches_theoretical, sequential_test
+from .stats import (
+    Welford,
+    autocorrelation,
+    effective_sample_size,
+    finite_population_std_err,
+    jarque_bera,
+    predictive_risk,
+    student_t_sf,
+    two_sided_t_pvalue,
+)
+from .subsampled_mh import SubsampledMHConfig, SubsampledMHInfo, make_kernel, subsampled_mh_step
+from .target import PartitionedTarget, from_iid_loglik
+
+__all__ = [
+    "MALA",
+    "FisherYatesState",
+    "IndependentGaussian",
+    "MHInfo",
+    "PartitionedTarget",
+    "RandomWalk",
+    "SeqTestResult",
+    "StreamSliceState",
+    "SubsampledMHConfig",
+    "SubsampledMHInfo",
+    "TrialReport",
+    "Welford",
+    "acceptance_rate",
+    "autocorrelation",
+    "effective_sample_size",
+    "expected_batches_theoretical",
+    "finite_population_std_err",
+    "from_iid_loglik",
+    "fy_draw",
+    "fy_from_buffer",
+    "fy_init",
+    "fy_reset",
+    "jarque_bera",
+    "make_kernel",
+    "make_sampler",
+    "mh_step",
+    "predictive_risk",
+    "run_chain",
+    "run_chain_timed",
+    "sequential_test",
+    "stream_draw",
+    "stream_init",
+    "stream_reset",
+    "student_t_sf",
+    "subsampled_mh_step",
+    "trial_run_report",
+    "two_sided_t_pvalue",
+]

@@ -1,0 +1,118 @@
+"""Chain drivers: jitted scan loops and timed host loops for benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .mh import mh_step
+from .subsampled_mh import SubsampledMHConfig, make_kernel
+from .target import PartitionedTarget
+
+Params = Any
+
+
+def run_chain(
+    key: jax.Array,
+    theta0: Params,
+    target: PartitionedTarget,
+    proposal,
+    num_steps: int,
+    kernel: str = "subsampled",
+    config: SubsampledMHConfig | None = None,
+    collect: Callable[[Params], Any] | None = None,
+    chunk_size: int | None = None,
+):
+    """Run ``num_steps`` transitions inside one jitted lax.scan.
+
+    Returns (theta_final, collected_samples, infos) with leaves stacked on a
+    leading time axis. ``collect`` maps theta -> whatever should be recorded
+    per step (defaults to theta itself — fine for small parameter trees).
+    """
+    collect = collect or (lambda t: t)
+    config = config or SubsampledMHConfig()
+
+    if kernel == "subsampled":
+        sampler0, step = make_kernel(target, proposal, config)
+
+        def scan_body(carry, k):
+            theta, sstate = carry
+            theta, sstate, info = step(k, theta, sstate)
+            return (theta, sstate), (collect(theta), info)
+
+        keys = jax.random.split(key, num_steps)
+        (theta, _), (samples, infos) = jax.lax.scan(scan_body, (theta0, sampler0), keys)
+        return theta, samples, infos
+
+    if kernel == "exact":
+
+        def scan_body(theta, k):
+            theta, info = mh_step(k, theta, target, proposal, chunk_size=chunk_size)
+            return theta, (collect(theta), info)
+
+        keys = jax.random.split(key, num_steps)
+        theta, (samples, infos) = jax.lax.scan(scan_body, theta0, keys)
+        return theta, samples, infos
+
+    raise ValueError(f"unknown kernel {kernel!r}")
+
+
+def run_chain_timed(
+    key: jax.Array,
+    theta0: Params,
+    target: PartitionedTarget,
+    proposal,
+    num_steps: int,
+    kernel: str = "subsampled",
+    config: SubsampledMHConfig | None = None,
+    collect: Callable[[Params], Any] | None = None,
+    callback: Callable[[int, float, Any, Any], None] | None = None,
+    chunk_size: int | None = None,
+):
+    """Host-driven loop recording wall-clock per transition (for the
+    risk-vs-time figures). One jitted step function, python loop around it.
+
+    Returns dict with samples (list), infos (list of dicts), times (np array
+    of cumulative seconds).
+    """
+    collect = collect or (lambda t: t)
+    config = config or SubsampledMHConfig()
+
+    if kernel == "subsampled":
+        sampler0, raw_step = make_kernel(target, proposal, config)
+        step = jax.jit(raw_step)
+        state = sampler0
+    else:
+        step = jax.jit(
+            lambda k, t: mh_step(k, t, target, proposal, chunk_size=chunk_size)
+        )
+        state = None
+
+    theta = theta0
+    samples, infos, times = [], [], []
+    t_start = None
+    for i in range(num_steps):
+        key, sub = jax.random.split(key)
+        if kernel == "subsampled":
+            theta, state, info = step(sub, theta, state)
+        else:
+            theta, info = step(sub, theta)
+        jax.block_until_ready(theta)
+        if t_start is None:  # exclude compile time from the clock
+            t_start = time.perf_counter()
+            times.append(0.0)
+        else:
+            times.append(time.perf_counter() - t_start)
+        samples.append(jax.device_get(collect(theta)))
+        infos.append({k: np.asarray(v) for k, v in info._asdict().items()})
+        if callback is not None:
+            callback(i, times[-1], samples[-1], infos[-1])
+    return {"samples": samples, "infos": infos, "times": np.asarray(times)}
+
+
+def acceptance_rate(infos) -> float:
+    acc = np.asarray(infos.accepted if hasattr(infos, "accepted") else [i["accepted"] for i in infos])
+    return float(np.mean(acc))

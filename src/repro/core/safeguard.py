@@ -1,0 +1,113 @@
+"""Sec. 3.3 safeguard: normality diagnostics + auto exact-vs-subsampled report.
+
+"Our software can provide a normality test for the distribution of the
+estimated mean in trial runs and produce an auto-generated comparison between
+the performance of the approximate MH and regular inference."
+
+The t-test in Alg. 2 assumes mini-batch means of {l_i} are near-normal; heavy
+tails (the Bardenet et al. counterexample) break the CLT on small subsets.
+``trial_run_report`` runs a few transitions, collects the population {l_i} at
+each proposal, tests normality of mini-batch means (Jarque–Bera), and replays
+the SAME (u, theta, theta') decisions through both the exact rule and the
+sequential test to report the empirical decision-error rate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .samplers import fy_draw, fy_init, fy_reset
+from .sequential_test import sequential_test
+from .stats import jarque_bera
+from .target import PartitionedTarget
+
+
+@dataclasses.dataclass
+class TrialReport:
+    num_trials: int
+    jb_stat_mean: float
+    jb_pvalue_min: float
+    normal_ok: bool
+    decision_error_rate: float
+    mean_fraction_evaluated: float
+    recommendation: str
+
+    def __str__(self) -> str:  # pragma: no cover - formatting
+        lines = [
+            "Sec 3.3 safeguard report",
+            f"  trials                      : {self.num_trials}",
+            f"  Jarque-Bera stat (mean)     : {self.jb_stat_mean:.3f}",
+            f"  Jarque-Bera p-value (min)   : {self.jb_pvalue_min:.4f}",
+            f"  batch-mean normality OK     : {self.normal_ok}",
+            f"  exact-vs-subsampled errors  : {self.decision_error_rate:.3%}",
+            f"  mean fraction of N evaluated: {self.mean_fraction_evaluated:.3%}",
+            f"  recommendation              : {self.recommendation}",
+        ]
+        return "\n".join(lines)
+
+
+def trial_run_report(
+    key: jax.Array,
+    theta0,
+    target: PartitionedTarget,
+    proposal,
+    batch_size: int = 100,
+    epsilon: float = 0.01,
+    num_trials: int = 20,
+) -> TrialReport:
+    n = target.num_sections
+    idx_all = jnp.arange(n, dtype=jnp.int32)
+    theta = theta0
+    jb_stats, jb_ps, errors, fractions = [], [], [], []
+    for _ in range(num_trials):
+        key, k_u, k_prop, k_test = jax.random.split(key, 4)
+        log_u = float(jnp.log(jax.random.uniform(k_u, (), jnp.float32, 1e-20, 1.0)))
+        theta_p, corr = proposal(k_prop, theta)
+        g = float(target.log_global(theta, theta_p) + corr)
+        l = np.asarray(target.log_local(theta, theta_p, idx_all))
+        mu0 = (log_u - g) / n
+        exact_accept = l.mean() > mu0
+
+        # normality of mini-batch means
+        nb = max(len(l) // batch_size, 1)
+        means = np.array([c.mean() for c in np.array_split(l, nb)]) if nb > 1 else l
+        jb, p = jarque_bera(means)
+        jb_stats.append(jb)
+        jb_ps.append(p)
+
+        res = sequential_test(
+            key=k_test,
+            mu0=jnp.asarray(mu0, jnp.float32),
+            draw_fn=fy_draw,
+            eval_fn=lambda i: target.log_local(theta, theta_p, i),
+            sampler_state=fy_reset(fy_init(n)),
+            num_sections=n,
+            batch_size=batch_size,
+            epsilon=epsilon,
+        )
+        errors.append(bool(res.decision) != bool(exact_accept))
+        fractions.append(float(res.n_evaluated) / n)
+
+        if exact_accept:  # advance chain with the exact decision (trial run)
+            theta = theta_p
+
+    normal_ok = min(jb_ps) > 0.01
+    err = float(np.mean(errors))
+    rec = (
+        "subsampled MH looks safe at this epsilon/batch size"
+        if normal_ok and err <= max(2.0 * epsilon, 0.1)
+        else "heavy-tailed l_i or high decision-error rate: increase batch size, "
+        "lower epsilon, or fall back to exact MH for this variable"
+    )
+    return TrialReport(
+        num_trials=num_trials,
+        jb_stat_mean=float(np.mean(jb_stats)),
+        jb_pvalue_min=float(min(jb_ps)),
+        normal_ok=normal_ok,
+        decision_error_rate=err,
+        mean_fraction_evaluated=float(np.mean(fractions)),
+        recommendation=rec,
+    )

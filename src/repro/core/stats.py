@@ -1,0 +1,152 @@
+"""Statistical primitives for the sequential MH test and chain diagnostics.
+
+Everything here is jit-safe (pure jnp) unless noted. The Student-t survival
+function is computed exactly through the regularized incomplete beta function,
+matching ``scipy.stats.t.sf`` to f32 precision.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def student_t_sf(t: jax.Array, df: jax.Array) -> jax.Array:
+    """P(T > t) for T ~ Student-t(df), t >= 0.
+
+    Uses sf(t) = 0.5 * I_{df/(df+t^2)}(df/2, 1/2) for t >= 0.
+    """
+    t = jnp.asarray(t, jnp.float32)
+    df = jnp.asarray(df, jnp.float32)
+    x = df / (df + t * t)
+    return 0.5 * jax.scipy.special.betainc(df / 2.0, 0.5, x)
+
+
+def two_sided_t_pvalue(tstat: jax.Array, df: jax.Array) -> jax.Array:
+    """Two-sided p-value of |tstat| under Student-t(df)."""
+    return 2.0 * student_t_sf(jnp.abs(tstat), df)
+
+
+class Welford(NamedTuple):
+    """Streaming mean/variance accumulator (Chan's parallel merge form).
+
+    ``count`` is carried as f32 so the whole state lives on device; all
+    experiments keep n <= 2**24 where f32 counting is exact.
+    """
+
+    count: jax.Array  # n
+    mean: jax.Array  # running mean
+    m2: jax.Array  # sum of squared deviations
+
+    @staticmethod
+    def empty(dtype=jnp.float32) -> "Welford":
+        z = jnp.zeros((), dtype)
+        return Welford(z, z, z)
+
+    def merge_batch(self, values: jax.Array, mask: jax.Array | None = None) -> "Welford":
+        """Merge a batch of observations. ``mask`` selects valid entries."""
+        values = values.astype(self.mean.dtype)
+        if mask is None:
+            nb = jnp.asarray(values.size, self.count.dtype)
+            mb = jnp.mean(values)
+            m2b = jnp.sum((values - mb) ** 2)
+        else:
+            mask = mask.astype(values.dtype)
+            nb = jnp.sum(mask)
+            safe_nb = jnp.maximum(nb, 1.0)
+            mb = jnp.sum(values * mask) / safe_nb
+            m2b = jnp.sum(mask * (values - mb) ** 2)
+        na = self.count
+        n = na + nb
+        delta = mb - self.mean
+        safe_n = jnp.maximum(n, 1.0)
+        mean = self.mean + delta * nb / safe_n
+        m2 = self.m2 + m2b + delta * delta * na * nb / safe_n
+        # If the batch was empty, keep previous stats untouched.
+        keep = nb > 0
+        return Welford(
+            jnp.where(keep, n, na),
+            jnp.where(keep, mean, self.mean),
+            jnp.where(keep, m2, self.m2),
+        )
+
+    @property
+    def std(self) -> jax.Array:
+        """Sample standard deviation (ddof=1)."""
+        return jnp.sqrt(self.m2 / jnp.maximum(self.count - 1.0, 1.0))
+
+
+def finite_population_std_err(welford: Welford, population: jax.Array) -> jax.Array:
+    """Std of the running mean with the without-replacement correction.
+
+    s = s_l / sqrt(n) * sqrt(1 - (n-1)/(N-1))   (Alg. 2, step 7)
+    """
+    n = welford.count
+    big_n = jnp.asarray(population, jnp.float32)
+    corr = jnp.clip(1.0 - (n - 1.0) / jnp.maximum(big_n - 1.0, 1.0), 0.0, 1.0)
+    return welford.std / jnp.sqrt(jnp.maximum(n, 1.0)) * jnp.sqrt(corr)
+
+
+# ---------------------------------------------------------------------------
+# Chain diagnostics (host-side numpy; not jitted).
+# ---------------------------------------------------------------------------
+
+
+def autocorrelation(x: np.ndarray, max_lag: int | None = None) -> np.ndarray:
+    """Normalized autocorrelation of a 1-d chain via FFT."""
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    if max_lag is None:
+        max_lag = n - 1
+    x = x - x.mean()
+    nfft = int(2 ** np.ceil(np.log2(2 * n)))
+    f = np.fft.rfft(x, nfft)
+    acov = np.fft.irfft(f * np.conj(f), nfft)[: max_lag + 1].real / n
+    if acov[0] <= 0:
+        return np.zeros(max_lag + 1)
+    return acov / acov[0]
+
+
+def effective_sample_size(x: np.ndarray) -> float:
+    """ESS via Geyer's initial positive sequence estimator."""
+    n = len(x)
+    if n < 4:
+        return float(n)
+    rho = autocorrelation(x)
+    # Sum consecutive pairs; truncate at first negative pair (Geyer 1992).
+    tau = 1.0
+    for k in range(1, (len(rho) - 1) // 2):
+        pair = rho[2 * k - 1] + rho[2 * k]
+        if pair < 0:
+            break
+        tau += 2.0 * pair
+    return float(n / max(tau, 1e-12))
+
+
+def predictive_risk(estimates: np.ndarray, truth: float) -> float:
+    """Risk of the running predictive mean, as in Korattikara et al. (2014):
+    E[(f_bar_T - truth)^2] estimated from one (or more) chains."""
+    estimates = np.atleast_2d(np.asarray(estimates, np.float64))
+    return float(np.mean((estimates - truth) ** 2))
+
+
+def jarque_bera(x: np.ndarray) -> tuple[float, float]:
+    """Jarque–Bera normality statistic and asymptotic chi2(2) p-value.
+
+    Used by the Sec. 3.3 safeguard: the sequential t-test assumes the
+    mini-batch means are approximately normal; heavy-tailed {l_i} break it.
+    """
+    x = np.asarray(x, np.float64)
+    n = len(x)
+    mu = x.mean()
+    s = x.std()
+    if s == 0 or n < 8:
+        return 0.0, 1.0
+    z = (x - mu) / s
+    skew = np.mean(z**3)
+    kurt = np.mean(z**4) - 3.0
+    jb = n / 6.0 * (skew**2 + kurt**2 / 4.0)
+    # chi2(2) survival = exp(-jb/2)
+    return float(jb), float(np.exp(-jb / 2.0))

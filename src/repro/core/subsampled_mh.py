@@ -1,0 +1,114 @@
+"""Alg. 3: the sublinear-time subsampled MH transition.
+
+Interleaves scaffold-section materialization with the sequential test: local
+sections are only evaluated when the test asks for another mini-batch, so the
+per-transition cost is O(m * rounds) with rounds determined adaptively by the
+test — sublinear in N whenever the decision is statistically easy.
+
+The kernel is fully jittable (while_loop + cond) and SPMD-friendly: with
+sections sharded over the data mesh axes, each round's evaluation is data
+parallel and the test statistics reduce with a scalar psum (see bayes/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .samplers import make_sampler
+from .sequential_test import sequential_test
+from .target import PartitionedTarget
+
+Params = Any
+
+
+class SubsampledMHInfo(NamedTuple):
+    accepted: jax.Array  # bool
+    n_evaluated: jax.Array  # int32: sections actually evaluated
+    rounds: jax.Array  # int32: mini-batches drawn
+    mu_hat: jax.Array  # f32
+    mu0: jax.Array  # f32
+    pvalue: jax.Array  # f32
+    log_u: jax.Array  # f32
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsampledMHConfig:
+    batch_size: int = 100  # m: mini-batch of local sections per round
+    epsilon: float = 0.01  # tolerance of the sequential test
+    max_rounds: int | None = None  # default ceil(N/m): exhaust the pool
+    sampler: str = "fy"  # "fy" (Fisher–Yates) | "stream" (pre-permuted pool)
+
+
+def _tree_select(pred: jax.Array, on_true: Params, on_false: Params) -> Params:
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def subsampled_mh_step(
+    key: jax.Array,
+    theta: Params,
+    sampler_state,
+    target: PartitionedTarget,
+    proposal,
+    config: SubsampledMHConfig,
+    reset_fn,
+    draw_fn,
+) -> tuple[Params, Any, SubsampledMHInfo]:
+    """One approximate MH transition (Alg. 3). Returns (theta', sampler', info).
+
+    Steps map to the paper: 2 sample u; 3–4 construct+evaluate the global
+    section; 6 compute mu0; 7–14 sequential test with lazily-materialized
+    local sections; 15–19 accept or restore.
+    """
+    k_u, k_prop, k_test = jax.random.split(key, 3)
+    log_u = jnp.log(jax.random.uniform(k_u, (), jnp.float32, 1e-20, 1.0))
+    theta_p, corr = proposal(k_prop, theta)
+    n = target.num_sections
+    g = target.log_global(theta, theta_p) + corr  # Detach&Regen(global)
+    mu0 = (log_u - g) / n
+
+    res = sequential_test(
+        key=k_test,
+        mu0=mu0,
+        draw_fn=draw_fn,
+        eval_fn=lambda idx: target.log_local(theta, theta_p, idx),
+        sampler_state=reset_fn(sampler_state),
+        num_sections=n,
+        batch_size=config.batch_size,
+        epsilon=config.epsilon,
+        max_rounds=config.max_rounds,
+    )
+    accept = res.decision
+    theta_new = _tree_select(accept, theta_p, theta)
+    info = SubsampledMHInfo(
+        accepted=accept,
+        n_evaluated=res.n_evaluated,
+        rounds=res.rounds,
+        mu_hat=res.mu_hat,
+        mu0=mu0,
+        pvalue=res.pvalue,
+        log_u=log_u,
+    )
+    return theta_new, res.sampler_state, info
+
+
+def make_kernel(
+    target: PartitionedTarget,
+    proposal,
+    config: SubsampledMHConfig | None = None,
+):
+    """Bundle a jit-ready (init_state, step) pair.
+
+    step(key, theta, sampler_state) -> (theta', sampler_state', info)
+    """
+    config = config or SubsampledMHConfig()
+    state0, reset_fn, draw_fn = make_sampler(config.sampler, target.num_sections)
+
+    def step(key, theta, sampler_state):
+        return subsampled_mh_step(
+            key, theta, sampler_state, target, proposal, config, reset_fn, draw_fn
+        )
+
+    return state0, step

@@ -1,0 +1,4 @@
+"""Data pipelines: deterministic shardable synthetic streams."""
+from .pipeline import DataConfig, MarkovStream, TokenStream, shard_batch
+
+__all__ = ["DataConfig", "MarkovStream", "TokenStream", "shard_batch"]

@@ -1,0 +1,20 @@
+"""Distribution: mesh construction, logical-axis sharding, collective accounting."""
+from .sharding import (
+    DEFAULT_RULES,
+    count_bytes,
+    lc,
+    logical_axis_rules,
+    named_sharding,
+    resolve_spec,
+    tree_shardings,
+)
+
+__all__ = [
+    "DEFAULT_RULES",
+    "count_bytes",
+    "lc",
+    "logical_axis_rules",
+    "named_sharding",
+    "resolve_spec",
+    "tree_shardings",
+]

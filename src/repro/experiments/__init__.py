@@ -1,0 +1,4 @@
+"""The paper's three applications (Sec. 4) as reusable modules."""
+from . import bayeslr, jointdpm, stochvol
+
+__all__ = ["bayeslr", "jointdpm", "stochvol"]

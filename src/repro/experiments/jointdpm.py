@@ -1,0 +1,269 @@
+"""Joint Dirichlet-process mixture of logistic experts (paper Sec. 4.2).
+
+    (x_i, y_i) | P ~ f(x, y | P),   P ~ DP(alpha P0)
+    f(x, y | P) = sum_k pi_k N(x | mu_k, Sigma_k) Logit(y | x, w_k)
+
+(mu_k, Sigma_k) are collapsed under a conjugate NIW prior; the DP is
+collapsed to a CRP. Inference mirrors the paper's program:
+
+    [infer (cycle ((mh alpha all 1)
+                   (gibbs z one step_z)
+                   (subsampled_mh w one {Nbatch} {eps} 'drift {sigma} 1)) 1)]
+
+ - z: single-site Gibbs via Neal's Algorithm 8 (one auxiliary component),
+   O(1)-updatable NIW sufficient statistics (constant-time PET transitions),
+ - alpha: random-walk MH on log(alpha) against the CRP partition likelihood,
+ - w_k: **subsampled MH** over a randomly chosen expert's weights — local
+   sections are the N_k member points, so the number of concurrently active
+   austerity instances is itself inferred (Table 1 row 2: scaling N_k).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.samplers import fy_draw, fy_from_buffer, fy_reset
+from ..core.sequential_test import sequential_test
+from ..core.target import PartitionedTarget
+from ..inference.niw import ClusterStats, NIWPrior, predictive_all_clusters
+from .bayeslr import loglik as logit_loglik
+
+
+@dataclasses.dataclass(frozen=True)
+class JDPMConfig:
+    k_max: int = 20
+    d: int = 2
+    prior_var_w: float = 1.0
+    alpha_a: float = 1.0  # Gamma(a, rate) prior on alpha
+    alpha_rate: float = 1.0
+    niw_k0: float = 0.1
+    niw_v0: float = 4.0
+    niw_s0_scale: float = 1.0
+
+    def niw_prior(self) -> NIWPrior:
+        return NIWPrior(
+            m0=jnp.zeros((self.d,), jnp.float32),
+            k0=self.niw_k0,
+            v0=self.niw_v0,
+            s0=self.niw_s0_scale * jnp.eye(self.d, dtype=jnp.float32),
+        )
+
+
+class JDPMState(NamedTuple):
+    z: jax.Array  # (N,) int32 assignments
+    w: jax.Array  # (K_max, D+1) expert weights (last column = bias)
+    alpha: jax.Array  # scalar CRP concentration
+    stats: ClusterStats  # NIW sufficient statistics per cluster
+
+
+class JDPMData(NamedTuple):
+    x: jax.Array  # (N, D)
+    y: jax.Array  # (N,) in {-1, +1}
+    x_test: jax.Array
+    y_test: jax.Array
+
+
+def synth(key: jax.Array, n: int = 10_000, n_test: int = 1_000) -> JDPMData:
+    """Paper-Fig-6b-style synthetic: several anisotropic blobs, each with its
+    own linear label boundary (so no single global logistic fits)."""
+    centers = jnp.asarray([[-2.5, 0.0], [2.5, 0.0], [0.0, 2.5], [0.0, -2.5]])
+    w_per = jnp.asarray([[2.0, 1.0], [-2.0, 1.0], [1.0, -2.0], [-1.0, -2.0]])
+    k1, k2, k3 = jax.random.split(key, 3)
+    total = n + n_test
+    comp = jax.random.randint(k1, (total,), 0, 4)
+    xs = centers[comp] + 0.7 * jax.random.normal(k2, (total, 2))
+    logits = jnp.sum((xs - centers[comp]) * w_per[comp], axis=-1)
+    ys = jnp.where(jax.random.uniform(k3, (total,)) < jax.nn.sigmoid(2.0 * logits), 1.0, -1.0)
+    return JDPMData(xs[:n], ys[:n], xs[n:], ys[n:])
+
+
+def init_state(key: jax.Array, data: JDPMData, cfg: JDPMConfig) -> JDPMState:
+    n = data.x.shape[0]
+    k1, k2 = jax.random.split(key)
+    z = jax.random.randint(k1, (n,), 0, 3).astype(jnp.int32)  # start with 3 clusters
+    w = jnp.sqrt(cfg.prior_var_w) * jax.random.normal(k2, (cfg.k_max, cfg.d + 1))
+    stats = ClusterStats.empty(cfg.k_max, cfg.d)
+
+    def add(i, s):
+        return s.add(z[i], data.x[i])
+
+    stats = jax.lax.fori_loop(0, n, add, stats)
+    return JDPMState(z=z, w=w, alpha=jnp.asarray(1.0), stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Gibbs over assignments (Neal Algorithm 8, one auxiliary component)
+# ---------------------------------------------------------------------------
+
+
+def gibbs_z_steps(
+    key: jax.Array, state: JDPMState, data: JDPMData, cfg: JDPMConfig, points: jax.Array
+) -> JDPMState:
+    """Single-site Gibbs transitions for the given point indices (jitted)."""
+    prior = cfg.niw_prior()
+    x, y = data.x, data.y
+    keys = jax.random.split(key, points.shape[0])
+
+    def one_point(t, carry):
+        z, w, stats = carry
+        i = points[t]
+        xi, yi = x[i], y[i]
+        stats = stats.remove(z[i], xi)
+        counts = stats.n
+        # auxiliary slot: first empty cluster gets a fresh prior draw of w
+        empty = counts < 0.5
+        aux = jnp.argmax(empty)  # first empty slot (there is always one: K_max > K)
+        k_aux, k_pick = jax.random.split(keys[t])
+        w_aux = jnp.sqrt(cfg.prior_var_w) * jax.random.normal(k_aux, (cfg.d + 1,))
+        w_eff = w.at[aux].set(w_aux)
+        feat = predictive_all_clusters(xi, stats, prior)  # (K,)
+        xi_aug = jnp.concatenate([xi, jnp.ones((1,), xi.dtype)])
+        lab = -jnp.logaddexp(0.0, -yi * (w_eff @ xi_aug))  # (K,)
+        crp = jnp.where(
+            counts > 0.5,
+            jnp.log(jnp.maximum(counts, 1e-12)),
+            jnp.where(jnp.arange(cfg.k_max) == aux, jnp.log(state.alpha), -jnp.inf),
+        )
+        logp = crp + feat + lab
+        k_new = jax.random.categorical(k_pick, logp).astype(jnp.int32)
+        z = z.at[i].set(k_new)
+        w = jnp.where(k_new == aux, w_eff, w)  # keep the fresh draw if chosen
+        stats = stats.add(k_new, xi)
+        return z, w, stats
+
+    z, w, stats = jax.lax.fori_loop(0, points.shape[0], one_point, (state.z, state.w, state.stats))
+    return JDPMState(z=z, w=w, alpha=state.alpha, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# MH over alpha (CRP partition likelihood)
+# ---------------------------------------------------------------------------
+
+
+def _crp_log_partition(alpha, counts):
+    k_active = jnp.sum(counts > 0.5)
+    n = jnp.sum(counts)
+    return (
+        k_active * jnp.log(alpha)
+        + jax.lax.lgamma(alpha)
+        - jax.lax.lgamma(alpha + n)
+    )
+
+
+def mh_alpha(key: jax.Array, state: JDPMState, cfg: JDPMConfig, step: float = 0.3) -> JDPMState:
+    k1, k2 = jax.random.split(key)
+    log_a = jnp.log(state.alpha)
+    log_a_p = log_a + step * jax.random.normal(k1, ())
+    a, a_p = state.alpha, jnp.exp(log_a_p)
+
+    def post(alpha, log_alpha):
+        prior = cfg.alpha_a * jnp.log(cfg.alpha_rate) + (cfg.alpha_a - 1) * log_alpha - cfg.alpha_rate * alpha
+        return prior + _crp_log_partition(alpha, state.stats.n) + log_alpha  # + Jacobian
+
+    log_ratio = post(a_p, log_a_p) - post(a, log_a)
+    accept = jnp.log(jax.random.uniform(k2, (), minval=1e-20)) < log_ratio
+    return state._replace(alpha=jnp.where(accept, a_p, a))
+
+
+# ---------------------------------------------------------------------------
+# Subsampled MH over a randomly chosen expert's weights
+# ---------------------------------------------------------------------------
+
+
+class WMoveInfo(NamedTuple):
+    cluster: jax.Array
+    accepted: jax.Array
+    n_evaluated: jax.Array
+    n_k: jax.Array
+    rounds: jax.Array
+
+
+def subsampled_mh_w(
+    key: jax.Array,
+    state: JDPMState,
+    data: JDPMData,
+    cfg: JDPMConfig,
+    batch_size: int = 100,
+    epsilon: float = 0.1,
+    sigma_prop: float = 0.1,
+    exact: bool = False,
+) -> tuple[JDPMState, WMoveInfo]:
+    """One (subsampled) MH transition on w_k for a random non-empty cluster.
+
+    The local-section pool is the cluster's padded member buffer with logical
+    size N_k — a *dynamic* pool (the paper's point that the number of
+    austerity instances is an object of inference). Fully jitted.
+    """
+    n = data.x.shape[0]
+    k_pick, k_u, k_prop, k_test = jax.random.split(key, 4)
+    counts = state.stats.n
+    pick_logits = jnp.where(counts > 0.5, 0.0, -jnp.inf)
+    k_sel = jax.random.categorical(k_pick, pick_logits).astype(jnp.int32)
+    n_k = counts[k_sel].astype(jnp.int32)
+
+    members = jnp.argsort(jnp.where(state.z == k_sel, 0, 1), stable=True).astype(jnp.int32)
+    # members[:N_k] are the cluster's points (stable sort keeps data order)
+
+    w_cur = state.w[k_sel]
+    w_prop = w_cur + sigma_prop * jax.random.normal(k_prop, w_cur.shape)
+    log_u = jnp.log(jax.random.uniform(k_u, (), jnp.float32, 1e-20, 1.0))
+    g = (-0.5 / cfg.prior_var_w) * (jnp.sum(w_prop**2) - jnp.sum(w_cur**2))
+    mu0 = (log_u - g) / jnp.maximum(n_k, 1)
+
+    def eval_fn(pos_idx):
+        i = members[pos_idx]
+        xi = jnp.concatenate([data.x[i], jnp.ones((pos_idx.shape[0], 1), data.x.dtype)], axis=-1)
+        yi = data.y[i]
+        return logit_loglik(w_prop, xi, yi) - logit_loglik(w_cur, xi, yi)
+
+    res = sequential_test(
+        key=k_test,
+        mu0=mu0,
+        draw_fn=fy_draw,
+        eval_fn=eval_fn,
+        sampler_state=fy_reset(fy_from_buffer(jnp.arange(n, dtype=jnp.int32), n_k)),
+        num_sections=n_k,
+        batch_size=batch_size,
+        epsilon=epsilon if not exact else 0.0,  # eps=0 -> never stop early (exact)
+        max_rounds=-(-n // batch_size),
+    )
+    accept = res.decision
+    w_new = state.w.at[k_sel].set(jnp.where(accept, w_prop, w_cur))
+    info = WMoveInfo(
+        cluster=k_sel,
+        accepted=accept,
+        n_evaluated=res.n_evaluated,
+        n_k=n_k,
+        rounds=res.rounds,
+    )
+    return state._replace(w=w_new), info
+
+
+# ---------------------------------------------------------------------------
+# Posterior predictive classification
+# ---------------------------------------------------------------------------
+
+
+def predict_proba(state: JDPMState, x_test: jax.Array, cfg: JDPMConfig) -> jax.Array:
+    """p(y=+1 | x*) under one posterior sample: mixture-weighted experts."""
+    prior = cfg.niw_prior()
+    counts = state.stats.n
+
+    def one(xs):
+        feat = predictive_all_clusters(xs, state.stats, prior)
+        logw = jnp.where(counts > 0.5, jnp.log(jnp.maximum(counts, 1e-12)) + feat, -jnp.inf)
+        resp = jax.nn.softmax(logw)
+        xs_aug = jnp.concatenate([xs, jnp.ones((1,), xs.dtype)])
+        p_k = jax.nn.sigmoid(state.w @ xs_aug)
+        return jnp.sum(resp * p_k)
+
+    return jax.vmap(one)(x_test)
+
+
+def accuracy(prob: np.ndarray, y_test: np.ndarray) -> float:
+    pred = np.where(np.asarray(prob) > 0.5, 1.0, -1.0)
+    return float(np.mean(pred == np.asarray(y_test)))

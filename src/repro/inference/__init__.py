@@ -1,0 +1,18 @@
+"""Inference substrate: SMC/particle Gibbs, collapsed NIW, kernel combinators."""
+from .kernels import Cycle, Mixture, Repeat, run_inference
+from .niw import ClusterStats, NIWPrior, posterior_predictive_logpdf, predictive_all_clusters
+from .smc import SMCResult, csmc, particle_filter
+
+__all__ = [
+    "ClusterStats",
+    "Cycle",
+    "Mixture",
+    "NIWPrior",
+    "Repeat",
+    "SMCResult",
+    "csmc",
+    "particle_filter",
+    "posterior_predictive_logpdf",
+    "predictive_all_clusters",
+    "run_inference",
+]

@@ -1,0 +1,93 @@
+"""A miniature inference programming language (the paper's `[infer ...]`).
+
+Inference programs are composable transition kernels over a shared state
+dict. This mirrors the paper's Venture inference expressions, e.g.
+
+    [infer (cycle ((mh alpha all 1)
+                   (gibbs z one step_z)
+                   (subsampled_mh w one {Nbatch} {eps} 'drift {sigma} 1)) 1)]
+
+becomes
+
+    Cycle([MHKernel("alpha", ...),
+           GibbsKernel("z", sweeps=step_z),
+           SubsampledMHKernel("w", batch=Nbatch, eps=eps,
+                              proposal=RandomWalk(sigma))])
+
+Kernels are callables ``(key, state) -> state`` where ``state`` is a dict of
+named values (latents, sufficient statistics, sampler state, diagnostics).
+They may be arbitrary Python driving jitted inner steps, so host-side
+structure moves (CRP cluster bookkeeping) coexist with fully-jitted MH.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+
+State = dict[str, Any]
+Kernel = Callable[[jax.Array, State], State]
+
+
+@dataclasses.dataclass
+class Cycle:
+    """Apply each kernel once, in order, ``repeats`` times per call."""
+
+    kernels: Sequence[Kernel]
+    repeats: int = 1
+
+    def __call__(self, key: jax.Array, state: State) -> State:
+        for _ in range(self.repeats):
+            for k in self.kernels:
+                key, sub = jax.random.split(key)
+                state = k(sub, state)
+        return state
+
+
+@dataclasses.dataclass
+class Repeat:
+    kernel: Kernel
+    times: int
+
+    def __call__(self, key: jax.Array, state: State) -> State:
+        for _ in range(self.times):
+            key, sub = jax.random.split(key)
+            state = self.kernel(sub, state)
+        return state
+
+
+@dataclasses.dataclass
+class Mixture:
+    """Randomly pick one kernel per call (optionally weighted)."""
+
+    kernels: Sequence[Kernel]
+    weights: Sequence[float] | None = None
+
+    def __call__(self, key: jax.Array, state: State) -> State:
+        import numpy as np
+
+        key, pick, sub = jax.random.split(key, 3)
+        w = None
+        if self.weights is not None:
+            w = np.asarray(self.weights, float)
+            w = w / w.sum()
+        i = int(np.random.default_rng(int(jax.random.randint(pick, (), 0, 2**31 - 1))).choice(
+            len(self.kernels), p=w))
+        return self.kernels[i](sub, state)
+
+
+def run_inference(
+    key: jax.Array,
+    state: State,
+    program: Kernel,
+    num_iterations: int,
+    callback: Callable[[int, State], None] | None = None,
+) -> State:
+    """Drive an inference program; the paper's outer `[infer ... 1]` loop."""
+    for it in range(num_iterations):
+        key, sub = jax.random.split(key)
+        state = program(sub, state)
+        if callback is not None:
+            callback(it, state)
+    return state

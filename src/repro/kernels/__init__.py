@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the likelihood hot spots (+ jnp oracles).
+
+fused_ce    — vocab-blocked per-token log-likelihood (online logsumexp)
+logit_delta — pair-fused BayesLR MH delta (x read once for theta, theta')
+ops         — jit'd dispatch wrappers (kernel on TPU, interpret/ref on CPU)
+ref         — pure-jnp oracles (the allclose ground truth)
+"""
+from . import ops, ref
+from .fused_ce import fused_ce
+from .logit_loglik import logit_delta
+
+__all__ = ["fused_ce", "logit_delta", "ops", "ref"]

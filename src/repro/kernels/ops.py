@@ -1,0 +1,33 @@
+"""Jitted public wrappers: pick the Pallas kernel on TPU, interpret-mode
+kernel or pure-jnp reference elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from . import ref
+from .fused_ce import fused_ce as _fused_ce_kernel
+from .logit_loglik import logit_delta as _logit_delta_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fused_ce(h, table, targets, *, mode: str = "auto", **kw):
+    """Per-token log-likelihood over a large vocab.
+
+    mode: "auto" (kernel on TPU, ref elsewhere), "kernel" (force Pallas,
+    interpret=True off-TPU), "ref".
+    """
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.fused_ce_ref(h, table, targets)
+    interpret = not _on_tpu()
+    return _fused_ce_kernel(h, table, targets, interpret=interpret, **kw)
+
+
+def logit_delta(x, y, w_cur, w_prop, *, mode: str = "auto", **kw):
+    """Fused BayesLR pair-evaluation of the MH local-section deltas."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.logit_delta_ref(x, y, w_cur, w_prop)
+    interpret = not _on_tpu()
+    return _logit_delta_kernel(x, y, w_cur, w_prop, interpret=interpret, **kw)

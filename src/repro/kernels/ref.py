@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_ce_ref(h: jax.Array, table: jax.Array, targets: jax.Array) -> jax.Array:
+    """Per-token log-likelihood: log softmax(h @ table.T)[target].
+
+    h: (T, D), table: (V, D), targets: (T,) int32 -> (T,) f32.
+    """
+    logits = jnp.einsum("td,vd->tv", h, table).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return tgt - logz
+
+
+def logit_delta_ref(
+    x: jax.Array, y: jax.Array, w_cur: jax.Array, w_prop: jax.Array
+) -> jax.Array:
+    """BayesLR local-section delta: l_i = log sig(y x.w') - log sig(y x.w).
+
+    x: (N, D), y: (N,) in {-1,+1}, w_*: (D,) -> (N,) f32.
+    """
+    z_c = (x @ w_cur).astype(jnp.float32)
+    z_p = (x @ w_prop).astype(jnp.float32)
+    return -jnp.logaddexp(0.0, -y * z_p) + jnp.logaddexp(0.0, -y * z_c)

@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may import jax.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, shape_applicable  # noqa: E402
+from repro.distributed.sharding import logical_axis_rules  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<ty>\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def scan_trip_count(cfg) -> int:
+    """Trip count of the model's layer scan: collectives inside the scanned
+    body appear ONCE in HLO text but execute once per layer/period."""
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_period
+    if cfg.family == "ssm":
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def parse_collectives(hlo_text: str, loop_scale: int = 1) -> dict:
+    """Sum per-device result bytes of every collective in post-SPMD HLO.
+
+    all-reduce wire volume is counted 2x (ring reduce-scatter + all-gather);
+    -done ops are skipped (their -start carries the shape). Collectives in
+    non-ENTRY computations (loop bodies / called computations) are scaled by
+    ``loop_scale`` — the layer-scan trip count — since the HLO text shows the
+    body once. This over-scales collectives in non-layer subcomputations and
+    under-scales doubly-nested ones; it is the consistent first-order
+    correction (documented in DESIGN.md §8).
+    """
+    out: dict[str, dict] = {}
+    in_entry = False
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY "):
+            in_entry = True
+        elif line.startswith("}"):
+            in_entry = in_entry and not line.startswith("}")
+        elif line.startswith("%") and line.rstrip().endswith("{"):
+            in_entry = False
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("ty")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        scale = 1 if in_entry else loop_scale
+        rec = out.setdefault(op, {"count": 0, "result_bytes": 0, "wire_bytes": 0})
+        rec["count"] += 1
+        rec["result_bytes"] += nbytes * scale
+        rec["wire_bytes"] += nbytes * scale * (2 if op == "all-reduce" else 1)
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             rules_name: str = "default", kv_dtype: str | None = None,
+             tag: str = "", cached: bool = False) -> dict:
+    from repro.launch.steps import RULE_PRESETS
+
+    spec = SHAPES[shape]
+    mesh_name = "multi" if multi_pod else "single"
+    record: dict = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                    "rules": rules_name, "kv_dtype": kv_dtype, "tag": tag}
+    ok, reason = shape_applicable(arch, shape)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        return record
+    try:
+        rules = RULE_PRESETS[rules_name]
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with logical_axis_rules(mesh, rules):
+            train_cfg = None
+            if cached and SHAPES[shape].kind == "train":
+                from repro.launch.steps import default_train_config
+
+                train_cfg = __import__("dataclasses").replace(
+                    default_train_config(ARCHS[arch], SHAPES[shape]), cached=True
+                )
+            cell = build_cell(arch, shape, mesh, train_cfg=train_cfg,
+                              rules=rules, kv_dtype=kv_dtype)
+            jitted = jax.jit(
+                cell.step,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            t0 = time.time()
+            with mesh:
+                lowered = jitted.lower(*cell.in_specs)
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        colls = parse_collectives(compiled.as_text(), scan_trip_count(cell.cfg))
+        colls_raw = parse_collectives(compiled.as_text(), 1)
+        cfg = cell.cfg
+        n_chips = 512 if multi_pod else 256
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=float(ca.get("flops", 0.0)),
+            bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+            },
+            collectives=colls,
+            collective_wire_bytes_per_device=sum(
+                c["wire_bytes"] for c in colls.values()
+            ),
+            collective_wire_bytes_unscaled=sum(
+                c["wire_bytes"] for c in colls_raw.values()
+            ),
+            loop_scale=scan_trip_count(cell.cfg),
+            n_chips=n_chips,
+            params_total=cfg.param_count(),
+            params_active=cfg.active_param_count(),
+            tokens=spec.global_batch * spec.seq_len,
+            step_kind=spec.kind,
+            train_round_batch=(cell.train_cfg.round_batch if cell.train_cfg else None),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug to record
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-2000:])
+    finally:
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            suffix = f"__{tag}" if tag else ""
+            fn = os.path.join(out_dir, f"{arch}__{shape}__{mesh_name}{suffix}.json")
+            with open(fn, "w") as f:
+                json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run: lower+compile every cell")
+    ap.add_argument("--arch", default=None, choices=list(ARCHS), help="one architecture")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "infer_tp", "infer_replicate", "mamba_dp", "jamba_prefill"])
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "bf16", "fp8"])
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--cached", action="store_true", help="lazy loglik cache train step")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if not args.all and not args.arch and not args.shape:
+        ap.error("pass --all or select --arch/--shape")
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                rec = run_cell(arch, shape, mesh_name == "multi", args.out,
+                               rules_name=args.rules, kv_dtype=args.kv_dtype,
+                               tag=args.tag, cached=args.cached)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (
+                        f" flops/dev={rec['flops_per_device']:.3e}"
+                        f" coll={rec['collective_wire_bytes_per_device']:.3e}B"
+                        f" temp={rec['memory']['temp_bytes']/2**30:.2f}GiB"
+                        f" compile={rec['compile_s']}s"
+                    )
+                elif status == "error":
+                    failures += 1
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {arch} x {shape} x {mesh_name}{extra}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""LM architecture stack (dense / MoE / SSM / hybrid / audio / VLM)."""
+from .transformer import (
+    ModelConfig,
+    abstract_cache,
+    abstract_params,
+    decode_step,
+    forward_hidden,
+    forward_loglik,
+    init_cache,
+    init_params,
+    param_specs,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "abstract_cache",
+    "abstract_params",
+    "decode_step",
+    "forward_hidden",
+    "forward_loglik",
+    "init_cache",
+    "init_params",
+    "param_specs",
+    "prefill",
+]

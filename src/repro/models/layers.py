@@ -1,0 +1,431 @@
+"""Transformer building blocks with logical-axis sharding annotations.
+
+Everything is written against plain dict parameter trees (leaves are arrays;
+the parallel "axes" tree holds logical-axis name tuples consumed by
+``distributed.sharding``). Layers are shape-polymorphic over a leading
+stacked-layer dimension so the model loops with ``lax.scan``.
+
+Conventions:
+  B batch, S sequence, D d_model, H q-heads, K kv-heads, h head_dim,
+  F d_ff, E experts, V vocab, T = B*S flattened tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import lc  # logical constraint (no-op without mesh)
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple
+    logical: tuple  # logical axis name (or None) per dim
+    dtype: Any = jnp.bfloat16
+    init_scale: str = "fan_in"  # "fan_in" | "one" | "zero" | "normal"
+
+
+def init_leaf(key: jax.Array, spec: ParamSpec) -> jax.Array:
+    if spec.init_scale == "one":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init_scale == "zero":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init_scale == "embed":
+        scale = 0.02  # keeps tied-unembedding logits O(1) at init
+    elif spec.init_scale == "normal":
+        scale = 1.0
+    else:
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        scale = fan_in**-0.5
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_table(positions: jax.Array, head_dim: int, base: float, rotary_frac: float = 1.0):
+    """cos/sin tables (S, rot/2). ``rotary_frac`` < 1 rotates only the first
+    rot = head_dim*frac dims (ChatGLM's 2d/partial RoPE)."""
+    rot = int(head_dim * rotary_frac)
+    rot -= rot % 2
+    freqs = base ** (-jnp.arange(0, rot, 2, dtype=jnp.float32) / rot)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (S, rot/2)
+    return jnp.cos(angles), jnp.sin(angles), rot
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array, rot: int) -> jax.Array:
+    """x: (B, S, N, h); cos/sin: (S, rot/2) or (B, S, rot/2)."""
+    dt = x.dtype
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    cos = cos[:, :, None, :].astype(jnp.float32)
+    sin = sin[:, :, None, :].astype(jnp.float32)
+    xr = x[..., :rot].astype(jnp.float32)
+    xp = x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape).astype(dt)
+    return jnp.concatenate([yr, xp], axis=-1) if rot < x.shape[-1] else yr
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + sliding window as data + optional qk-norm / bias)
+#
+# Three execution paths share one mask rule:
+#   - dense:   materialize (S, T) logits (short sequences),
+#   - flash:   lax.scan over q- and kv-chunks with online softmax (long
+#              sequences; (B,S,T) never materializes — pure-JAX flash attn),
+#   - cached:  decode/prefill against a ring-buffer KV cache whose slot
+#              positions are explicit, so sliding-window archs keep an
+#              O(window) cache even at 500k-token contexts.
+# ---------------------------------------------------------------------------
+
+FLASH_THRESHOLD = 2048  # use chunked attention above this many query rows
+_NEG = -1e30
+
+
+def _mask(q_pos, k_pos, window, causal):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    m &= (q_pos[:, None] - k_pos[None, :]) < window
+    m &= k_pos[None, :] >= 0  # ring-buffer slots still empty carry pos = -1
+    return m
+
+
+def _attend_dense(qg, k_all, v_all, q_pos, k_pos, window, causal, scale):
+    b, s, n_kv, group, hd = qg.shape
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k_all).astype(jnp.float32) * scale
+    mask = _mask(q_pos, k_pos, window, causal)[None, None, None]
+    logits = jnp.where(mask, logits, _NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qg.dtype)
+    return jnp.einsum("bkgst,btkh->bskgh", probs, v_all)
+
+
+def _attend_flash(qg, k_all, v_all, q_pos, k_pos, window, causal, scale,
+                  chunk_q: int = 256, chunk_kv: int = 512):
+    """Online-softmax chunked attention: scan over q chunks, inner scan over
+    kv chunks. Memory is O(chunk_q * chunk_kv) per head instead of O(S*T)."""
+    b, s, n_kv, group, hd = qg.shape
+    t = k_all.shape[1]
+    cq = min(chunk_q, s)
+    ckv = min(chunk_kv, t)
+    nq = -(-s // cq)
+    nkv = -(-t // ckv)
+    pad_q = nq * cq - s
+    pad_kv = nkv * ckv - t
+
+    qg_p = jnp.pad(qg, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(q_pos, (0, pad_q), constant_values=-(1 << 29))
+    k_p = jnp.pad(k_all, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    v_p = jnp.pad(v_all, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(k_pos, (0, pad_kv), constant_values=-1)
+
+    q_chunks = qg_p.reshape(b, nq, cq, n_kv, group, hd).swapaxes(0, 1)
+    qpos_chunks = qpos_p.reshape(nq, cq)
+    k_chunks = k_p.reshape(b, nkv, ckv, n_kv, hd).swapaxes(0, 1)
+    v_chunks = v_p.reshape(b, nkv, ckv, n_kv, hd).swapaxes(0, 1)
+    kpos_chunks = kpos_p.reshape(nkv, ckv)
+
+    def q_step(_, q_in):
+        q_c, qp = q_in  # (B, cq, K, g, h), (cq,)
+
+        def kv_step(carry, kv_in):
+            m_run, l_run, acc = carry
+            k_c, v_c, kp = kv_in
+            logits = jnp.einsum("bskgh,btkh->bkgst", q_c, k_c).astype(jnp.float32) * scale
+            mask = _mask(qp, kp, window, causal)[None, None, None]
+            logits = jnp.where(mask, logits, _NEG)
+            m_new = jnp.maximum(m_run, logits.max(-1))
+            corr = jnp.exp(m_run - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgst,btkh->bkgsh", p.astype(q_c.dtype), v_c
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, n_kv, group, cq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, group, cq), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, group, cq, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (k_chunks, v_chunks, kpos_chunks))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return None, out.astype(q_c.dtype)  # (B, K, g, cq, h)
+
+    _, outs = jax.lax.scan(q_step, None, (q_chunks, qpos_chunks))
+    # outs: (nq, B, K, g, cq, h) -> (B, S, K, g, h)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * cq, n_kv, group, hd)
+    return out[:, :s]
+
+
+def attention(
+    x: jax.Array,  # (B, S, D)
+    p: Params,  # wq (D, H, h), wk/wv (D, K, h), wo (H, h, D), optional bq/bk/bv, qnorm/knorm
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    positions: jax.Array,  # (S,) or (B, S)
+    window: jax.Array | int,  # sliding-window size (>= S means full); traced OK
+    rope_base: float,
+    rotary_frac: float = 1.0,
+    causal: bool = True,
+    kv_cache: tuple | None = None,  # (k_buf (B,C,K,h), v_buf, length, slot_pos (C,))
+    q_scale: float | None = None,
+    use_rope: bool = True,
+) -> tuple[jax.Array, tuple | None]:
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if "qnorm" in p:
+        q = rms_norm(q, p["qnorm"])
+        k = rms_norm(k, p["knorm"])
+    pos = positions if positions.ndim == 1 else positions[0]
+    if use_rope:
+        cos, sin, rot = rope_table(pos, head_dim, rope_base, rotary_frac)
+        q = apply_rope(q, cos, sin, rot)
+        k = apply_rope(k, cos, sin, rot)
+    q = lc(q, ("batch", None, "q_heads", None))
+    k = lc(k, ("batch", None, "kv_heads", None))
+
+    if kv_cache is not None:
+        # slot_pos has already been advanced for this step by the caller
+        k_buf, v_buf, length, slot_pos = kv_cache
+        cache_len = k_buf.shape[1]
+        if s >= cache_len:
+            # prefilling a window-sized ring: attend in-sequence, store the
+            # tail at its ring slots (slot of absolute position p = p % C, so
+            # later decode inserts at length % C overwrite the oldest entry)
+            shift = (s - cache_len) % cache_len
+            k_buf = jnp.roll(k[:, -cache_len:].astype(k_buf.dtype), shift, axis=1)
+            v_buf = jnp.roll(v[:, -cache_len:].astype(v_buf.dtype), shift, axis=1)
+            k_all, v_all = k, v
+            k_pos = pos
+        else:
+            ins = length % cache_len  # ring buffer (SWA: cache_len = window)
+            k_buf = jax.lax.dynamic_update_slice_in_dim(
+                k_buf, k.astype(k_buf.dtype), ins, axis=1
+            )
+            v_buf = jax.lax.dynamic_update_slice_in_dim(
+                v_buf, v.astype(v_buf.dtype), ins, axis=1
+            )
+            k_all, v_all = k_buf, v_buf
+            k_pos = slot_pos
+        q_pos = pos
+        new_cache = (k_buf, v_buf)
+        if k_all.dtype != q.dtype:  # quantized (fp8) cache: dequant on read
+            k_all = k_all.astype(q.dtype)
+            v_all = v_all.astype(q.dtype)
+    else:
+        k_all, v_all = k, v
+        k_pos = pos
+        q_pos = pos
+        new_cache = None
+
+    group = n_heads // n_kv
+    qg = q.reshape(b, s, n_kv, group, head_dim)
+    scale = q_scale if q_scale is not None else head_dim**-0.5
+    if s > FLASH_THRESHOLD or (k_all.shape[1] > 4 * FLASH_THRESHOLD and s > 1):
+        out5 = _attend_flash(qg, k_all, v_all, q_pos, k_pos, window, causal, scale)
+    else:
+        out5 = _attend_dense(qg, k_all, v_all, q_pos, k_pos, window, causal, scale)
+    out = out5.reshape(b, s, n_heads, head_dim)
+    y = jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+    return lc(y, ("batch", None, None)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_mlp(x: jax.Array, p: Params) -> jax.Array:
+    """p: wi_gate (D, F), wi_up (D, F), wo (F, D)."""
+    g = jnp.einsum("bsd,df->bsf", x, p["wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wi_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = lc(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+def gelu_mlp(x: jax.Array, p: Params) -> jax.Array:
+    """p: wi (D, F), bi (F,), wo (F, D), bo (D,). (Whisper-style.)"""
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"]) + p["bi"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = lc(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"]) + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-bounded sort-free dispatch)
+# ---------------------------------------------------------------------------
+
+
+def moe_mlp(
+    x: jax.Array,  # (B, S, D)
+    p: Params,  # router (D, E), wi_gate/wi_up (E, D, F), wo (E, F, D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    n_groups: int | None = None,
+) -> jax.Array:
+    """Top-k MoE with GShard-style *grouped* dispatch: tokens are split into
+    data-sharded groups, each dispatched to capacity-bounded expert buffers
+    locally. Grouping keeps the scatter/gather shard-local (a global scatter
+    over a sharded token axis made XLA replicate the (T, D) updates — 100+ GiB
+    per device at 1M-token prefill in the dry-run); cross-shard traffic is
+    then only the expert-sharded einsum's all-to-all, as in GShard/Switch.
+    """
+    b, s, d = x.shape
+    e = p["router"].shape[-1]
+    t = b * s
+    if n_groups is None:
+        n_groups = b if (s > 1 and b >= 16) else 1
+    gn = n_groups
+    g_sz = t // gn
+    xt = lc(x.reshape(gn, g_sz, d), ("batch", None, None))
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"]).astype(jnp.float32)
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(gate_all, top_k)  # (G, T/G, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Sequential chunking over long groups bounds live expert-buffer memory
+    # (the dispatch buffers are ~4x token bytes; at 65k tokens/device the
+    # un-chunked version held ~16 GiB of transients in the dry-run).
+    chunk = min(g_sz, 8192)
+    n_c = g_sz // chunk
+
+    # floor keeps tiny decode batches drop-free (capacity-1 buckets would
+    # silently drop second experts and skew the decode distribution)
+    capacity = max(int(capacity_factor * chunk * top_k / e), min(chunk * top_k, 32))
+    token_id = jnp.repeat(jnp.arange(chunk), top_k)  # shared across groups
+
+    def one_chunk(_, inp):
+        xc, gate_c, sel_c = inp  # (G, chunk, D), (G, chunk, k), (G, chunk, k)
+        sel_flat = sel_c.reshape(gn, chunk * top_k)
+        onehot = jax.nn.one_hot(sel_flat, e, dtype=jnp.int32)
+        pos = ((jnp.cumsum(onehot, axis=1) - 1) * onehot).sum(-1)
+        keep = pos < capacity
+        slot = jnp.where(keep, sel_flat * capacity + pos, e * capacity)
+
+        def scatter_group(xg, sl):
+            return jnp.zeros((e * capacity + 1, d), xg.dtype).at[sl].set(xg[token_id])
+
+        buf = jax.vmap(scatter_group)(xc, slot)[:, :-1].reshape(gn, e, capacity, d)
+        # experts -> model when divisible; otherwise the capacity dim picks up
+        # the model axis (mixtral's 8 experts on a 16-way axis)
+        buf = lc(buf, ("batch", "experts", "capacity", None))
+
+        g = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"])
+        u = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        h = lc(h, ("batch", "experts", "capacity", None))
+        out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+        out_buf = lc(out_buf, ("batch", "experts", "capacity", None)).reshape(
+            gn, e * capacity, d
+        )
+        out_buf = jnp.concatenate([out_buf, jnp.zeros((gn, 1, d), x.dtype)], axis=1)
+        wgt = (gate_c.reshape(gn, -1, 1) * keep[..., None]).astype(x.dtype)
+
+        def combine_group(ob, sl, wg):
+            per_assign = ob[sl] * wg
+            return jnp.zeros((chunk, d), x.dtype).at[token_id].add(per_assign)
+
+        return None, jax.vmap(combine_group)(out_buf, slot, wgt)
+
+    if n_c == 1:
+        _, y = one_chunk(None, (xt, gate, sel))
+    else:
+        xs = (
+            xt.reshape(gn, n_c, chunk, d).swapaxes(0, 1),
+            gate.reshape(gn, n_c, chunk, top_k).swapaxes(0, 1),
+            sel.reshape(gn, n_c, chunk, top_k).swapaxes(0, 1),
+        )
+        _, ys = jax.lax.scan(one_chunk, None, xs)  # (n_c, G, chunk, D)
+        y = ys.swapaxes(0, 1).reshape(gn, g_sz, d)
+    return lc(y.reshape(b, s, d), ("batch", None, None))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed(tokens: jax.Array, table: jax.Array, scale: bool = False) -> jax.Array:
+    h = jnp.take(table, tokens, axis=0)
+    if scale:
+        h = h * jnp.asarray(table.shape[-1] ** 0.5, h.dtype)
+    return lc(h, ("batch", None, None))
+
+
+def unembed_loglik(
+    h: jax.Array,  # (B, S, D)
+    table: jax.Array,  # (V, D) (tied) — logits = h @ table.T
+    targets: jax.Array,  # (B, S)
+    mask: jax.Array,  # (B, S)
+    chunk: int = 512,
+) -> jax.Array:
+    """Per-sequence log-likelihood, seq-chunked so (B,S,V) never materializes.
+
+    This is the pure-jnp reference path; kernels/fused_ce is the TPU kernel
+    with identical semantics (vocab-blocked online logsumexp).
+    """
+    b, s, d = h.shape
+
+    def one_chunk(carry, inp):
+        hc, tc, mc = inp  # (B, c, D), (B, c), (B, c)
+        logits = jnp.einsum("bcd,vd->bcv", hc, table).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return carry + ((tgt - logz) * mc).sum(-1), None
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    tp = jnp.pad(targets, ((0, 0), (0, pad)))
+    mp = jnp.pad(mask.astype(h.dtype), ((0, 0), (0, pad)))
+    hs = hp.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    ts = tp.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    ms = mp.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(one_chunk, jnp.zeros((b,), jnp.float32), (hs, ts, ms))
+    return total

@@ -1,0 +1,208 @@
+"""Recurrent sequence blocks: Mamba (selective SSM), xLSTM (mLSTM + sLSTM).
+
+All blocks share the calling convention
+
+    y, new_state = block(x, params, state=None)
+
+with ``x: (B, S, D)``; ``state`` carries the recurrent summary for decode
+(one-token steps with S=1 continue from ``state``). Training uses
+``lax.scan`` over time — the recurrences are the sub-quadratic reason these
+architectures run the 500k-token decode shape.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba (S6) block
+# ---------------------------------------------------------------------------
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, kernel-1, di) trailing inputs for the causal conv
+    ssm: jax.Array  # (B, di, ds)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, prefix: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, di); w: (k, di); prefix: (B, k-1, di)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x)
+    for j in range(k):
+        out = out + w[j] * jax.lax.dynamic_slice_in_dim(xp, j, x.shape[1], axis=1)
+    return out + b
+
+
+def mamba_block(
+    x: jax.Array, p: Params, state: MambaState | None = None
+) -> tuple[jax.Array, MambaState]:
+    b, s, d = x.shape
+    di = p["a_log"].shape[0]
+    ds = p["a_log"].shape[1]
+    kernel = p["conv_w"].shape[0]
+
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B, S, di) each
+
+    prefix = (
+        state.conv if state is not None else jnp.zeros((b, kernel - 1, di), x.dtype)
+    )
+    x_c = _causal_conv(x_in, p["conv_w"], p["conv_b"], prefix)
+    new_conv = jnp.concatenate([prefix, x_in], axis=1)[:, -(kernel - 1):, :]
+    x_c = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    proj = jnp.einsum("bse,ef->bsf", x_c, p["x_proj"])
+    dt_rank = p["dt_proj"].shape[0]
+    dt_r = proj[..., :dt_rank]
+    b_mat = proj[..., dt_rank : dt_rank + ds].astype(jnp.float32)
+    c_mat = proj[..., dt_rank + ds :].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dt_r, p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )  # (B, S, di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, ds)
+
+    h0 = (
+        state.ssm.astype(jnp.float32)
+        if state is not None
+        else jnp.zeros((b, di, ds), jnp.float32)
+    )
+    xcf = x_c.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp  # (B,di), (B,ds), (B,ds), (B,di)
+        decay = jnp.exp(dt_t[..., None] * a)  # (B, di, ds)
+        h = h * decay + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bes,bs->be", h, c_t)
+        return h, y_t
+
+    h_final, ys = jax.lax.scan(
+        step,
+        h0,
+        (
+            dt.swapaxes(0, 1),
+            b_mat.swapaxes(0, 1),
+            c_mat.swapaxes(0, 1),
+            xcf.swapaxes(0, 1),
+        ),
+    )
+    y = ys.swapaxes(0, 1) + p["d_skip"].astype(jnp.float32) * xcf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, MambaState(conv=new_conv, ssm=h_final.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (matrix memory) block
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array  # (B, H, dh, dh)
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H)
+
+
+def mlstm_block(
+    x: jax.Array, p: Params, state: MLSTMState | None = None
+) -> tuple[jax.Array, MLSTMState]:
+    b, s, d = x.shape
+    n_heads, dh = p["wq"].shape[1], p["wq"].shape[2]
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dnh->bsnh", x, p["wk"]).astype(jnp.float32) * dh**-0.5
+    v = jnp.einsum("bsd,dnh->bsnh", x, p["wv"]).astype(jnp.float32)
+    i_log = jnp.einsum("bsd,dn->bsn", x, p["wi"]).astype(jnp.float32)
+    f_log = jax.nn.log_sigmoid(jnp.einsum("bsd,dn->bsn", x, p["wf"]).astype(jnp.float32))
+    o_gate = jax.nn.sigmoid(jnp.einsum("bsd,dn->bsn", x, p["wo_gate"]).astype(jnp.float32))
+
+    if state is None:
+        c0 = jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+        m0 = jnp.full((b, n_heads), -1e30, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t, o_t = inp
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * jnp.einsum(
+            "bnh,bng->bnhg", v_t, k_t
+        )
+        n = f_p[..., None] * n + i_p[..., None] * k_t
+        num = jnp.einsum("bnhg,bng->bnh", c, q_t)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bng,bng->bn", n, q_t)), 1.0)
+        h_t = o_t[..., None] * num / den[..., None]
+        return (c, n, m_new), h_t
+
+    (c_f, n_f, m_f), hs = jax.lax.scan(
+        step,
+        (c0, n0, m0),
+        (
+            q.swapaxes(0, 1),
+            k.swapaxes(0, 1),
+            v.swapaxes(0, 1),
+            i_log.swapaxes(0, 1),
+            f_log.swapaxes(0, 1),
+            o_gate.swapaxes(0, 1),
+        ),
+    )
+    h = hs.swapaxes(0, 1).reshape(b, s, n_heads * dh).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    return out, MLSTMState(c=c_f, n=n_f, m=m_f)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM (scalar memory, recurrent gates) block
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array  # (B, H, dh)
+    c: jax.Array  # (B, H, dh)
+    n: jax.Array  # (B, H, dh)
+    m: jax.Array  # (B, H, dh)
+
+
+def slstm_block(
+    x: jax.Array, p: Params, state: SLSTMState | None = None
+) -> tuple[jax.Array, SLSTMState]:
+    b, s, d = x.shape
+    n_heads, dh = p["r"].shape[0], p["r"].shape[1]
+    wx = jnp.einsum("bsd,dnf->bsnf", x, p["w"]).astype(jnp.float32)  # (B,S,H,4dh)
+
+    if state is None:
+        zeros = jnp.zeros((b, n_heads, dh), jnp.float32)
+        st = SLSTMState(zeros, zeros, zeros, jnp.full((b, n_heads, dh), -1e30))
+    else:
+        st = state
+
+    r = p["r"].astype(jnp.float32)  # (H, dh, 4dh) block-diagonal recurrence
+    bias = p["b"].astype(jnp.float32)  # (H, 4dh)
+
+    def step(carry, wx_t):
+        h, c, n, m = carry
+        pre = wx_t + jnp.einsum("bnh,nhf->bnf", h, r) + bias  # (B,H,4dh)
+        z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+        z_t = jnp.tanh(z_t)
+        o_t = jax.nn.sigmoid(o_t)
+        f_log = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(f_log + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_log + m - m_new)
+        c = f_p * c + i_p * z_t
+        n = f_p * n + i_p
+        h_new = o_t * c / jnp.maximum(n, 1.0)
+        return (h_new, c, n, m_new), h_new
+
+    (h_f, c_f, n_f, m_f), hs = jax.lax.scan(step, tuple(st), wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).reshape(b, s, n_heads * dh).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", h, p["out_proj"])
+    return out, SLSTMState(h_f, c_f, n_f, m_f)

@@ -1,0 +1,748 @@
+"""Architecture zoo: decoder-only dense/MoE/SSM/hybrid LMs, enc-dec audio,
+early-fusion VLM — one config-driven implementation.
+
+Param trees are nested dicts whose leaves are arrays; ``param_specs`` returns
+the same tree with ``ParamSpec`` leaves (shape + logical axes) so the
+launcher can build shardings and abstract values without allocating.
+
+Entry points:
+  param_specs(cfg) / init_params(key, cfg) / abstract_params(cfg)
+  forward_loglik(params, batch, cfg)      -> per-sequence loglik (B,)
+  prefill(params, tokens, cfg, max_len)   -> (cache, last-position logits)
+  decode_step(params, cache, tokens, cfg) -> (cache, logits)
+  init_cache / abstract_cache
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import lc
+from .layers import (
+    ParamSpec,
+    attention,
+    embed,
+    gelu_mlp,
+    init_leaf,
+    moe_mlp,
+    rms_norm,
+    swiglu_mlp,
+    unembed_loglik,
+)
+from .ssm import (
+    MambaState,
+    MLSTMState,
+    SLSTMState,
+    mamba_block,
+    mlstm_block,
+    slstm_block,
+)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_base: float = 10_000.0
+    rotary_frac: float = 1.0
+    window: int | None = None  # uniform sliding window (mixtral)
+    local_window: int | None = None  # gemma3 local layers
+    global_every: int | None = None  # gemma3: every k-th layer is global
+    global_rope_base: float | None = None
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1  # jamba/phi: MoE layer cadence
+    attn_period: int = 0  # jamba: one attention layer per this many
+    attn_index: int = 4
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    dt_rank: int | None = None
+    enc_layers: int = 0  # whisper encoder depth
+    n_audio_frames: int = 1500
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    max_seq: int = 8192
+    sub_quadratic: bool = False  # eligible for long_500k decode
+    kv_cache_dtype: str = "bf16"  # "bf16" | "fp8" (float8_e4m3fn; §Perf HC3)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def dt_rank_eff(self) -> int:
+        return self.dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    def param_count(self) -> int:
+        import numpy as np
+
+        specs = param_specs(self)
+        leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        return int(sum(np.prod(s.shape) for s in leaves))
+
+    def active_param_count(self) -> int:
+        """MoE-aware: experts count at top_k/n_experts utilization."""
+        import numpy as np
+
+        specs = param_specs(self)
+        total = 0
+        flat = _flatten(specs)
+        for path, s in flat.items():
+            n = int(np.prod(s.shape))
+            if "experts" in s.logical and self.n_experts > 0:
+                n = int(n * self.top_k / self.n_experts)
+            total += n
+        return total
+
+
+def _flatten(tree: dict, prefix: str = "") -> dict[str, ParamSpec]:
+    out = {}
+    for k, v in tree.items():
+        path = f"{prefix}/{k}" if prefix else k
+        if isinstance(v, dict):
+            out.update(_flatten(v, path))
+        else:
+            out[path] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Param specs per family
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, h, nh, nk = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    sl = ("layers",) * len(stack)
+    s = {
+        "wq": ParamSpec(stack + (d, nh, h), sl + ("embed", "q_heads", None)),
+        "wk": ParamSpec(stack + (d, nk, h), sl + ("embed", "kv_heads", None)),
+        "wv": ParamSpec(stack + (d, nk, h), sl + ("embed", "kv_heads", None)),
+        "wo": ParamSpec(stack + (nh, h, d), sl + ("q_heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec(stack + (nh, h), sl + ("q_heads", None), init_scale="zero")
+        s["bk"] = ParamSpec(stack + (nk, h), sl + ("kv_heads", None), init_scale="zero")
+        s["bv"] = ParamSpec(stack + (nk, h), sl + ("kv_heads", None), init_scale="zero")
+    if cfg.qk_norm:
+        s["qnorm"] = ParamSpec(stack + (h,), sl + (None,), init_scale="zero")
+        s["knorm"] = ParamSpec(stack + (h,), sl + (None,), init_scale="zero")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    sl = ("layers",) * len(stack)
+    return {
+        "wi_gate": ParamSpec(stack + (d, f), sl + ("embed", "mlp")),
+        "wi_up": ParamSpec(stack + (d, f), sl + ("embed", "mlp")),
+        "wo": ParamSpec(stack + (f, d), sl + ("mlp", "embed")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    sl = ("layers",) * len(stack)
+    return {
+        "router": ParamSpec(stack + (d, e), sl + ("embed", None)),
+        "wi_gate": ParamSpec(stack + (e, d, f), sl + ("experts", "embed", "expert_mlp")),
+        "wi_up": ParamSpec(stack + (e, d, f), sl + ("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec(stack + (e, f, d), sl + ("experts", "expert_mlp", "embed")),
+    }
+
+
+def _mamba_specs(cfg: ModelConfig, stack: tuple = ()) -> dict:
+    d, di, ds, dtr, k = cfg.d_model, cfg.d_inner, cfg.mamba_d_state, cfg.dt_rank_eff, cfg.mamba_d_conv
+    sl = ("layers",) * len(stack)
+    m = "mamba_inner"  # own logical axis: TP-vs-replicate is a perf knob (HC2)
+    return {
+        "in_proj": ParamSpec(stack + (d, 2 * di), sl + ("embed", m)),
+        "conv_w": ParamSpec(stack + (k, di), sl + ("conv", m), init_scale="normal"),
+        "conv_b": ParamSpec(stack + (di,), sl + (m,), init_scale="zero"),
+        "x_proj": ParamSpec(stack + (di, dtr + 2 * ds), sl + (m, None)),
+        "dt_proj": ParamSpec(stack + (dtr, di), sl + (None, m)),
+        "dt_bias": ParamSpec(stack + (di,), sl + (m,), init_scale="zero"),
+        "a_log": ParamSpec(stack + (di, ds), sl + (m, "state"), init_scale="zero"),
+        "d_skip": ParamSpec(stack + (di,), sl + (m,), init_scale="one"),
+        "out_proj": ParamSpec(stack + (di, d), sl + (m, "embed")),
+    }
+
+
+def _norm_spec(cfg: ModelConfig, stack: tuple = ()) -> ParamSpec:
+    return ParamSpec(
+        stack + (cfg.d_model,), ("layers",) * len(stack) + (None,), init_scale="zero"
+    )
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v, n = cfg.d_model, cfg.vocab, cfg.n_layers
+    specs: dict = {
+        # vocab-sharded only: 2D-sharding the table trips XLA's gather
+        # partitioner into involuntary full rematerialization (observed in the
+        # dry-run); the model-axis shard already bounds per-chip bytes.
+        "embed": {"table": ParamSpec((v, d), ("vocab", None), init_scale="embed")},
+        "final_norm": _norm_spec(cfg),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        specs["layers"] = {
+            "ln1": _norm_spec(cfg, (n,)),
+            "ln2": _norm_spec(cfg, (n,)),
+            "attn": _attn_specs(cfg, (n,)),
+            "mlp": _mlp_specs(cfg, (n,)),
+        }
+    elif fam == "moe":
+        specs["layers"] = {
+            "ln1": _norm_spec(cfg, (n,)),
+            "ln2": _norm_spec(cfg, (n,)),
+            "attn": _attn_specs(cfg, (n,)),
+            "moe": _moe_specs(cfg, (n,)),
+        }
+    elif fam == "ssm":  # xLSTM: alternating mLSTM / sLSTM pairs
+        pairs = n // 2
+        nh, dh = cfg.n_heads, d // cfg.n_heads
+        specs["layers"] = {
+            "ln_m": _norm_spec(cfg, (pairs,)),
+            "ln_s": _norm_spec(cfg, (pairs,)),
+            "mlstm": {
+                "wq": ParamSpec((pairs, d, nh, dh), ("layers", "embed", "q_heads", None)),
+                "wk": ParamSpec((pairs, d, nh, dh), ("layers", "embed", "q_heads", None)),
+                "wv": ParamSpec((pairs, d, nh, dh), ("layers", "embed", "q_heads", None)),
+                "wi": ParamSpec((pairs, d, nh), ("layers", "embed", None)),
+                "wf": ParamSpec((pairs, d, nh), ("layers", "embed", None)),
+                "wo_gate": ParamSpec((pairs, d, nh), ("layers", "embed", None)),
+                "out_proj": ParamSpec((pairs, d, d), ("layers", None, "embed")),
+            },
+            "slstm": {
+                "w": ParamSpec((pairs, d, nh, 4 * dh), ("layers", "embed", "q_heads", None)),
+                "r": ParamSpec((pairs, nh, dh, 4 * dh), ("layers", "q_heads", None, None)),
+                "b": ParamSpec((pairs, nh, 4 * dh), ("layers", "q_heads", None), init_scale="zero"),
+                "out_proj": ParamSpec((pairs, d, d), ("layers", None, "embed")),
+            },
+        }
+    elif fam == "hybrid":  # jamba: periods of attn_period layers, 1 attention
+        p = n // cfg.attn_period
+        n_m = cfg.attn_period - 1
+        n_moe = cfg.attn_period // cfg.moe_every
+        n_mlp = cfg.attn_period - n_moe
+        specs["layers"] = {
+            "ln_mix": _norm_spec(cfg, (p, cfg.attn_period)),
+            "ln_mlp": _norm_spec(cfg, (p, cfg.attn_period)),
+            "attn": _attn_specs(cfg, (p,)),
+            "mamba": _mamba_specs(cfg, (p, n_m)),
+            "moe": _moe_specs(cfg, (p, n_moe)),
+            "mlp": _mlp_specs(cfg, (p, n_mlp)),
+        }
+    elif fam == "audio":  # whisper: encoder + decoder with cross-attention
+        ne = cfg.enc_layers
+        specs["enc"] = {
+            "pos": ParamSpec((cfg.n_audio_frames, d), (None, "embed"), init_scale="normal"),
+            "layers": {
+                "ln1": _norm_spec(cfg, (ne,)),
+                "ln2": _norm_spec(cfg, (ne,)),
+                "attn": _attn_specs(cfg, (ne,)),
+                "mlp": {
+                    "wi": ParamSpec((ne, d, cfg.d_ff), ("layers", "embed", "mlp")),
+                    "bi": ParamSpec((ne, cfg.d_ff), ("layers", "mlp"), init_scale="zero"),
+                    "wo": ParamSpec((ne, cfg.d_ff, d), ("layers", "mlp", "embed")),
+                    "bo": ParamSpec((ne, d), ("layers", "embed"), init_scale="zero"),
+                },
+            },
+            "final_norm": _norm_spec(cfg),
+        }
+        specs["dec_pos"] = ParamSpec((cfg.max_seq, d), (None, "embed"), init_scale="normal")
+        specs["layers"] = {
+            "ln1": _norm_spec(cfg, (n,)),
+            "ln_x": _norm_spec(cfg, (n,)),
+            "ln2": _norm_spec(cfg, (n,)),
+            "attn": _attn_specs(cfg, (n,)),
+            "xattn": _attn_specs(cfg, (n,)),
+            "mlp": {
+                "wi": ParamSpec((n, d, cfg.d_ff), ("layers", "embed", "mlp")),
+                "bi": ParamSpec((n, cfg.d_ff), ("layers", "mlp"), init_scale="zero"),
+                "wo": ParamSpec((n, cfg.d_ff, d), ("layers", "mlp", "embed")),
+                "bo": ParamSpec((n, d), ("layers", "embed"), init_scale="zero"),
+            },
+        }
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+    return specs
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    specs = param_specs(cfg)
+    flat = _flatten(specs)
+    keys = jax.random.split(key, len(flat))
+    flat_vals = {p: init_leaf(k, s) for (p, s), k in zip(sorted(flat.items()), keys)}
+
+    def rebuild(tree, prefix=""):
+        out = {}
+        for k, v in tree.items():
+            path = f"{prefix}/{k}" if prefix else k
+            out[k] = rebuild(v, path) if isinstance(v, dict) else flat_vals[path]
+        return out
+
+    return rebuild(specs)
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree (no allocation) for dry-run lowering."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        param_specs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-layer window / rope schedules (data, not control flow)
+# ---------------------------------------------------------------------------
+
+_FULL_WINDOW = 1 << 30
+
+
+def layer_schedules(cfg: ModelConfig, n: int | None = None):
+    """Per-layer (window, rope_base) arrays — sliding windows and dual rope
+    bases become *data* consumed by one attention code path."""
+    n = n or cfg.n_layers
+    windows = jnp.full((n,), cfg.window or _FULL_WINDOW, jnp.int32)
+    bases = jnp.full((n,), cfg.rope_base, jnp.float32)
+    if cfg.global_every:
+        idx = jnp.arange(n)
+        is_global = (idx + 1) % cfg.global_every == 0
+        windows = jnp.where(is_global, _FULL_WINDOW, cfg.local_window or _FULL_WINDOW)
+        bases = jnp.where(is_global, cfg.global_rope_base or cfg.rope_base, cfg.rope_base)
+    return windows, bases
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _attn_kwargs(cfg: ModelConfig):
+    return dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                rotary_frac=cfg.rotary_frac)
+
+
+def _decoder_stack(params: Params, h: jax.Array, cfg: ModelConfig, positions,
+                   caches=None):
+    """Uniform scan for dense / moe / vlm families. caches: None or dict of
+    stacked buffers (L, B, Smax, K, hd) plus scalar length."""
+    windows, bases = layer_schedules(cfg)
+    lp = params["layers"]
+    is_moe = cfg.family == "moe"
+    slot_pos = _advance_slot_pos(caches, positions) if caches is not None else None
+
+    def body(carry, xs):
+        h = carry
+        p, window, base, cache_kv = xs
+        a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
+        kv = None
+        if cache_kv is not None:
+            kv = (cache_kv["k"], cache_kv["v"], caches["len"], slot_pos)
+        a_out, new_kv = attention(
+            a_in, p["attn"], positions=positions, window=window, rope_base=base,
+            kv_cache=kv, **_attn_kwargs(cfg),
+        )
+        h = h + a_out
+        m_in = rms_norm(h, p["ln2"], cfg.norm_eps)
+        if is_moe:
+            m_out = moe_mlp(m_in, p["moe"], top_k=cfg.top_k)
+        else:
+            m_out = swiglu_mlp(m_in, p["mlp"])
+        h = h + m_out
+        out_kv = None
+        if new_kv is not None:
+            out_kv = {"k": new_kv[0], "v": new_kv[1]}
+        return h, out_kv
+
+    cache_xs = None
+    if caches is not None:
+        cache_xs = {"k": caches["k"], "v": caches["v"]}
+    h, new_cache = jax.lax.scan(body, h, (lp, windows, bases, cache_xs))
+    if caches is not None:
+        s = positions.shape[-1]
+        new_cache = {"k": new_cache["k"], "v": new_cache["v"], "pos": slot_pos,
+                     "len": caches["len"] + s}
+    return h, new_cache
+
+
+def _xlstm_stack(params, h, cfg, states=None):
+    lp = params["layers"]
+
+    def body(carry, xs):
+        h = carry
+        p, st = xs
+        m_st = MLSTMState(*st["m"]) if st is not None else None
+        s_st = SLSTMState(*st["s"]) if st is not None else None
+        y, m_new = mlstm_block(rms_norm(h, p["ln_m"], cfg.norm_eps), p["mlstm"], m_st)
+        h = h + y
+        y, s_new = slstm_block(rms_norm(h, p["ln_s"], cfg.norm_eps), p["slstm"], s_st)
+        h = h + y
+        return h, {"m": tuple(m_new), "s": tuple(s_new)}
+
+    h, new_states = jax.lax.scan(body, h, (lp, states))
+    return h, new_states
+
+
+def _jamba_stack(params, h, cfg, positions, caches=None):
+    lp = params["layers"]
+    ap = cfg.attn_period
+    window = cfg.window or _FULL_WINDOW
+    slot_pos = _advance_slot_pos(caches, positions) if caches is not None else None
+
+    def period(carry, xs):
+        h = carry
+        p, cache_p = xs
+        m_i = 0
+        moe_i = 0
+        mlp_i = 0
+        new_cache = {} if cache_p is not None else None
+        mamba_states = []
+        for li in range(ap):
+            mix_in = rms_norm(h, p["ln_mix"][li], cfg.norm_eps)
+            if li == cfg.attn_index:
+                kv = None
+                if cache_p is not None:
+                    kv = (cache_p["k"], cache_p["v"], caches["len"], slot_pos)
+                y, new_kv = attention(
+                    mix_in, p["attn"], positions=positions, window=window,
+                    rope_base=cfg.rope_base, kv_cache=kv, **_attn_kwargs(cfg),
+                )
+                if new_cache is not None:
+                    new_cache["k"], new_cache["v"] = new_kv[0], new_kv[1]
+            else:
+                mp = jax.tree.map(lambda a: a[m_i], p["mamba"])
+                st = None
+                if cache_p is not None:
+                    st = MambaState(cache_p["conv"][m_i], cache_p["ssm"][m_i])
+                y, st_new = mamba_block(mix_in, mp, st)
+                mamba_states.append(st_new)
+                m_i += 1
+            h = h + y
+            mlp_in = rms_norm(h, p["ln_mlp"][li], cfg.norm_eps)
+            if li % cfg.moe_every == 0:
+                mo = jax.tree.map(lambda a: a[moe_i], p["moe"])
+                y = moe_mlp(mlp_in, mo, top_k=cfg.top_k)
+                moe_i += 1
+            else:
+                ml = jax.tree.map(lambda a: a[mlp_i], p["mlp"])
+                y = swiglu_mlp(mlp_in, ml)
+                mlp_i += 1
+            h = h + y
+        outs = None
+        if new_cache is not None:
+            outs = {
+                "k": new_cache["k"],
+                "v": new_cache["v"],
+                "conv": jnp.stack([s.conv for s in mamba_states]),
+                "ssm": jnp.stack([s.ssm for s in mamba_states]),
+            }
+        elif cache_p is None and caches is None:
+            # training path still returns final mamba states for API parity
+            outs = {
+                "conv": jnp.stack([s.conv for s in mamba_states]),
+                "ssm": jnp.stack([s.ssm for s in mamba_states]),
+            }
+        return h, outs
+
+    cache_xs = None
+    if caches is not None:
+        cache_xs = {k: caches[k] for k in ("k", "v", "conv", "ssm")}
+    h, new_cache = jax.lax.scan(period, h, (lp, cache_xs))
+    if caches is not None:
+        s = positions.shape[-1]
+        new_cache = dict(new_cache, pos=slot_pos, len=caches["len"] + s)
+    return h, new_cache
+
+
+def _whisper_encode(params, frames, cfg):
+    """frames: (B, T_audio, D) precomputed frame embeddings (stub frontend)."""
+    ep = params["enc"]
+    h = frames + ep["pos"][None, : frames.shape[1]].astype(frames.dtype)
+    pos = jnp.arange(frames.shape[1])
+
+    def body(carry, p):
+        h = carry
+        a_in = rms_norm(h, p["ln1"], cfg.norm_eps)
+        a, _ = attention(
+            a_in, p["attn"], positions=pos, window=_FULL_WINDOW, rope_base=cfg.rope_base,
+            causal=False, use_rope=False, **_attn_kwargs(cfg),
+        )
+        h = h + a
+        h = h + gelu_mlp(rms_norm(h, p["ln2"], cfg.norm_eps), p["mlp"])
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, ep["layers"])
+    return rms_norm(h, ep["final_norm"], cfg.norm_eps)
+
+
+def _cross_attention(x, enc_out, p, cfg):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("btd,dkh->btkh", enc_out, p["wk"])
+    v = jnp.einsum("btd,dkh->btkh", enc_out, p["wv"])
+    group = cfg.n_heads // cfg.n_kv
+    qg = q.reshape(b, s, cfg.n_kv, group, cfg.hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * cfg.hd**-0.5
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(b, s, cfg.n_heads, cfg.hd)
+    return jnp.einsum("bsnh,nhd->bsd", out, p["wo"])
+
+
+def _whisper_decode_stack(params, h, enc_out, cfg, positions, caches=None):
+    lp = params["layers"]
+    pos_emb = jnp.take(params["dec_pos"], jnp.minimum(positions, cfg.max_seq - 1), axis=0)
+    h = h + pos_emb[None].astype(h.dtype)
+    slot_pos = _advance_slot_pos(caches, positions) if caches is not None else None
+
+    def body(carry, xs):
+        h = carry
+        p, cache_kv = xs
+        kv = None
+        if cache_kv is not None:
+            kv = (cache_kv["k"], cache_kv["v"], caches["len"], slot_pos)
+        a, new_kv = attention(
+            rms_norm(h, p["ln1"], cfg.norm_eps), p["attn"], positions=positions,
+            window=_FULL_WINDOW, rope_base=cfg.rope_base, kv_cache=kv,
+            use_rope=False, **_attn_kwargs(cfg),
+        )
+        h = h + a
+        h = h + _cross_attention(rms_norm(h, p["ln_x"], cfg.norm_eps), enc_out, p["xattn"], cfg)
+        h = h + gelu_mlp(rms_norm(h, p["ln2"], cfg.norm_eps), p["mlp"])
+        out_kv = {"k": new_kv[0], "v": new_kv[1]} if new_kv is not None else None
+        return h, out_kv
+
+    cache_xs = None
+    if caches is not None:
+        cache_xs = {"k": caches["k"], "v": caches["v"]}
+    h, new_cache = jax.lax.scan(body, h, (lp, cache_xs))
+    if caches is not None:
+        new_cache = {**new_cache, "pos": slot_pos, "len": caches["len"] + positions.shape[-1]}
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def forward_hidden(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                   extra: dict | None = None) -> jax.Array:
+    """Token ids -> final hidden states (pre final-norm applied)."""
+    h = embed(tokens, params["embed"]["table"])
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, _ = _decoder_stack(params, h, cfg, positions)
+    elif cfg.family == "ssm":
+        h, _ = _xlstm_stack(params, h, cfg)
+    elif cfg.family == "hybrid":
+        h, _ = _jamba_stack(params, h, cfg, positions)
+    elif cfg.family == "audio":
+        enc_out = _whisper_encode(params, extra["frames"], cfg)
+        h, _ = _whisper_decode_stack(params, h, enc_out, cfg, positions)
+    else:
+        raise ValueError(cfg.family)
+    return rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+
+def forward_loglik(params: Params, batch: dict, cfg: ModelConfig,
+                   ce_chunk: int = 512) -> jax.Array:
+    """Per-sequence log p(tokens | params): the MH local sections l_i.
+
+    batch: tokens (B, S) int32, mask (B, S) — next-token factorization;
+    audio adds frames (B, T_audio, D).
+    """
+    tokens = batch["tokens"]
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "mask")}
+    h = forward_hidden(params, tokens[:, :-1], cfg, extra or None)
+    targets = tokens[:, 1:]
+    mask = batch.get("mask")
+    mask = jnp.ones_like(targets) if mask is None else mask[:, 1:]
+    return unembed_loglik(h, params["embed"]["table"], targets, mask, chunk=ce_chunk)
+
+
+# -- serving ------------------------------------------------------------------
+
+
+def effective_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Uniform-SWA archs (mixtral) keep an O(window) ring buffer even for
+    500k contexts; everything else caches the full context."""
+    if cfg.window:
+        return min(max_len, cfg.window)
+    return max_len
+
+
+def cache_template(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """{name: ParamSpec} tree for the decode cache (shape + logical axes)."""
+    if dtype is None:
+        dtype = jnp.float8_e4m3fn if cfg.kv_cache_dtype == "fp8" else jnp.bfloat16
+    c = effective_cache_len(cfg, max_len)
+    fam = cfg.family
+    kv_log = ("layers", "batch", "kv_seq", "kv_heads", None)
+
+    def kv(n):
+        shape = (n, batch, c, cfg.n_kv, cfg.hd)
+        return {
+            "k": ParamSpec(shape, kv_log, dtype),
+            "v": ParamSpec(shape, kv_log, dtype),
+        }
+
+    scalar = ParamSpec((), (), jnp.int32)
+    posspec = ParamSpec((c,), (None,), jnp.int32)
+    if fam in ("dense", "moe", "vlm"):
+        return {**kv(cfg.n_layers), "pos": posspec, "len": scalar}
+    if fam == "ssm":
+        pairs = cfg.n_layers // 2
+        nh, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+        f32 = jnp.float32
+        return {
+            "m": (
+                ParamSpec((pairs, batch, nh, dh, dh), ("layers", "batch", "q_heads", None, None), f32),
+                ParamSpec((pairs, batch, nh, dh), ("layers", "batch", "q_heads", None), f32),
+                ParamSpec((pairs, batch, nh), ("layers", "batch", "q_heads"), f32),
+            ),
+            "s": tuple(
+                ParamSpec((pairs, batch, nh, dh), ("layers", "batch", "q_heads", None), f32)
+                for _ in range(4)
+            ),
+        }
+    if fam == "hybrid":
+        p = cfg.n_layers // cfg.attn_period
+        n_m = cfg.attn_period - 1
+        return {
+            **kv(p),
+            "conv": ParamSpec((p, n_m, batch, cfg.mamba_d_conv - 1, cfg.d_inner),
+                              ("layers", None, "batch", None, "mlp"), dtype),
+            "ssm": ParamSpec((p, n_m, batch, cfg.d_inner, cfg.mamba_d_state),
+                             ("layers", None, "batch", "mlp", None), jnp.float32),
+            "pos": posspec,
+            "len": scalar,
+        }
+    if fam == "audio":
+        return {
+            **kv(cfg.n_layers),
+            "pos": posspec,
+            "len": scalar,
+            "enc_out": ParamSpec((batch, cfg.n_audio_frames, cfg.d_model),
+                                 ("batch", None, "embed_tp"), dtype),
+        }
+    raise ValueError(fam)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the decode cache (dry-run serving input)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        cache_template(cfg, batch, max_len, dtype),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_out: jax.Array | None = None):
+    tree = abstract_cache(cfg, batch, max_len, dtype)
+
+    def zero(x):
+        if isinstance(x, jax.ShapeDtypeStruct):
+            return jnp.zeros(x.shape, x.dtype)
+        return x
+
+    cache = jax.tree.map(zero, tree)
+    if cfg.family == "ssm":
+        # mLSTM max-stabilizer starts at -inf-ish
+        m = list(cache["m"])
+        m[2] = jnp.full(m[2].shape, -1e30, m[2].dtype)
+        cache["m"] = tuple(m)
+    else:
+        cache["pos"] = jnp.full(cache["pos"].shape, -1, jnp.int32)
+    if enc_out is not None:
+        cache["enc_out"] = enc_out
+    return cache
+
+
+def _advance_slot_pos(cache: dict, positions: jax.Array):
+    """Advance the ring-buffer slot->absolute-position map once per step."""
+    slot_pos, length = cache["pos"], cache["len"]
+    c = slot_pos.shape[0]
+    s = positions.shape[-1]
+    if s >= c:  # (re)filling the whole ring: tail at slots p % C
+        shift = (s - c) % c
+        return jnp.roll(positions[-c:].astype(jnp.int32), shift)
+    ins = length % c
+    return jax.lax.dynamic_update_slice_in_dim(
+        slot_pos, positions.astype(jnp.int32), ins, axis=0
+    )
+
+
+def decode_step(params: Params, cache, tokens: jax.Array, cfg: ModelConfig):
+    """One-token decode: tokens (B, 1) -> (new_cache, logits (B, V))."""
+    h = embed(tokens, params["embed"]["table"])
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm", "audio", "hybrid"):
+        length = cache["len"]
+        positions = length + jnp.arange(tokens.shape[1])
+    if fam in ("dense", "moe", "vlm"):
+        h, cache = _decoder_stack(params, h, cfg, positions, caches=cache)
+    elif fam == "ssm":
+        h, cache = _xlstm_stack(params, h, cfg, states=cache)
+    elif fam == "hybrid":
+        h, cache = _jamba_stack(params, h, cfg, positions, caches=cache)
+    elif fam == "audio":
+        enc_out = cache["enc_out"]
+        sub = {k: cache[k] for k in ("k", "v", "pos", "len")}
+        h, sub = _whisper_decode_stack(params, h, enc_out, cfg, positions, caches=sub)
+        cache = {**cache, **sub}
+    else:
+        raise ValueError(fam)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"])
+    return cache, lc(logits[:, -1].astype(jnp.float32), ("batch", "vocab"))
+
+
+def prefill(params: Params, tokens: jax.Array, cfg: ModelConfig, max_len: int,
+            extra: dict | None = None):
+    """Process a full prompt, building the cache; returns (cache, last logits)."""
+    b, s = tokens.shape
+    fam = cfg.family
+    enc_out = None
+    if fam == "audio":
+        enc_out = _whisper_encode(params, extra["frames"], cfg)
+    cache = init_cache(cfg, b, max_len, enc_out=enc_out)
+    h = embed(tokens, params["embed"]["table"])
+    positions = jnp.arange(s)
+    if fam in ("dense", "moe", "vlm"):
+        h, cache = _decoder_stack(params, h, cfg, positions, caches=cache)
+    elif fam == "ssm":
+        h, cache = _xlstm_stack(params, h, cfg, states=cache)
+    elif fam == "hybrid":
+        h, cache = _jamba_stack(params, h, cfg, positions, caches=cache)
+    elif fam == "audio":
+        sub = {k: cache[k] for k in ("k", "v", "pos", "len")}
+        h, sub = _whisper_decode_stack(params, h, enc_out, cfg, positions, caches=sub)
+        cache = {**cache, **sub}
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"]["table"])
+    return cache, logits.astype(jnp.float32)

@@ -1,0 +1,82 @@
+"""Minimal functional optimizers (Adam, SGD, SGLD) over pytree params."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class AdamState(NamedTuple):
+    mu: Params
+    nu: Params
+    count: jax.Array
+
+
+def adam_init(params: Params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros), count=jnp.zeros((), jnp.int32))
+
+
+def adam_step(
+    grads: Params, state: AdamState, params: Params,
+    lr: float = 1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+) -> tuple[Params, AdamState]:
+    count = state.count + 1
+    cf = count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1**cf)
+        vh = v / (1 - b2**cf)
+        new_p = p.astype(jnp.float32) - lr * mh / (jnp.sqrt(vh) + eps)
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamState(new_mu, new_nu, count)
+
+
+def sgd_step(grads: Params, params: Params, lr: float = 1e-2) -> Params:
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params, grads,
+    )
+
+
+def sgld_step(
+    key: jax.Array, grads: Params, params: Params, lr: float, temperature: float = 1.0
+) -> Params:
+    """Stochastic gradient Langevin dynamics: the classic scalable-Bayes
+    comparator to subsampled MH."""
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(leaves))
+    gleaves = treedef.flatten_up_to(grads)
+    noise_scale = (2.0 * lr * temperature) ** 0.5
+    new = [
+        (
+            p.astype(jnp.float32)
+            + lr * g.astype(jnp.float32)
+            + noise_scale * jax.random.normal(k, p.shape, jnp.float32)
+        ).astype(p.dtype)
+        for p, g, k in zip(leaves, gleaves, keys)
+    ]
+    return jax.tree.unflatten(treedef, new)
+
+
+def lm_loss_fn(cfg):
+    """Mean negative log-likelihood per token (for the Adam/SGD substrate)."""
+    from ..models.transformer import forward_loglik
+
+    def loss(params, batch):
+        ll = forward_loglik(params, batch, cfg)
+        denom = jnp.maximum(batch["mask"][:, 1:].sum(), 1)
+        return -ll.sum() / denom
+
+    return loss

@@ -1,0 +1,34 @@
+"""PET layer: probabilistic execution traces, scaffolds, and lowering.
+
+Faithful implementations of the paper's Defs. 1–8 plus the `plate`
+vectorization bridge to the core MH kernels.
+"""
+from . import dists
+from .compile import compile_partitioned_target
+from .trace import (
+    Node,
+    Plate,
+    Scaffold,
+    Trace,
+    absorbing_set,
+    border_node,
+    partition,
+    scaffold,
+    target_set,
+    transient_set,
+)
+
+__all__ = [
+    "Node",
+    "Plate",
+    "Scaffold",
+    "Trace",
+    "absorbing_set",
+    "border_node",
+    "compile_partitioned_target",
+    "dists",
+    "partition",
+    "scaffold",
+    "target_set",
+    "transient_set",
+]

@@ -1,0 +1,111 @@
+"""Lower a (trace, variable) pair to the tensorized ``core.PartitionedTarget``.
+
+This is the bridge between the faithful PET graph (Defs. 1–8) and the
+TPU-friendly interface consumed by the MH kernels: the scaffold is computed
+symbolically on the graph, partitioned at the border node, and the local
+sections — stored structure-of-arrays inside a ``Plate`` — are scored by one
+vectorized log-density evaluation per mini-batch (DESIGN.md §3).
+
+Restrictions enforced here mirror the paper's Sec. 3.1 assumptions:
+T(rho, v) = ∅ and all local sections attach through a single border node.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax.numpy as jnp
+
+from ..core.target import PartitionedTarget
+from .trace import Node, Plate, Trace, border_node, partition, scaffold
+
+
+def _topo(nodes) -> list[Node]:
+    return sorted(nodes, key=lambda n: n.nid)  # eager build ⇒ nid order is topological
+
+
+class _Evaluator:
+    """Re-evaluates scaffold nodes under a substituted value for v.
+
+    env maps nid -> overridden value. Plate-member values carry a leading
+    section axis; evaluating with ``idx`` gathers rows of stacked values, so
+    deterministic recomputation and scoring are vectorized over the batch.
+    """
+
+    def __init__(self, trace: Trace, v: Node, plate: Plate | None, sc):
+        self.trace, self.v, self.plate = trace, v, plate
+        self.det_global = _topo(
+            n for n in sc.D if n.kind == "deterministic" and n.plate is None
+        )
+        self.det_local = _topo(
+            n for n in sc.nodes if n.kind == "deterministic" and n.plate is not None
+        )
+        # scoring nodes: stochastic members of the scaffold (v's prior + absorbers)
+        self.score_global = _topo(
+            n
+            for n in sc.nodes
+            if n.kind == "stochastic" and n.plate is None and n is not v
+        )
+        self.score_local = _topo(
+            n for n in sc.nodes if n.kind == "stochastic" and n.plate is not None
+        )
+
+    def _val(self, node: Node, env: dict, idx):
+        val = env.get(node.nid, node.value)
+        if idx is not None and node.plate is not None and node.nid not in env:
+            val = jnp.asarray(val)[idx]
+        return val
+
+    def global_score(self, theta) -> Any:
+        env = {self.v.nid: theta}
+        for n in self.det_global:
+            env[n.nid] = n.fn(*[self._val(p, env, None) for p in n.parents])
+        v = self.v
+        out = jnp.sum(v.dist.logpdf(theta, *[self._val(p, env, None) for p in v.parents]))
+        for n in self.score_global:
+            params = [self._val(p, env, None) for p in n.parents]
+            out = out + jnp.sum(n.dist.logpdf(self._val(n, env, None), *params))
+        return out
+
+    def local_score(self, theta, idx) -> Any:
+        env = {self.v.nid: theta}
+        for n in self.det_global:
+            env[n.nid] = n.fn(*[self._val(p, env, None) for p in n.parents])
+        for n in self.det_local:
+            env[n.nid] = n.fn(*[self._val(p, env, idx) for p in n.parents])
+        out = jnp.zeros(idx.shape, jnp.float32)
+        for n in self.score_local:
+            params = [self._val(p, env, idx) for p in n.parents]
+            out = out + n.dist.logpdf(self._val(n, env, idx), *params)
+        return out
+
+
+def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
+    """Scaffold → border-node partition → PartitionedTarget."""
+    sc = scaffold(trace, v)
+    global_nodes, plate = partition(trace, sc)
+    del global_nodes  # evaluator re-derives roles from the scaffold
+    if plate is None:
+        raise ValueError(
+            f"scaffold of {v} has no plate-shaped local sections; use exact MH"
+        )
+    b = border_node(trace, sc)
+    del b
+    ev = _Evaluator(trace, v, plate, sc)
+    n_sections = plate.size
+
+    def log_global(theta, theta_p):
+        return ev.global_score(theta_p) - ev.global_score(theta)
+
+    def log_local(theta, theta_p, idx):
+        return ev.local_score(theta_p, idx) - ev.local_score(theta, idx)
+
+    def log_density(theta):
+        idx = jnp.arange(n_sections, dtype=jnp.int32)
+        return ev.global_score(theta) + ev.local_score(theta, idx).sum()
+
+    return PartitionedTarget(
+        num_sections=n_sections,
+        log_global=log_global,
+        log_local=log_local,
+        log_density=log_density,
+    )

@@ -1,0 +1,110 @@
+"""Primitive distributions for the PET layer (log-pdfs + forward samplers).
+
+Shapes broadcast; logpdf returns elementwise log densities (callers sum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+_LOG2PI = 1.8378770664093453
+
+
+@dataclasses.dataclass(frozen=True)
+class Distribution:
+    def logpdf(self, x, *params):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def sample(self, key, *params, shape=()):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class Normal(Distribution):
+    def logpdf(self, x, loc, scale):
+        z = (x - loc) / scale
+        return -0.5 * (z * z + _LOG2PI) - jnp.log(scale)
+
+    def sample(self, key, loc, scale, shape=()):
+        return loc + scale * jax.random.normal(key, shape)
+
+
+class Bernoulli(Distribution):
+    """Support {0., 1.}; parameterized by probability p."""
+
+    def logpdf(self, x, p):
+        p = jnp.clip(p, 1e-7, 1 - 1e-7)
+        return x * jnp.log(p) + (1 - x) * jnp.log1p(-p)
+
+    def sample(self, key, p, shape=()):
+        return jax.random.bernoulli(key, p, shape).astype(jnp.float32)
+
+
+class BernoulliLogits(Distribution):
+    """Support {-1., +1.} with logits z: log p(y|z) = -log(1 + exp(-y z)).
+
+    This is the Logit(y|x, w) factor of the paper's regression models.
+    """
+
+    def logpdf(self, y, z):
+        return -jnp.logaddexp(0.0, -y * z)
+
+    def sample(self, key, z, shape=()):
+        p = jax.nn.sigmoid(z)
+        return jnp.where(jax.random.bernoulli(key, p, shape), 1.0, -1.0)
+
+
+class Gamma(Distribution):
+    def logpdf(self, x, a, rate):
+        return a * jnp.log(rate) - jax.lax.lgamma(a) + (a - 1) * jnp.log(x) - rate * x
+
+    def sample(self, key, a, rate, shape=()):
+        return jax.random.gamma(key, a, shape) / rate
+
+
+class InvGamma(Distribution):
+    def logpdf(self, x, a, scale):
+        return a * jnp.log(scale) - jax.lax.lgamma(a) - (a + 1) * jnp.log(x) - scale / x
+
+    def sample(self, key, a, scale, shape=()):
+        return scale / jax.random.gamma(key, a, shape)
+
+
+class Beta(Distribution):
+    def logpdf(self, x, a, b):
+        lbeta = jax.lax.lgamma(a) + jax.lax.lgamma(b) - jax.lax.lgamma(a + b)
+        return (a - 1) * jnp.log(x) + (b - 1) * jnp.log1p(-x) - lbeta
+
+    def sample(self, key, a, b, shape=()):
+        return jax.random.beta(key, a, b, shape)
+
+
+class MVNormalDiag(Distribution):
+    def logpdf(self, x, loc, scale):
+        z = (x - loc) / scale
+        return jnp.sum(-0.5 * (z * z + _LOG2PI) - jnp.log(scale), axis=-1)
+
+    def sample(self, key, loc, scale, shape=()):
+        return loc + scale * jax.random.normal(key, shape + jnp.shape(loc))
+
+
+class Uniform(Distribution):
+    def logpdf(self, x, lo, hi):
+        inside = (x >= lo) & (x <= hi)
+        return jnp.where(inside, -jnp.log(hi - lo), -jnp.inf)
+
+    def sample(self, key, lo, hi, shape=()):
+        return jax.random.uniform(key, shape, minval=lo, maxval=hi)
+
+
+normal = Normal()
+bernoulli = Bernoulli()
+bernoulli_logits = BernoulliLogits()
+gamma = Gamma()
+inv_gamma = InvGamma()
+beta = Beta()
+mvnormal_diag = MVNormalDiag()
+uniform = Uniform()

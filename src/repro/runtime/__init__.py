@@ -1,0 +1,4 @@
+"""Fault-tolerant runtime loops."""
+from .train_loop import InjectedFailure, LoopConfig, PreemptionRequested, run_loop
+
+__all__ = ["InjectedFailure", "LoopConfig", "PreemptionRequested", "run_loop"]

@@ -1,0 +1,114 @@
+"""Multi-device tests (subprocess: jax locks device count at first init).
+
+These actually EXECUTE sharded steps on 8 forced host devices — complementing
+the dry-run, which only lowers+compiles on 512.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(script: str) -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=_REPO, timeout=900,
+    )
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_train_step_matches_single_device():
+    """Subsampled-MH train step on a (2,4) mesh == single-device result."""
+    script = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.bayes import TrainConfig, make_train_step
+from repro.configs import ARCHS, reduce_config
+from repro.data import DataConfig, TokenStream
+from repro.distributed.sharding import logical_axis_rules, named_sharding
+from repro.models import init_params
+
+rc = reduce_config(ARCHS["chatglm3-6b"])
+tc = TrainConfig(round_batch=4, max_rounds=2, epsilon=0.3, sigma=1e-3)
+params = init_params(jax.random.key(0), rc)
+batch = TokenStream(DataConfig(vocab=rc.vocab, seq_len=32, global_batch=8, seed=0)).batch(0)
+step = make_train_step(rc, tc)
+
+# single device reference
+ref, ref_info = jax.jit(step)(jax.random.key(7), params, batch)
+ref_leaf = np.asarray(jax.tree.leaves(ref)[0], dtype=np.float32)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+with logical_axis_rules(mesh), mesh:
+    from repro.launch.steps import spec_tree_to_shardings
+    from repro.models import param_specs
+    psh = spec_tree_to_shardings(param_specs(rc), mesh)
+    bsh = {k: named_sharding(mesh, v.shape, ("batch",) + (None,) * (v.ndim - 1))
+           for k, v in batch.items()}
+    params_s = jax.device_put(params, psh)
+    batch_s = {k: jax.device_put(v, bsh[k]) for k, v in batch.items()}
+    out, info = jax.jit(step, in_shardings=(None, psh, bsh),
+                        out_shardings=(psh, None))(jax.random.key(7), params_s, batch_s)
+    out_leaf = np.asarray(jax.tree.leaves(out)[0], dtype=np.float32)
+
+print(json.dumps({
+    "accept_match": bool(info.accepted) == bool(ref_info.accepted),
+    "max_diff": float(np.max(np.abs(out_leaf - ref_leaf))),
+    "n_devices": len(jax.devices()),
+}))
+"""
+    res = _run(script)
+    assert res["n_devices"] == 8
+    assert res["accept_match"]
+    assert res["max_diff"] < 2e-2, res
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_reshard_across_meshes():
+    """Save params sharded on a (4,2) mesh, restore onto (2,4): values equal."""
+    script = r"""
+import json, tempfile
+import jax, numpy as np
+from repro.checkpoint import manager as ckpt
+from repro.configs import ARCHS, reduce_config
+from repro.distributed.sharding import logical_axis_rules
+from repro.launch.steps import spec_tree_to_shardings
+from repro.models import init_params, param_specs
+
+rc = reduce_config(ARCHS["xlstm-350m"])
+params = init_params(jax.random.key(0), rc)
+d = tempfile.mkdtemp()
+
+mesh_a = jax.make_mesh((4, 2), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh_a = spec_tree_to_shardings(param_specs(rc), mesh_a)
+ckpt.save(d, 3, jax.device_put(params, sh_a))
+
+mesh_b = jax.make_mesh((2, 4), ("data", "model"),
+                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sh_b = spec_tree_to_shardings(param_specs(rc), mesh_b)
+step, restored = ckpt.restore(d, target=params, shardings=sh_b)
+ok = all(
+    np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored))
+)
+shards_ok = all(
+    l.sharding.is_equivalent_to(s, l.ndim)
+    for l, s in zip(jax.tree.leaves(restored), jax.tree.leaves(sh_b))
+)
+print(json.dumps({"step": int(step), "values_equal": ok, "resharded": shards_ok}))
+"""
+    res = _run(script)
+    assert res["step"] == 3
+    assert res["values_equal"]
+    assert res["resharded"]

@@ -1,0 +1,184 @@
+"""Architecture smoke + correctness tests (reduced configs, CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, reduce_config, shape_applicable
+from repro.models import (
+    abstract_cache,
+    decode_step,
+    forward_hidden,
+    forward_loglik,
+    init_params,
+    param_specs,
+    prefill,
+)
+from repro.models.layers import ParamSpec, _attend_dense, _attend_flash, moe_mlp
+
+ARCH_NAMES = list(ARCHS)
+
+
+def _make_batch(rc, b=2, s=32, seed=2):
+    tokens = jax.random.randint(jax.random.key(seed), (b, s), 0, rc.vocab)
+    batch = {"tokens": tokens, "mask": jnp.ones((b, s), jnp.int32)}
+    if rc.family == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.key(seed + 1), (b, rc.n_audio_frames, rc.d_model), jnp.bfloat16
+        )
+    return batch
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_forward_loglik(name):
+    rc = reduce_config(ARCHS[name])
+    params = init_params(jax.random.key(1), rc)
+    batch = _make_batch(rc)
+    ll = jax.jit(lambda p, b: forward_loglik(p, b, rc))(params, batch)
+    assert ll.shape == (2,)
+    assert bool(jnp.isfinite(ll).all()), f"{name}: non-finite loglik"
+    assert float(ll.max()) < 0.0, "loglik must be negative"
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_arch_smoke_train_step(name):
+    """One subsampled-MH train step on the reduced config (CPU)."""
+    from repro.bayes import TrainConfig, make_train_step
+
+    rc = reduce_config(ARCHS[name])
+    tc = TrainConfig(round_batch=2, max_rounds=2, epsilon=0.5, sigma=1e-4)
+    params = init_params(jax.random.key(1), rc)
+    batch = _make_batch(rc, b=4)
+    step = jax.jit(make_train_step(rc, tc))
+    new_params, info = step(jax.random.key(2), params, batch)
+    leaves = jax.tree.leaves(new_params)
+    assert all(bool(jnp.isfinite(l.astype(jnp.float32)).all()) for l in leaves), name
+    assert info.rounds.dtype == jnp.int32
+
+
+@pytest.mark.parametrize("name", ["qwen1.5-32b", "mixtral-8x22b", "xlstm-350m",
+                                  "jamba-v0.1-52b", "whisper-base"])
+def test_decode_matches_teacher_forcing(name):
+    """prefill + decode_step logits == full-forward logits at each position."""
+    rc = reduce_config(ARCHS[name])
+    params = init_params(jax.random.key(1), rc)
+    b, s = 2, 24
+    batch = _make_batch(rc, b=b, s=s)
+    tokens = batch["tokens"]
+    extra = {"frames": batch["frames"]} if rc.family == "audio" else None
+
+    h = forward_hidden(params, tokens, rc, extra)
+    from repro.models.layers import rms_norm  # noqa: F401 (final norm applied inside)
+
+    full_logits = jnp.einsum(
+        "bsd,vd->bsv", h, params["embed"]["table"]
+    ).astype(jnp.float32)
+
+    n_pre = s // 2
+    cache, lg = prefill(params, tokens[:, :n_pre], rc, max_len=64, extra=extra)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, n_pre - 1]), rtol=0.15, atol=0.15
+    )
+    for t in range(n_pre, min(n_pre + 4, s)):
+        cache, lg = decode_step(params, cache, tokens[:, t : t + 1], rc)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]), rtol=0.2, atol=0.2
+        )
+
+
+def test_flash_attention_matches_dense():
+    key = jax.random.key(0)
+    b, s, n_kv, group, hd = 2, 64, 2, 3, 16
+    qg = jax.random.normal(key, (b, s, n_kv, group, hd), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (b, s, n_kv, hd), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (b, s, n_kv, hd), jnp.float32)
+    pos = jnp.arange(s)
+    for window in (1 << 30, 16):
+        for causal in (True, False):
+            dense = _attend_dense(qg, k, v, pos, pos, window, causal, hd**-0.5)
+            flash = _attend_flash(
+                qg, k, v, pos, pos, window, causal, hd**-0.5, chunk_q=16, chunk_kv=24
+            )
+            np.testing.assert_allclose(
+                np.asarray(dense), np.asarray(flash), rtol=2e-3, atol=2e-3
+            )
+
+
+def test_moe_matches_dense_reference():
+    """Capacity-bounded dispatch == explicit per-expert loop when capacity
+    is large enough to drop nothing."""
+    key = jax.random.key(0)
+    b, s, d, f, e, k = 2, 8, 16, 32, 4, 2
+    x = jax.random.normal(key, (b, s, d), jnp.float32)
+    p = {
+        "router": jax.random.normal(jax.random.key(1), (d, e)) * 0.1,
+        "wi_gate": jax.random.normal(jax.random.key(2), (e, d, f)) * 0.1,
+        "wi_up": jax.random.normal(jax.random.key(3), (e, d, f)) * 0.1,
+        "wo": jax.random.normal(jax.random.key(4), (e, f, d)) * 0.1,
+    }
+    got = moe_mlp(x, p, top_k=k, capacity_factor=float(e))  # no drops
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    gate_all = jax.nn.softmax(logits, -1)
+    gate, sel = jax.lax.top_k(gate_all, k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    want = jnp.zeros_like(x)
+    for ei in range(e):
+        g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["wi_gate"][ei]))
+        u = jnp.einsum("bsd,df->bsf", x, p["wi_up"][ei])
+        y = jnp.einsum("bsf,fd->bsd", g * u, p["wo"][ei])
+        w = ((sel == ei) * gate).sum(-1)
+        want = want + w[..., None] * y
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_ring_cache_matches_full_history():
+    """Windowed decode with an O(window) ring == decode with a full cache."""
+    import dataclasses
+
+    rc = dataclasses.replace(reduce_config(ARCHS["mixtral-8x22b"]), window=8)
+    params = init_params(jax.random.key(1), rc)
+    tokens = jax.random.randint(jax.random.key(2), (1, 30), 0, rc.vocab)
+    # ring cache (cache_len = window = 8)
+    cache_r, _ = prefill(params, tokens[:, :20], rc, max_len=512)
+    assert cache_r["k"].shape[2] == 8
+    # full-history reference: window mask still applies, cache holds everything
+    rc_full = dataclasses.replace(rc, window=None, local_window=8, global_every=None)
+    # emulate: full cache but same window mask via explicit config is complex;
+    # instead compare against teacher forcing directly
+    h = forward_hidden(params, tokens, rc)
+    full_logits = jnp.einsum("bsd,vd->bsv", h, params["embed"]["table"]).astype(jnp.float32)
+    cache, lg = cache_r, None
+    for t in range(20, 26):
+        cache, lg = decode_step(params, cache, tokens[:, t : t + 1], rc)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]), rtol=0.2, atol=0.2
+        )
+
+
+@pytest.mark.parametrize("name", ARCH_NAMES)
+def test_param_specs_match_init(name):
+    rc = reduce_config(ARCHS[name])
+    specs = param_specs(rc)
+    params = init_params(jax.random.key(0), rc)
+    flat_s = jax.tree.leaves_with_path(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    flat_p = jax.tree.leaves_with_path(params)
+    assert len(flat_s) == len(flat_p)
+    key_fn = lambda kv: str(kv[0])  # noqa: E731
+    for (ps, spec), (pp, leaf) in zip(sorted(flat_s, key=key_fn), sorted(flat_p, key=key_fn)):
+        assert ps == pp
+        assert tuple(spec.shape) == tuple(leaf.shape), (ps, spec.shape, leaf.shape)
+        assert len(spec.shape) == len(spec.logical), f"{ps}: logical axes rank mismatch"
+
+
+def test_shape_applicability_matrix():
+    cells = [(a, s) for a in ARCHS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if shape_applicable(*c)[0]]
+    skipped = [c for c in cells if not shape_applicable(*c)[0]]
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "qwen1.5-32b", "gemma3-4b", "internlm2-20b", "chatglm3-6b",
+        "whisper-base", "chameleon-34b", "phi3.5-moe-42b-a6.6b",
+    }
+    assert len(runnable) == 33
