@@ -14,12 +14,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,fig6,fig9,kernels,roofline")
+                    help="comma list: fig4,fig5,fig6,fig9,kernels,roofline,multichain")
     args = ap.parse_args()
     fast = not args.full
 
     from . import fig4_bayeslr, fig5_sublinear, fig6_jointdpm, fig9_sv
-    from . import kernels_bench, roofline
+    from . import kernels_bench, multichain_bench, roofline
 
     benches = {
         "fig5": fig5_sublinear,
@@ -28,6 +28,7 @@ def main() -> None:
         "fig9": fig9_sv,
         "kernels": kernels_bench,
         "roofline": roofline,
+        "multichain": multichain_bench,
     }
     selected = args.only.split(",") if args.only else list(benches)
 

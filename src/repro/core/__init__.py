@@ -10,6 +10,7 @@ The paper's primary contribution as a composable JAX module:
   - ``run_chain`` drivers and Sec-3.3 safeguard diagnostics.
 """
 from .chain import acceptance_rate, run_chain, run_chain_timed
+from .ensemble import ChainEnsemble, EnsembleState, run_ensemble
 from .mh import MHInfo, mh_step
 from .proposals import MALA, IndependentGaussian, RandomWalk
 from .samplers import (
@@ -30,9 +31,12 @@ from .stats import (
     Welford,
     autocorrelation,
     effective_sample_size,
+    ensemble_summary,
     finite_population_std_err,
     jarque_bera,
+    multichain_ess,
     predictive_risk,
+    split_rhat,
     student_t_sf,
     two_sided_t_pvalue,
 )
@@ -41,6 +45,8 @@ from .target import PartitionedTarget, from_iid_loglik
 
 __all__ = [
     "MALA",
+    "ChainEnsemble",
+    "EnsembleState",
     "FisherYatesState",
     "IndependentGaussian",
     "MHInfo",
@@ -55,6 +61,7 @@ __all__ = [
     "acceptance_rate",
     "autocorrelation",
     "effective_sample_size",
+    "ensemble_summary",
     "expected_batches_theoretical",
     "finite_population_std_err",
     "from_iid_loglik",
@@ -66,10 +73,13 @@ __all__ = [
     "make_kernel",
     "make_sampler",
     "mh_step",
+    "multichain_ess",
     "predictive_risk",
     "run_chain",
     "run_chain_timed",
+    "run_ensemble",
     "sequential_test",
+    "split_rhat",
     "stream_draw",
     "stream_init",
     "stream_reset",

@@ -1,4 +1,10 @@
-"""Chain drivers: jitted scan loops and timed host loops for benchmarks."""
+"""Single-chain drivers: jitted scan loops and timed host loops for benchmarks.
+
+For K chains at once (batched keys/theta/sampler states, one jitted program,
+optional multi-device fan-out) use :class:`repro.core.ensemble.ChainEnsemble`
+— chain k of an ensemble seeded with per-chain key k reproduces
+:func:`run_chain` with that key step for step.
+"""
 from __future__ import annotations
 
 import time
@@ -31,6 +37,9 @@ def run_chain(
     Returns (theta_final, collected_samples, infos) with leaves stacked on a
     leading time axis. ``collect`` maps theta -> whatever should be recorded
     per step (defaults to theta itself — fine for small parameter trees).
+
+    See :class:`repro.core.ensemble.ChainEnsemble` for the vmapped K-chain
+    version of this loop (same per-chain key-splitting discipline).
     """
     collect = collect or (lambda t: t)
     config = config or SubsampledMHConfig()
@@ -77,6 +86,11 @@ def run_chain_timed(
 
     Returns dict with samples (list), infos (list of dicts), times (np array
     of cumulative seconds).
+
+    For aggregate-throughput timing across many chains use
+    :meth:`repro.core.ensemble.ChainEnsemble.run_timed`, which amortizes the
+    per-step host dispatch this loop pays deliberately (it wants per-
+    transition timestamps).
     """
     collect = collect or (lambda t: t)
     config = config or SubsampledMHConfig()

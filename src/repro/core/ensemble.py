@@ -1,0 +1,266 @@
+"""Vectorized multi-chain execution: K independent MH chains in one program.
+
+The paper's sublinear bound is *per transition*; aggregate throughput comes
+from running many chains at once (the ensemble / parallel-chain pattern of
+Angelino et al., *Patterns of Scalable Bayesian Inference*). ``ChainEnsemble``
+lifts the single-chain kernels in this package over a leading chain axis:
+
+  * ``jax.vmap`` over :func:`repro.core.subsampled_mh.subsampled_mh_step`
+    (or the exact :func:`repro.core.mh.mh_step`) — batched PRNG keys,
+    batched theta pytrees, batched Fisher–Yates sampler states — so K
+    transitions compile to ONE jitted program and every mini-batch
+    evaluation is a (K, m) block instead of K separate (m,) calls,
+  * per-chain semantics are preserved exactly: chain k of the ensemble,
+    seeded with key k, produces the same trajectory as a sequential
+    :func:`repro.core.chain.run_chain` call with that key (the batched
+    while_loop masks finished lanes, it never perturbs them),
+  * an optional ``shard_map`` fan-out over a chain mesh axis spreads the
+    ensemble across devices (see :mod:`repro.distributed.sharding` for the
+    data-axis counterpart); on one device it is skipped entirely.
+
+Downstream, :func:`repro.core.stats.split_rhat` /
+:func:`repro.core.stats.ensemble_summary` consume the (K, T) outputs for
+cross-chain convergence diagnostics, and the fused (K, m) likelihood block
+has a Pallas twin in :mod:`repro.kernels.batched_loglik`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .mh import mh_step
+from .subsampled_mh import SubsampledMHConfig, make_kernel
+from .target import PartitionedTarget
+
+Params = Any
+
+
+class EnsembleState(NamedTuple):
+    """Per-chain carried state; every leaf has a leading (K,) chain axis."""
+
+    theta: Params
+    sampler_state: Any  # batched sampler pytree ("exact" kernel: dummy zeros)
+
+    @property
+    def num_chains(self) -> int:
+        return jax.tree.leaves(self.theta)[0].shape[0]
+
+
+def _broadcast_chain_axis(tree: Params, num_chains: int) -> Params:
+    """Tile every leaf with a leading chain axis (identical initial chains)."""
+
+    def tile(leaf):
+        leaf = jnp.asarray(leaf)
+        return jnp.broadcast_to(leaf[None], (num_chains,) + leaf.shape)
+
+    return jax.tree.map(tile, tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainEnsemble:
+    """K independent MH chains advanced in lock-step inside one jitted scan.
+
+    Usage::
+
+        ens = ChainEnsemble(target, RandomWalk(0.05), num_chains=16)
+        state = ens.init(theta0)                      # broadcast K chains
+        state, samples, infos = ens.run(key, state, num_steps=1000)
+        # samples: (K, num_steps, ...); infos leaves: (K, num_steps)
+
+    ``run`` splits ``key`` into one key per chain and, per chain, into one
+    key per step exactly like :func:`repro.core.chain.run_chain` does — so
+    passing per-chain keys (a ``(K,)`` key array) reproduces K sequential
+    ``run_chain`` calls bit-for-bit on elementwise targets.
+
+    With multiple devices visible (and ``shard="auto"`` or ``True``), the
+    vmapped step is wrapped in ``shard_map`` over a 1-d chain mesh, so each
+    device advances ``K / n_devices`` chains with zero cross-device traffic.
+    """
+
+    target: PartitionedTarget
+    proposal: Any
+    num_chains: int
+    kernel: str = "subsampled"  # "subsampled" | "exact"
+    config: SubsampledMHConfig | None = None
+    chunk_size: int | None = None  # exact kernel: lax.map chunking
+    collect: Callable[[Params], Any] | None = None
+    shard: Any = "auto"  # "auto" | True | False — shard_map over chains
+    chain_axis: str = "chains"
+
+    def __post_init__(self):
+        if self.kernel not in ("subsampled", "exact"):
+            raise ValueError(f"unknown kernel {self.kernel!r}")
+
+    # -- state ------------------------------------------------------------
+
+    def init(self, theta0: Params, *, batched: bool = False) -> EnsembleState:
+        """Build the batched initial state.
+
+        ``theta0`` is a single pytree broadcast to all chains, or (with
+        ``batched=True``) a pytree whose leaves already carry a leading
+        (num_chains,) axis — e.g. overdispersed starting points for R-hat.
+        """
+        theta = theta0 if batched else _broadcast_chain_axis(theta0, self.num_chains)
+        lead = jax.tree.leaves(theta)[0].shape[0]
+        if lead != self.num_chains:
+            raise ValueError(f"theta leading axis {lead} != num_chains {self.num_chains}")
+        if self.kernel == "subsampled":
+            state0, _ = make_kernel(self.target, self.proposal, self.config or SubsampledMHConfig())
+            sampler = _broadcast_chain_axis(state0, self.num_chains)
+        else:
+            sampler = jnp.zeros((self.num_chains,), jnp.int32)
+        return EnsembleState(theta, sampler)
+
+    # -- single-chain step with a uniform (key, theta, state) signature ---
+
+    def _make_step(self):
+        if self.kernel == "subsampled":
+            _, step = make_kernel(self.target, self.proposal, self.config or SubsampledMHConfig())
+            return step
+
+        def exact_step(key, theta, state):
+            theta, info = mh_step(key, theta, self.target, self.proposal, chunk_size=self.chunk_size)
+            return theta, state, info
+
+        return exact_step
+
+    def _per_chain_keys(self, key: jax.Array) -> jax.Array:
+        key = jnp.asarray(key)
+        typed = jnp.issubdtype(key.dtype, jax.dtypes.prng_key)
+        # Per-chain keys are a (K,) typed-key array or (K, 2) legacy uint32
+        # array; a bare legacy key of shape (2,) must NOT be mistaken for two
+        # per-chain keys when num_chains == 2.
+        batched = (key.ndim == 1 and typed) or (key.ndim == 2 and not typed)
+        if batched and key.shape[0] == self.num_chains:
+            return key
+        return jax.random.split(key, self.num_chains)
+
+    @functools.cached_property
+    def _run_jit(self):
+        step = self._make_step()
+        collect = self.collect or (lambda t: t)
+
+        def one_chain(key, theta0, sampler0, num_steps):
+            keys = jax.random.split(key, num_steps)
+
+            def body(carry, k):
+                theta, sstate = carry
+                theta, sstate, info = step(k, theta, sstate)
+                return (theta, sstate), (collect(theta), info)
+
+            (theta, sstate), (samples, infos) = jax.lax.scan(body, (theta0, sampler0), keys)
+            return theta, sstate, samples, infos
+
+        def run_all(keys, theta, sampler, num_steps):
+            fn = jax.vmap(lambda k, t, s: one_chain(k, t, s, num_steps))
+            mesh = self._chain_mesh()
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+
+                spec = P(self.chain_axis)
+                fn = shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
+                               out_specs=(spec, spec, spec, spec), check_rep=False)
+            return fn(keys, theta, sampler)
+
+        return jax.jit(run_all, static_argnames=("num_steps",))
+
+    def _chain_mesh(self):
+        if self.shard is False:
+            return None
+        devices = jax.devices()
+        if len(devices) <= 1:
+            return None  # single device: the plain vmap path is identical
+        if self.num_chains % len(devices) != 0:
+            if self.shard is True:
+                raise ValueError(
+                    f"shard=True needs num_chains ({self.num_chains}) divisible "
+                    f"by the device count ({len(devices)})"
+                )
+            return None
+        from jax.sharding import Mesh
+
+        import numpy as np
+
+        return Mesh(np.asarray(devices), (self.chain_axis,))
+
+    # -- drivers ----------------------------------------------------------
+
+    def run(self, key: jax.Array, state: EnsembleState, num_steps: int):
+        """Advance every chain ``num_steps`` transitions in one XLA program.
+
+        Returns ``(state, samples, infos)`` with ``samples`` leaves shaped
+        (K, num_steps, ...) and ``infos`` leaves (K, num_steps).
+        """
+        keys = self._per_chain_keys(key)
+        theta, sampler, samples, infos = self._run_jit(
+            keys, state.theta, state.sampler_state, num_steps=num_steps
+        )
+        return EnsembleState(theta, sampler), samples, infos
+
+    def run_timed(self, key: jax.Array, state: EnsembleState, num_steps: int,
+                  block_every: int = 1):
+        """Host-chunked loop recording wall clock, the multi-chain analog of
+        :func:`repro.core.chain.run_chain_timed`. Compile time is excluded.
+
+        Returns (state, dict) with ``transitions_per_sec`` aggregated over
+        chains — the number ``benchmarks/multichain_bench.py`` reports.
+        """
+        import time
+
+        import numpy as np
+
+        keys = self._per_chain_keys(key)
+        # Warm up every program the timed loop dispatches: each block size the
+        # loop will request (num_steps is a static jit argument, so a ragged
+        # final block would otherwise compile inside the timed region) and the
+        # per-chain key-advance splitter.
+        split_all = jax.jit(jax.vmap(lambda k: jax.random.split(k)))
+        jax.block_until_ready(split_all(keys))
+        block_sizes = {min(block_every, num_steps)}
+        if num_steps % block_every:
+            block_sizes.add(num_steps % block_every)
+        for n in block_sizes:
+            warm, _, _ = self.run(keys, state, n)
+            jax.block_until_ready(warm.theta)
+        samples_blocks, infos_blocks = [], []
+        t0 = time.perf_counter()
+        done = 0
+        while done < num_steps:
+            n = min(block_every, num_steps - done)
+            pairs = split_all(keys)
+            keys, subs = pairs[:, 0], pairs[:, 1]
+            state, samples, infos = self.run(subs, state, n)
+            jax.block_until_ready(state.theta)
+            samples_blocks.append(samples)
+            infos_blocks.append(infos)
+            done += n
+        wall = time.perf_counter() - t0
+        cat = lambda xs: jax.tree.map(lambda *ls: np.concatenate([np.asarray(l) for l in ls], axis=1), *xs)
+        return state, {
+            "samples": cat(samples_blocks),
+            "infos": cat(infos_blocks),
+            "wall": wall,
+            "transitions_per_sec": self.num_chains * num_steps / max(wall, 1e-12),
+        }
+
+
+def run_ensemble(
+    key: jax.Array,
+    theta0: Params,
+    target: PartitionedTarget,
+    proposal,
+    num_chains: int,
+    num_steps: int,
+    kernel: str = "subsampled",
+    config: SubsampledMHConfig | None = None,
+    **kw,
+):
+    """One-shot convenience wrapper: init + run. Returns (state, samples, infos)."""
+    ens = ChainEnsemble(target, proposal, num_chains, kernel=kernel, config=config, **kw)
+    state = ens.init(theta0)
+    return ens.run(key, state, num_steps)

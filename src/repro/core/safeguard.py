@@ -62,6 +62,22 @@ def trial_run_report(
     idx_all = jnp.arange(n, dtype=jnp.int32)
     theta = theta0
     jb_stats, jb_ps, errors, fractions = [], [], [], []
+
+    # One compile for all trials: (theta, theta', mu0) stay traced instead of
+    # being closed over per trial, which retraced the while_loop every time.
+    @jax.jit
+    def _seq(k, th, th_p, mu0):
+        return sequential_test(
+            key=k,
+            mu0=mu0,
+            draw_fn=fy_draw,
+            eval_fn=lambda i: target.log_local(th, th_p, i),
+            sampler_state=fy_reset(fy_init(n)),
+            num_sections=n,
+            batch_size=batch_size,
+            epsilon=epsilon,
+        )
+
     for _ in range(num_trials):
         key, k_u, k_prop, k_test = jax.random.split(key, 4)
         log_u = float(jnp.log(jax.random.uniform(k_u, (), jnp.float32, 1e-20, 1.0)))
@@ -78,16 +94,7 @@ def trial_run_report(
         jb_stats.append(jb)
         jb_ps.append(p)
 
-        res = sequential_test(
-            key=k_test,
-            mu0=jnp.asarray(mu0, jnp.float32),
-            draw_fn=fy_draw,
-            eval_fn=lambda i: target.log_local(theta, theta_p, i),
-            sampler_state=fy_reset(fy_init(n)),
-            num_sections=n,
-            batch_size=batch_size,
-            epsilon=epsilon,
-        )
+        res = _seq(k_test, theta, theta_p, jnp.asarray(mu0, jnp.float32))
         errors.append(bool(res.decision) != bool(exact_accept))
         fractions.append(float(res.n_evaluated) / n)
 

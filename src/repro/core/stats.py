@@ -132,6 +132,70 @@ def predictive_risk(estimates: np.ndarray, truth: float) -> float:
     return float(np.mean((estimates - truth) ** 2))
 
 
+# ---------------------------------------------------------------------------
+# Cross-chain diagnostics for ChainEnsemble outputs (leaves shaped (K, T, ...)).
+# ---------------------------------------------------------------------------
+
+
+def split_rhat(chains: np.ndarray) -> np.ndarray | float:
+    """Split-R̂ (Gelman et al. 2013) of an ensemble of chains.
+
+    ``chains``: (K, T) or (K, T, *param_dims). Each chain is split in half
+    (2K half-chains of length T//2), then R̂ = sqrt(((L-1)/L · W + B/L) / W)
+    with W the mean within-chain variance and B the between-chain variance
+    of the half-chain means. Scalar input rank returns a float; trailing
+    parameter dims are vectorized over.
+    """
+    x = np.asarray(chains, np.float64)
+    if x.ndim < 2:
+        raise ValueError("split_rhat expects (K, T, ...) stacked chains")
+    k, t = x.shape[:2]
+    half = t // 2
+    if half < 2:
+        raise ValueError(f"chains too short for split-R-hat: T={t}")
+    # (2K, half, *param): drop the middle sample when T is odd
+    halves = np.concatenate([x[:, :half], x[:, t - half:]], axis=0)
+    means = halves.mean(axis=1)  # (2K, *param)
+    variances = halves.var(axis=1, ddof=1)  # (2K, *param)
+    w = variances.mean(axis=0)
+    b = half * means.var(axis=0, ddof=1)
+    var_hat = (half - 1) / half * w + b / half
+    rhat = np.sqrt(var_hat / np.maximum(w, 1e-300))
+    return float(rhat) if rhat.ndim == 0 else rhat
+
+
+def multichain_ess(chains: np.ndarray) -> float:
+    """Total effective sample size of an ensemble: sum of per-chain Geyer
+    ESS values for a (K, T) scalar-functional trace."""
+    x = np.asarray(chains, np.float64)
+    if x.ndim != 2:
+        raise ValueError("multichain_ess expects (K, T)")
+    return float(sum(effective_sample_size(row) for row in x))
+
+
+def ensemble_summary(infos) -> dict:
+    """Per-chain and aggregate transition statistics from stacked ensemble
+    infos (SubsampledMHInfo / MHInfo leaves shaped (K, T)).
+
+    Returns per-chain acceptance rates and mean evaluated-section counts
+    plus their ensemble aggregates — the Sec-4 "fraction of data touched"
+    numbers, now across chains.
+    """
+    acc = np.asarray(infos.accepted, np.float64)
+    n_eval = np.asarray(infos.n_evaluated, np.float64)
+    out = {
+        "accept_rate": acc.mean(axis=1),
+        "mean_n_evaluated": n_eval.mean(axis=1),
+        "accept_rate_overall": float(acc.mean()),
+        "mean_n_evaluated_overall": float(n_eval.mean()),
+    }
+    if hasattr(infos, "rounds"):
+        rounds = np.asarray(infos.rounds, np.float64)
+        out["mean_rounds"] = rounds.mean(axis=1)
+        out["mean_rounds_overall"] = float(rounds.mean())
+    return out
+
+
 def jarque_bera(x: np.ndarray) -> tuple[float, float]:
     """Jarque–Bera normality statistic and asymptotic chi2(2) p-value.
 

@@ -1,12 +1,15 @@
 """Pallas TPU kernels for the likelihood hot spots (+ jnp oracles).
 
-fused_ce    — vocab-blocked per-token log-likelihood (online logsumexp)
-logit_delta — pair-fused BayesLR MH delta (x read once for theta, theta')
-ops         — jit'd dispatch wrappers (kernel on TPU, interpret/ref on CPU)
-ref         — pure-jnp oracles (the allclose ground truth)
+fused_ce            — vocab-blocked per-token log-likelihood (online logsumexp)
+logit_delta         — pair-fused BayesLR MH delta (x read once for theta, theta')
+batched_logit_delta — the (K, m) ensemble-batched form of logit_delta: one
+                      fused pallas_call per multi-chain sequential-test round
+ops                 — jit'd dispatch wrappers (kernel on TPU, interpret/ref on CPU)
+ref                 — pure-jnp oracles (the allclose ground truth)
 """
 from . import ops, ref
+from .batched_loglik import batched_logit_delta, gather_and_delta
 from .fused_ce import fused_ce
 from .logit_loglik import logit_delta
 
-__all__ = ["fused_ce", "logit_delta", "ops", "ref"]
+__all__ = ["batched_logit_delta", "fused_ce", "gather_and_delta", "logit_delta", "ops", "ref"]

@@ -5,6 +5,7 @@ from __future__ import annotations
 import jax
 
 from . import ref
+from .batched_loglik import batched_logit_delta as _batched_logit_delta_kernel
 from .fused_ce import fused_ce as _fused_ce_kernel
 from .logit_loglik import logit_delta as _logit_delta_kernel
 
@@ -31,3 +32,12 @@ def logit_delta(x, y, w_cur, w_prop, *, mode: str = "auto", **kw):
         return ref.logit_delta_ref(x, y, w_cur, w_prop)
     interpret = not _on_tpu()
     return _logit_delta_kernel(x, y, w_cur, w_prop, interpret=interpret, **kw)
+
+
+def batched_logit_delta(xg, yg, w_cur, w_prop, *, mode: str = "auto", **kw):
+    """Ensemble-batched (K, m) BayesLR delta block — one call per multi-chain
+    sequential-test round."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ref.batched_logit_delta_ref(xg, yg, w_cur, w_prop)
+    interpret = not _on_tpu()
+    return _batched_logit_delta_kernel(xg, yg, w_cur, w_prop, interpret=interpret, **kw)

@@ -26,3 +26,15 @@ def logit_delta_ref(
     z_c = (x @ w_cur).astype(jnp.float32)
     z_p = (x @ w_prop).astype(jnp.float32)
     return -jnp.logaddexp(0.0, -y * z_p) + jnp.logaddexp(0.0, -y * z_c)
+
+
+def batched_logit_delta_ref(
+    xg: jax.Array, yg: jax.Array, w_cur: jax.Array, w_prop: jax.Array
+) -> jax.Array:
+    """Ensemble-batched logit delta: one (m,)-block per chain.
+
+    xg: (K, m, D), yg: (K, m) in {-1,+1}, w_*: (K, D) -> (K, m) f32.
+    """
+    z_c = jnp.einsum("kmd,kd->km", xg, w_cur).astype(jnp.float32)
+    z_p = jnp.einsum("kmd,kd->km", xg, w_prop).astype(jnp.float32)
+    return -jnp.logaddexp(0.0, -yg * z_p) + jnp.logaddexp(0.0, -yg * z_c)

@@ -1,0 +1,110 @@
+"""Drop-in subset of `hypothesis` so property tests run without the package.
+
+`pip install -e .[dev]` brings in the real hypothesis (declared in
+pyproject.toml) and this module simply re-exports it. In environments where
+it is missing, a small deterministic fallback supplies the same decorator
+API: each `@given` test is replayed over `max_examples` pseudo-random
+examples drawn from a fixed-seed generator. No shrinking, no database — the
+point is that the properties still get exercised (and the module still
+collects) on a bare scientific-python install.
+
+Only the strategy surface this repo uses is implemented:
+`st.integers`, `st.floats`, `st.lists`, `st.sampled_from`, `st.tuples`.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import types
+
+    import numpy as _np
+
+    HAVE_HYPOTHESIS = False
+    HealthCheck = types.SimpleNamespace(too_slow="too_slow", data_too_large="data_too_large")
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def _integers(min_value=0, max_value=1 << 30):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _floats(min_value=-1e6, max_value=1e6, **_kw):
+        return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def _lists(elements, min_size=0, max_size=20):
+        def sample(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.sample(rng) for _ in range(size)]
+
+        return _Strategy(sample)
+
+    def _sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strategies))
+
+    st = types.SimpleNamespace(
+        integers=_integers,
+        floats=_floats,
+        lists=_lists,
+        sampled_from=_sampled_from,
+        tuples=_tuples,
+    )
+
+    def settings(max_examples=20, deadline=None, suppress_health_check=(), **_kw):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    import os
+
+    # The fallback has no shrinking or example database, so large example
+    # counts buy little; cap them to keep the fast tier fast. Real hypothesis
+    # (CI) runs the full declared max_examples.
+    _EXAMPLE_CAP = int(os.environ.get("HYPOTHESIS_COMPAT_MAX_EXAMPLES", "8"))
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_compat_max_examples", None) or getattr(
+                    fn, "_compat_max_examples", 20
+                )
+                n = min(n, _EXAMPLE_CAP)
+                # Seed from the test name so every property has its own
+                # reproducible example stream (crc32: stable across runs,
+                # unlike str hash under PYTHONHASHSEED randomization).
+                import zlib
+
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = _np.random.default_rng(seed)
+                for _ in range(n):
+                    example = [s.sample(rng) for s in strategies]
+                    fn(*args, *example, **kwargs)
+
+            # pytest must see a zero-arg test, not the generated params
+            # (functools.wraps copies __wrapped__, whose signature pytest
+            # would otherwise resolve as fixture requests).
+            import inspect
+
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+# both import spellings work: `import strategies as st` and plain `st`
+strategies = st

@@ -1,0 +1,99 @@
+"""Shared fixtures: seeded PRNGs and session-cached expensive setups.
+
+The `slow` marker is registered in pyproject.toml (and defensively here);
+the default run excludes it via `addopts = "-m 'not slow'"` so the tier-1
+command stays CPU-minutes cheap. Run `pytest -m slow` (or override with
+`-m ''`) for the full-size chains and subprocess multi-device cases.
+"""
+import os
+
+import numpy as np
+import pytest
+
+# Persistent XLA compilation cache: the tier-1 suite is dominated by jit
+# compiles of the MH-in-while_loop graphs, which are identical run to run.
+# Warm runs cut compile time ~5x. Safe to enable unconditionally (the dir is
+# created lazily; unsupported backends just ignore it).
+try:
+    import jax
+
+    jax.config.update(
+        "jax_compilation_cache_dir",
+        os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), ".jax_cache"),
+    )
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.1)
+except Exception:  # pragma: no cover - very old jax
+    pass
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: minute-plus cases excluded from the default run"
+    )
+
+
+@pytest.fixture
+def rng(request):
+    """Per-test numpy Generator seeded from the test id (stable across runs)."""
+    import zlib
+
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
+
+
+@pytest.fixture
+def key(request):
+    """Per-test jax PRNG key seeded from the test id."""
+    import zlib
+
+    import jax
+
+    return jax.random.key(zlib.crc32(request.node.nodeid.encode()))
+
+
+# ---------------------------------------------------------------------------
+# Session-scoped caches for expensive jitted setups. Building the reduced LM
+# (params + first jitted step) and the conjugate-Gaussian target dominates
+# several modules' runtime; sharing them collapses that to one compile each.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="session")
+def lm_setup():
+    """(reduced_config, params, 8x24 token batch) for the chatglm3-6b LM —
+    the `_setup()` tuple test_bayes builds per test, built once per session."""
+    import jax
+
+    from repro.configs import ARCHS, reduce_config
+    from repro.data import DataConfig, TokenStream
+    from repro.models import init_params
+
+    rc = reduce_config(ARCHS["chatglm3-6b"])
+    params = init_params(jax.random.key(0), rc)
+    batch = TokenStream(
+        DataConfig(vocab=rc.vocab, seq_len=24, global_batch=8, seed=0)
+    ).batch(0)
+    return rc, params, batch
+
+
+@pytest.fixture(scope="session")
+def gaussian_target_factory():
+    """Memoized conjugate-Gaussian targets keyed by (n, seed): returns
+    (PartitionedTarget, posterior_mean, posterior_std)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import from_iid_loglik
+
+    cache = {}
+
+    def build(n=1500, seed=1):
+        if (n, seed) not in cache:
+            x = 0.7 + jnp.asarray(jax.random.normal(jax.random.key(seed), (n,)))
+            prior = lambda th: -0.5 * jnp.sum(th**2)
+            loglik = lambda th, idx: -0.5 * (x[idx] - th) ** 2
+            post_mean = float(x.sum() / (n + 1))
+            post_std = float(np.sqrt(1.0 / (n + 1)))
+            cache[(n, seed)] = (from_iid_loglik(prior, loglik, None, n), post_mean, post_std)
+        return cache[(n, seed)]
+
+    return build

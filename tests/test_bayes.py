@@ -1,7 +1,12 @@
-"""Bayes-bridge tests: the LM-scale transition operator."""
+"""Bayes-bridge tests: the LM-scale transition operator.
+
+The (config, params, batch) tuple comes from the session-scoped ``lm_setup``
+fixture (tests/conftest.py) — building the reduced LM once per session
+instead of once per test."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.bayes import (
     LogLikCache,
@@ -22,16 +27,16 @@ def _setup(pool=8, seq=24, arch="chatglm3-6b"):
     return rc, params, batch
 
 
-def test_cached_step_matches_uncached_decisions():
+def test_cached_step_matches_uncached_decisions(lm_setup):
     """The lazy loglik cache is a pure optimization: identical keys must give
     identical accept decisions and identical parameter trajectories."""
-    rc, params, batch = _setup()
+    rc, params, batch = lm_setup
     tc = TrainConfig(round_batch=2, epsilon=0.2, sigma=1e-3)
     base = jax.jit(make_train_step(rc, tc))
     cach = jax.jit(make_cached_train_step(rc, tc))
     th_b, th_c = params, params
     cache = LogLikCache.empty(8)
-    for i in range(8):
+    for i in range(6):
         k = jax.random.fold_in(jax.random.key(5), i)
         th_b, info_b = base(k, th_b, batch)
         th_c, cache, info_c = cach(k, th_c, batch, cache)
@@ -43,8 +48,8 @@ def test_cached_step_matches_uncached_decisions():
         )
 
 
-def test_cache_goes_stale_on_accept_and_warm_on_reject():
-    rc, params, batch = _setup()
+def test_cache_goes_stale_on_accept_and_warm_on_reject(lm_setup):
+    rc, params, batch = lm_setup
     # force accept: huge epsilon makes the test decide after round 1; sigma=0
     # means theta'=theta, so mu_hat=0 and acceptance depends on mu0 only
     tc = TrainConfig(round_batch=4, epsilon=0.9, sigma=0.0)
@@ -59,8 +64,8 @@ def test_cache_goes_stale_on_accept_and_warm_on_reject():
         assert v.sum() >= int(info.n_evaluated)
 
 
-def test_exact_step_is_deterministic_full_scan():
-    rc, params, batch = _setup()
+def test_exact_step_is_deterministic_full_scan(lm_setup):
+    rc, params, batch = lm_setup
     tc = TrainConfig(round_batch=4, sigma=1e-3)
     ex = jax.jit(make_exact_step(rc, tc))
     _, info1 = ex(jax.random.key(1), params, batch)
@@ -69,6 +74,7 @@ def test_exact_step_is_deterministic_full_scan():
     assert bool(info1.accepted) == bool(info2.accepted)
 
 
+@pytest.mark.slow
 def test_mala_proposal_step_runs():
     rc, params, batch = _setup(pool=4)
     tc = TrainConfig(round_batch=2, epsilon=0.3, proposal="mala", mala_step=1e-8)

@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 from repro.core import (
     RandomWalk,
@@ -70,15 +70,22 @@ def test_welford_mask():
 # ---------------------------------------------------------------------------
 
 
+# m and n come from small fixed menus so the jitted draw compiles a handful
+# of times instead of once per random example (fy_draw's batch size is a
+# static argument; free-ranging integers forced a retrace every example).
+_FY_JIT = jax.jit(fy_draw, static_argnums=2)
+
+
 @settings(max_examples=20, deadline=None)
-@given(st.integers(10, 200), st.integers(1, 40), st.integers(0, 2**31 - 1))
+@given(st.sampled_from([10, 33, 128, 200]), st.sampled_from([1, 7, 40]),
+       st.integers(0, 2**31 - 1))
 def test_fy_draws_are_distinct_and_in_range(n, m, seed):
-    state = fy_reset(fy_init(n))
+    state = fy_reset(fy_init(200))._replace(size=jnp.asarray(n, jnp.int32))
     key = jax.random.key(seed)
     drawn = []
     while True:
         key, sub = jax.random.split(key)
-        state, idx, valid = fy_draw(sub, state, m)
+        state, idx, valid = _FY_JIT(sub, state, m)
         drawn.extend(np.asarray(idx)[np.asarray(valid)].tolist())
         if not bool(np.asarray(valid).all()) or len(drawn) >= n:
             break
@@ -90,7 +97,7 @@ def test_fy_draws_are_distinct_and_in_range(n, m, seed):
 
 def test_fy_is_uniform():
     # empirical check: first drawn element uniform over [0, n)
-    n, trials = 8, 4000
+    n, trials = 8, 1500
     counts = np.zeros(n)
     state0 = fy_init(n)
     draw = jax.jit(lambda k, s: fy_draw(k, s, 2))
@@ -117,20 +124,35 @@ def test_fy_dynamic_pool_size():
 # ---------------------------------------------------------------------------
 
 
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _jitted_seq_test(n, m, eps):
+    """One compile per (n, m, eps); l_values/mu0 stay traced so the property
+    test's examples all hit the same executable."""
+
+    def f(key, l_values, mu0):
+        return sequential_test(
+            key=key,
+            mu0=mu0,
+            draw_fn=fy_draw,
+            eval_fn=lambda idx: l_values[idx],
+            sampler_state=fy_reset(fy_init(n)),
+            num_sections=n,
+            batch_size=m,
+            epsilon=eps,
+        )
+
+    return jax.jit(f)
+
+
 def _run_test(l_values, mu0, m=20, eps=0.05, seed=0):
     l_values = jnp.asarray(l_values, jnp.float32)
     n = l_values.shape[0]
-    res = sequential_test(
-        key=jax.random.key(seed),
-        mu0=jnp.asarray(mu0, jnp.float32),
-        draw_fn=fy_draw,
-        eval_fn=lambda idx: l_values[idx],
-        sampler_state=fy_reset(fy_init(n)),
-        num_sections=n,
-        batch_size=m,
-        epsilon=eps,
+    return _jitted_seq_test(n, m, eps)(
+        jax.random.key(seed), l_values, jnp.asarray(mu0, jnp.float32)
     )
-    return res
 
 
 def test_sequential_test_easy_decision_is_sublinear():
@@ -170,45 +192,36 @@ def test_sequential_test_error_rate_bounded(seed):
 
 
 # ---------------------------------------------------------------------------
-# MH correctness on a conjugate Gaussian (exact posterior known)
+# MH correctness on a conjugate Gaussian (exact posterior known). Targets come
+# from the session-cached gaussian_target_factory fixture (tests/conftest.py).
 # ---------------------------------------------------------------------------
 
 
-def _gaussian_target(n=1500, seed=1):
-    x = 0.7 + np.asarray(jax.random.normal(jax.random.key(seed), (n,)))
-    x = jnp.asarray(x)
-    prior = lambda th: -0.5 * jnp.sum(th**2)
-    loglik = lambda th, idx: -0.5 * (x[idx] - th) ** 2
-    post_mean = float(x.sum() / (n + 1))
-    post_std = float(np.sqrt(1.0 / (n + 1)))
-    return from_iid_loglik(prior, loglik, None, n), post_mean, post_std
-
-
-def test_exact_mh_recovers_conjugate_posterior():
-    target, pm, ps = _gaussian_target()
+def test_exact_mh_recovers_conjugate_posterior(gaussian_target_factory):
+    target, pm, ps = gaussian_target_factory(n=800)
     _, samples, infos = run_chain(
-        jax.random.key(0), jnp.zeros(()), target, RandomWalk(0.05), 3000, kernel="exact"
+        jax.random.key(0), jnp.zeros(()), target, RandomWalk(0.07), 2000, kernel="exact"
     )
-    w = np.asarray(samples)[800:]
+    w = np.asarray(samples)[500:]
     assert abs(w.mean() - pm) < 4 * ps
     np.testing.assert_allclose(w.std(), ps, rtol=0.35)
 
 
-def test_subsampled_mh_recovers_conjugate_posterior_and_subsamples():
-    target, pm, ps = _gaussian_target()
-    cfg = SubsampledMHConfig(batch_size=100, epsilon=0.05)
+def test_subsampled_mh_recovers_conjugate_posterior_and_subsamples(gaussian_target_factory):
+    target, pm, ps = gaussian_target_factory(n=800)
+    cfg = SubsampledMHConfig(batch_size=200, epsilon=0.05)
     _, samples, infos = run_chain(
-        jax.random.key(0), jnp.zeros(()), target, RandomWalk(0.05), 3000,
+        jax.random.key(0), jnp.zeros(()), target, RandomWalk(0.07), 1500,
         kernel="subsampled", config=cfg,
     )
-    w = np.asarray(samples)[800:]
+    w = np.asarray(samples)[400:]
     assert abs(w.mean() - pm) < 5 * ps
     np.testing.assert_allclose(w.std(), ps, rtol=0.5)
     assert np.mean(np.asarray(infos.n_evaluated)) < target.num_sections
 
 
-def test_exact_mh_chunked_equals_unchunked():
-    target, _, _ = _gaussian_target(n=500)
+def test_exact_mh_chunked_equals_unchunked(gaussian_target_factory):
+    target, _, _ = gaussian_target_factory(n=500)
     th1, s1, i1 = run_chain(jax.random.key(3), jnp.zeros(()), target, RandomWalk(0.1), 50, kernel="exact")
     th2, s2, i2 = run_chain(
         jax.random.key(3), jnp.zeros(()), target, RandomWalk(0.1), 50, kernel="exact", chunk_size=64
@@ -221,12 +234,12 @@ def test_exact_mh_chunked_equals_unchunked():
 # ---------------------------------------------------------------------------
 
 
-def test_trial_run_report_flags_clean_problem_as_safe():
-    target, _, _ = _gaussian_target(n=800)
+def test_trial_run_report_flags_clean_problem_as_safe(gaussian_target_factory):
+    target, _, _ = gaussian_target_factory(n=800)
     rep = trial_run_report(
         jax.random.key(0), jnp.zeros(()), target, RandomWalk(0.05),
-        batch_size=50, epsilon=0.05, num_trials=10,
+        batch_size=50, epsilon=0.05, num_trials=6,
     )
-    assert rep.num_trials == 10
+    assert rep.num_trials == 6
     assert 0.0 <= rep.mean_fraction_evaluated <= 1.0
     assert rep.decision_error_rate <= 0.3

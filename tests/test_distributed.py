@@ -47,8 +47,14 @@ step = make_train_step(rc, tc)
 ref, ref_info = jax.jit(step)(jax.random.key(7), params, batch)
 ref_leaf = np.asarray(jax.tree.leaves(ref)[0], dtype=np.float32)
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def make_mesh(shape, names):
+    try:  # AxisType only exists in newer jax
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    except AttributeError:
+        return jax.make_mesh(shape, names)
+
+mesh = make_mesh((2, 4), ("data", "model"))
 with logical_axis_rules(mesh), mesh:
     from repro.launch.steps import spec_tree_to_shardings
     from repro.models import param_specs
@@ -89,13 +95,18 @@ rc = reduce_config(ARCHS["xlstm-350m"])
 params = init_params(jax.random.key(0), rc)
 d = tempfile.mkdtemp()
 
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+def make_mesh(shape, names):
+    try:  # AxisType only exists in newer jax
+        return jax.make_mesh(shape, names,
+                             axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    except AttributeError:
+        return jax.make_mesh(shape, names)
+
+mesh_a = make_mesh((4, 2), ("data", "model"))
 sh_a = spec_tree_to_shardings(param_specs(rc), mesh_a)
 ckpt.save(d, 3, jax.device_put(params, sh_a))
 
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = make_mesh((2, 4), ("data", "model"))
 sh_b = spec_tree_to_shardings(param_specs(rc), mesh_b)
 step, restored = ckpt.restore(d, target=params, shardings=sh_b)
 ok = all(

@@ -21,29 +21,29 @@ from repro.inference import NIWPrior, csmc, particle_filter, posterior_predictiv
 
 
 def test_bayeslr_subsampled_recovers_weights():
-    data = bayeslr.synth_2d(jax.random.key(0), n=3000)
+    data = bayeslr.synth_2d(jax.random.key(0), n=1500)
     target = bayeslr.make_target(data.x_train, data.y_train)
     _, samples, infos = run_chain(
-        jax.random.key(1), jnp.zeros(2), target, RandomWalk(0.08), 1200,
-        kernel="subsampled", config=SubsampledMHConfig(batch_size=100, epsilon=0.05),
+        jax.random.key(1), jnp.zeros(2), target, RandomWalk(0.08), 600,
+        kernel="subsampled", config=SubsampledMHConfig(batch_size=200, epsilon=0.05),
     )
-    w = np.asarray(samples)[400:].mean(0)
+    w = np.asarray(samples)[200:].mean(0)
     # direction of the true weight vector is recovered
     cos = w @ np.asarray(data.w_true) / (np.linalg.norm(w) * np.linalg.norm(data.w_true))
     assert cos > 0.95
-    assert np.mean(np.asarray(infos.n_evaluated)) < 3000
+    assert np.mean(np.asarray(infos.n_evaluated)) < 1500
 
 
 def test_bayeslr_exact_and_subsampled_agree_on_posterior():
     data = bayeslr.synth_2d(jax.random.key(2), n=1000)
     target = bayeslr.make_target(data.x_train, data.y_train)
-    _, s_ex, _ = run_chain(jax.random.key(3), jnp.zeros(2), target, RandomWalk(0.1), 1500, kernel="exact")
+    _, s_ex, _ = run_chain(jax.random.key(3), jnp.zeros(2), target, RandomWalk(0.1), 800, kernel="exact")
     _, s_sub, _ = run_chain(
-        jax.random.key(3), jnp.zeros(2), target, RandomWalk(0.1), 1500,
-        kernel="subsampled", config=SubsampledMHConfig(batch_size=100, epsilon=0.01),
+        jax.random.key(3), jnp.zeros(2), target, RandomWalk(0.1), 800,
+        kernel="subsampled", config=SubsampledMHConfig(batch_size=200, epsilon=0.01),
     )
-    m_ex = np.asarray(s_ex)[500:].mean(0)
-    m_sub = np.asarray(s_sub)[500:].mean(0)
+    m_ex = np.asarray(s_ex)[300:].mean(0)
+    m_sub = np.asarray(s_sub)[300:].mean(0)
     assert np.linalg.norm(m_ex - m_sub) < 0.25 * max(np.linalg.norm(m_ex), 1e-6) + 0.1
 
 
@@ -75,7 +75,7 @@ def test_niw_predictive_matches_monte_carlo():
     )
     # Monte-Carlo prior predictive
     rng = np.random.default_rng(0)
-    m = 40_000
+    m = 24_000
     # draw Sigma ~ IW(v0, S0) via inverse of Wishart(v0, S0^{-1}), mu ~ N(m0, Sigma/k0)
     s0inv = np.linalg.inv(np.asarray(prior.s0))
     chol = np.linalg.cholesky(s0inv)
@@ -143,6 +143,7 @@ def test_jdpm_subsampled_w_move_uses_dynamic_pool(jdpm_setup):
     assert state2.w.shape == state.w.shape
 
 
+@pytest.mark.slow
 def test_jdpm_short_run_improves_accuracy(jdpm_setup):
     cfg, data, state = jdpm_setup
     gz = jax.jit(lambda k, s, p: jointdpm.gibbs_z_steps(k, s, data, cfg, p))
@@ -175,8 +176,9 @@ def test_csmc_tracks_latent_path():
     data = stochvol.synth(jax.random.key(0), num_series=30, length=5)
     params = stochvol.SVParams(jnp.asarray(0.95), jnp.asarray(0.01))
     h = jnp.zeros_like(data.obs)
+    sweep = jax.jit(lambda k, h: stochvol.pgibbs_sweep(k, data.obs, h, params, num_particles=40))
     for i in range(10):
-        h = stochvol.pgibbs_sweep(jax.random.key(i), data.obs, h, params, num_particles=40)
+        h = sweep(jax.random.key(i), h)
     # sampled paths should correlate with the truth in aggregate scale
     assert np.isfinite(np.asarray(h)).all()
     assert float(jnp.abs(h).mean()) < 5.0
@@ -202,6 +204,7 @@ def test_sv_invalid_proposals_are_rejected():
     assert g == -np.inf  # prior excludes phi > 1 => reject
 
 
+@pytest.mark.slow
 def test_sv_subsampled_mh_recovers_parameters_given_states():
     """Sec 4.3 parameter move validation with h fixed at the true paths:
     the subsampled MH chain over (phi, sigma2) must land near the
@@ -236,6 +239,7 @@ def test_sv_subsampled_mh_recovers_parameters_given_states():
     assert 0.06 < sig_hat < 0.16, sig_hat
 
 
+@pytest.mark.slow
 def test_sv_joint_pgibbs_mh_loop_runs():
     """Short joint loop (states + parameters) stays finite and in-support."""
     data = stochvol.synth(jax.random.key(5), num_series=40, length=5)

@@ -4,12 +4,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.batched_loglik import batched_logit_delta, gather_and_delta
 from repro.kernels.fused_ce import fused_ce
 from repro.kernels.logit_loglik import logit_delta
-from repro.kernels.ref import fused_ce_ref, logit_delta_ref
+from repro.kernels.ref import batched_logit_delta_ref, fused_ce_ref, logit_delta_ref
 
 
-@pytest.mark.parametrize("t,d,v", [(8, 32, 64), (16, 64, 128), (100, 48, 300), (256, 128, 1000)])
+@pytest.mark.parametrize("t,d,v", [(8, 32, 64), (16, 64, 128),
+                                   pytest.param(100, 48, 300, marks=pytest.mark.slow),
+                                   pytest.param(256, 128, 1000, marks=pytest.mark.slow)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_fused_ce_matches_ref(t, d, v, dtype):
     k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
@@ -57,6 +60,75 @@ def test_logit_delta_matches_ref(n, d, dtype):
     want = logit_delta_ref(x, y, w_c, w_p)
     tol = 1e-5 if dtype == jnp.float32 else 6e-2
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble-batched (K, m) logit delta: interpret-mode parity vs the ref twin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "k,m,d,tile",
+    [
+        (1, 8, 4, 8),       # single chain degenerates to logit_delta
+        (4, 100, 50, 32),   # ragged tail: 100 % 32 != 0
+        (16, 37, 3, 16),    # K=16 acceptance-bar shape, ragged
+        (3, 256, 64, 256),  # one full tile per chain
+        (7, 5, 2, 8),       # m smaller than the tile
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batched_logit_delta_matches_ref(k, m, d, tile, dtype):
+    ks = jax.random.split(jax.random.key(k * 1000 + m), 4)
+    xg = jax.random.normal(ks[0], (k, m, d)).astype(dtype)
+    yg = jnp.where(jax.random.bernoulli(ks[1], 0.5, (k, m)), 1.0, -1.0)
+    w_c = jax.random.normal(ks[2], (k, d)).astype(dtype)
+    w_p = jax.random.normal(ks[3], (k, d)).astype(dtype)
+    got = batched_logit_delta(xg, yg, w_c, w_p, tile_m=tile, interpret=True)
+    want = batched_logit_delta_ref(xg, yg, w_c, w_p)
+    assert got.shape == (k, m)
+    tol = 1e-5 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_batched_logit_delta_rows_match_single_chain_kernel():
+    """Each chain's row must equal the single-chain logit_delta on its batch."""
+    k, m, d = 5, 64, 8
+    ks = jax.random.split(jax.random.key(9), 4)
+    xg = jax.random.normal(ks[0], (k, m, d))
+    yg = jnp.where(jax.random.bernoulli(ks[1], 0.5, (k, m)), 1.0, -1.0)
+    w_c = jax.random.normal(ks[2], (k, d))
+    w_p = jax.random.normal(ks[3], (k, d))
+    got = batched_logit_delta(xg, yg, w_c, w_p, tile_m=32, interpret=True)
+    for c in range(k):
+        row = logit_delta(xg[c], yg[c], w_c[c], w_p[c], tile_n=32, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[c]), np.asarray(row), rtol=1e-5, atol=1e-5)
+
+
+def test_gather_and_delta_matches_gather_then_ref():
+    n, d, k, m = 500, 10, 3, 40
+    x = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (n,)), 1.0, -1.0)
+    idx = jax.random.randint(jax.random.key(2), (k, m), 0, n)
+    w_c = jax.random.normal(jax.random.key(3), (k, d))
+    w_p = jax.random.normal(jax.random.key(4), (k, d))
+    got = gather_and_delta(x, y, idx, w_c, w_p, tile_m=16, interpret=True)
+    want = batched_logit_delta_ref(x[idx], y[idx], w_c, w_p)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_ops_batched_dispatch_matches_kernel():
+    from repro.kernels import ops
+
+    k, m, d = 2, 24, 6
+    xg = jax.random.normal(jax.random.key(0), (k, m, d))
+    yg = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (k, m)), 1.0, -1.0)
+    w_c = jax.random.normal(jax.random.key(2), (k, d))
+    w_p = jax.random.normal(jax.random.key(3), (k, d))
+    out_auto = ops.batched_logit_delta(xg, yg, w_c, w_p)
+    out_kernel = ops.batched_logit_delta(xg, yg, w_c, w_p, mode="kernel", tile_m=8)
+    np.testing.assert_allclose(np.asarray(out_auto), np.asarray(out_kernel),
+                               rtol=1e-5, atol=1e-5)
 
 
 def test_ops_auto_dispatch_runs_on_cpu():

@@ -93,7 +93,10 @@ def test_checkpoint_atomicity_tmp_never_visible(tmp_path):
 # ---------------------------------------------------------------------------
 
 
-def _mh_loop_setup(tmp_path):
+@pytest.fixture(scope="module")
+def mh_loop_setup():
+    """(params, jitted step, stream) shared by the fault-tolerance tests —
+    one train-step compile for the whole module."""
     from repro.bayes import TrainConfig, make_train_step
 
     rc = reduce_config(ARCHS["chatglm3-6b"])
@@ -107,8 +110,8 @@ def _mh_loop_setup(tmp_path):
     return params, step, stream
 
 
-def test_crash_restart_resumes_identically(tmp_path):
-    params, step, stream = _mh_loop_setup(tmp_path)
+def test_crash_restart_resumes_identically(tmp_path, mh_loop_setup):
+    params, step, stream = mh_loop_setup
     d_clean, d_crash = str(tmp_path / "clean"), str(tmp_path / "crash")
 
     clean = run_loop(step, params, stream.batch,
@@ -124,10 +127,10 @@ def test_crash_restart_resumes_identically(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_preemption_flag_checkpoints_and_raises(tmp_path):
+def test_preemption_flag_checkpoints_and_raises(tmp_path, mh_loop_setup):
     from repro.runtime import PreemptionRequested
 
-    params, step, stream = _mh_loop_setup(tmp_path)
+    params, step, stream = mh_loop_setup
     flag = str(tmp_path / "preempt")
     d = str(tmp_path / "ck")
     run_loop(step, params, stream.batch,
@@ -145,6 +148,7 @@ def test_preemption_flag_checkpoints_and_raises(tmp_path):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_adam_reduces_lm_loss():
     rc = reduce_config(ARCHS["chatglm3-6b"])
     from repro.models import init_params
