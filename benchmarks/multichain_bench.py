@@ -1,30 +1,29 @@
-"""Multi-chain throughput: vmapped ensemble vs sequential single chains.
+"""Multi-chain throughput: sequential chains vs the three ensemble engines.
 
 The number that matters for the ROADMAP north star is aggregate
 transitions/sec across an ensemble. This bench runs K subsampled-MH chains
-on the Fig-5 BayesLR target two ways:
+on the Fig-5 BayesLR target four ways:
 
   sequential — K independent ``run_chain_timed`` host loops (one jitted
                step, python dispatch per transition: the pre-ensemble idiom),
-  ensemble   — one ``ChainEnsemble.run`` program (vmapped step inside one
-               scan: one dispatch for the whole K x T block).
+  lockstep   — one ``ChainEnsemble.run`` program, chains advance in
+               lock-step (the batched while_loop runs every sequential-test
+               round until the SLOWEST chain's test stops: per-transition
+               row cost is max_k rounds_k),
+  masked     — the masked-continuation superstep: a chain whose test stops
+               early commits its transition and starts the next proposal
+               inside the same compiled loop, so total row count drops from
+               sum_t max_k rounds to max_k sum_t rounds,
+  adaptive   — masked + the per-chain controller of ``repro.core.schedule``
+               tuning batch-size buckets and epsilon from each chain's
+               trailing rounds / n_evaluated stream.
 
-Two numbers per side, because they answer different questions:
+Per engine we report end-to-end (including one-time compiles — what a cold
+posterior query costs) and steady-state (compile-excluded) transitions/sec,
+plus a tail-latency histogram of per-transition sequential-test rounds —
+the lock-step row pays the tail's max, the masked modes only its mean.
 
-  end-to-end     — total wall clock including one-time jit compiles. The
-                   sequential idiom pays K compiles (run_chain_timed jits a
-                   fresh closure per chain); the ensemble pays one. This is
-                   what a cold posterior query actually costs.
-  steady-state   — compile-excluded sampling throughput (run_chain_timed's
-                   own times[-1] for the baseline, warm run_timed for the
-                   ensemble). This is the long-chain amortized rate.
-
-On this CPU at K=16 the ensemble wins ~4x end-to-end and ~1.6-2x steady
-state (XLA's CPU backend extracts limited parallelism from the chain axis,
-and the lock-step vmap runs every round until the slowest chain's test
-stops); on accelerators the gap widens (per-step host dispatch is constant,
-the batched (K, m) work parallelizes). See ROADMAP "async/adaptive chain
-scheduling" for the lock-step follow-on.
+Reproduction guide and reference CPU numbers: docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
@@ -34,64 +33,85 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChainEnsemble, RandomWalk, SubsampledMHConfig, run_chain_timed
+from repro.core import (
+    ChainEnsemble,
+    RandomWalk,
+    ScheduleConfig,
+    SubsampledMHConfig,
+    run_chain_timed,
+    tail_latency_summary,
+)
 from repro.experiments import bayeslr
+
+ENGINES = ("lockstep", "masked", "adaptive")
+
+
+def _ensemble(target, prop, cfg, num_chains: int, engine: str) -> ChainEnsemble:
+    kw = {}
+    if engine == "masked":
+        kw = dict(stepping="masked")
+    elif engine == "adaptive":
+        kw = dict(stepping="masked", schedule=ScheduleConfig())
+    return ChainEnsemble(target, prop, num_chains, config=cfg, **kw)
 
 
 def run(n: int = 5000, num_chains: int = 16, steps: int = 100,
-        batch: int = 100, epsilon: float = 0.05, seed: int = 0) -> dict:
+        batch: int = 100, epsilon: float = 0.05, seed: int = 0,
+        sequential_baseline: bool = True) -> dict:
     data = bayeslr.synth_2d(jax.random.key(seed), n=n)
     target = bayeslr.make_target(data.x_train, data.y_train)
     prop = RandomWalk(0.1)
     cfg = SubsampledMHConfig(batch_size=batch, epsilon=epsilon, sampler="stream")
     theta0 = jnp.zeros(2)
     keys = jax.random.split(jax.random.key(seed + 1), num_chains)
+    out = {"N": n, "K": num_chains, "steps": steps}
 
     # --- sequential baseline: K host-driven chains ------------------------
-    t0 = time.perf_counter()
-    seq_samples, seq_sample_secs = [], 0.0
-    for k in range(num_chains):
-        out = run_chain_timed(keys[k], theta0, target, prop, steps,
-                              kernel="subsampled", config=cfg)
-        seq_samples.append(np.asarray(out["samples"]))
-        seq_sample_secs += float(out["times"][-1])  # compile-excluded
-    seq_wall = time.perf_counter() - t0
-    seq_tps_e2e = num_chains * steps / seq_wall
-    seq_tps_steady = num_chains * steps / max(seq_sample_secs, 1e-12)
+    if sequential_baseline:
+        t0 = time.perf_counter()
+        seq_samples, seq_sample_secs = [], 0.0
+        for k in range(num_chains):
+            o = run_chain_timed(keys[k], theta0, target, prop, steps,
+                                kernel="subsampled", config=cfg)
+            seq_samples.append(np.asarray(o["samples"]))
+            seq_sample_secs += float(o["times"][-1])  # compile-excluded
+        seq_wall = time.perf_counter() - t0
+        out["sequential_tps_e2e"] = num_chains * steps / seq_wall
+        out["sequential_tps_steady"] = num_chains * steps / max(seq_sample_secs, 1e-12)
+        out["seq_samples"] = np.stack(seq_samples)
 
-    # --- vmapped ensemble --------------------------------------------------
-    # Cold pass first: exactly compile + one run, matching what the sequential
-    # side pays per chain (run_timed's internal warm-up would double-count
-    # sampling work in an end-to-end window).
-    ens = ChainEnsemble(target, prop, num_chains, config=cfg)
-    t0 = time.perf_counter()
-    state = ens.init(theta0)
-    state, _, _ = ens.run(keys, state, steps)
-    jax.block_until_ready(state.theta)
-    ens_wall = time.perf_counter() - t0
-    ens_tps_e2e = num_chains * steps / ens_wall
-    # Steady state: the program is warm now, run_timed's warm-up is a cache hit.
-    state, timed = ens.run_timed(keys, state, steps, block_every=steps)
-    ens_tps_steady = timed["transitions_per_sec"]
-
-    return {
-        "N": n,
-        "K": num_chains,
-        "steps": steps,
-        "sequential_tps_e2e": seq_tps_e2e,
-        "sequential_tps_steady": seq_tps_steady,
-        "ensemble_tps_e2e": ens_tps_e2e,
-        "ensemble_tps_steady": ens_tps_steady,
-        "speedup_e2e": ens_tps_e2e / seq_tps_e2e,
-        "speedup_steady": ens_tps_steady / seq_tps_steady,
-        "ensemble_samples": timed["samples"],
-        "seq_samples": np.stack(seq_samples),
-    }
+    # --- the three ensemble engines --------------------------------------
+    for engine in ENGINES:
+        ens = _ensemble(target, prop, cfg, num_chains, engine)
+        # Cold pass: exactly compile + one run, matching what the sequential
+        # side pays per chain (run_timed's internal warm-up would double-count
+        # sampling work in an end-to-end window).
+        t0 = time.perf_counter()
+        state = ens.init(theta0)
+        state, _, _ = ens.run(keys, state, steps)
+        jax.block_until_ready(state.theta)
+        out[f"{engine}_tps_e2e"] = num_chains * steps / (time.perf_counter() - t0)
+        # Steady state: program warm, run_timed's warm-up is a cache hit.
+        state, timed = ens.run_timed(keys, state, steps, block_every=steps)
+        out[f"{engine}_tps_steady"] = timed["transitions_per_sec"]
+        out[f"{engine}_rounds_tail"] = tail_latency_summary(timed["infos"].rounds)
+        out[f"{engine}_mean_n_evaluated"] = float(
+            np.asarray(timed["infos"].n_evaluated, np.float64).mean()
+        )
+        if engine == "lockstep":
+            out["ensemble_samples"] = timed["samples"]
+    for engine in ("masked", "adaptive"):
+        out[f"{engine}_vs_lockstep_steady"] = (
+            out[f"{engine}_tps_steady"] / out["lockstep_tps_steady"]
+        )
+    return out
 
 
 def main(fast: bool = True):
-    configs = [(5000, 4), (5000, 16)] if fast else [(50_000, 4), (50_000, 16), (50_000, 64)]
-    steps = 100 if fast else 400
+    if fast:
+        configs, steps = [(5000, 4), (5000, 16)], 100
+    else:
+        configs, steps = [(50_000, 4), (50_000, 16), (50_000, 64)], 400
     rows, raws = [], []
     for n, k in configs:
         r = run(n=n, num_chains=k, steps=steps)
@@ -101,15 +121,39 @@ def main(fast: bool = True):
             1e6 / r["sequential_tps_e2e"],
             f"tps_e2e={r['sequential_tps_e2e']:.0f}_steady={r['sequential_tps_steady']:.0f}",
         ))
-        rows.append((
-            f"multichain_ens_N{n}_K{k}",
-            1e6 / r["ensemble_tps_e2e"],
-            f"tps_e2e={r['ensemble_tps_e2e']:.0f}_steady={r['ensemble_tps_steady']:.0f}"
-            f"_speedup_e2e={r['speedup_e2e']:.1f}x_steady={r['speedup_steady']:.1f}x",
-        ))
+        for engine in ENGINES:
+            tail = r[f"{engine}_rounds_tail"]
+            extra = ""
+            if engine != "lockstep":
+                extra = f"_vs_lockstep={r[f'{engine}_vs_lockstep_steady']:.1f}x"
+            rows.append((
+                f"multichain_{engine}_N{n}_K{k}",
+                1e6 / r[f"{engine}_tps_e2e"],
+                f"tps_e2e={r[f'{engine}_tps_e2e']:.0f}"
+                f"_steady={r[f'{engine}_tps_steady']:.0f}"
+                f"_rounds_p50={tail['p50']:.0f}_p99={tail['p99']:.0f}_max={tail['max']:.0f}"
+                + extra,
+            ))
     return rows, raws
 
 
+def print_tail_histograms(raws) -> None:
+    """ASCII tail-latency histograms of per-transition rounds per engine."""
+    for r in raws:
+        print(f"\nN={r['N']} K={r['K']}: per-transition sequential-test rounds")
+        for engine in ENGINES:
+            t = r[f"{engine}_rounds_tail"]
+            print(f"  {engine:9s} mean={t['mean']:.2f} p50={t['p50']:.0f} "
+                  f"p90={t['p90']:.0f} p99={t['p99']:.0f} max={t['max']:.0f}")
+            total = max(int(t["hist"].sum()), 1)
+            for e, h in zip(t["edges"], t["hist"]):
+                if h:
+                    bar = "#" * max(1, int(40 * h / total))
+                    print(f"    {int(e):4d} rounds | {bar} {h}")
+
+
 if __name__ == "__main__":
-    for name, us, derived in main()[0]:
+    rows, raws = main()
+    for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    print_tail_histograms(raws)

@@ -4,8 +4,10 @@ Runs the paper's core comparison on synthetic data in ~a minute on CPU:
 exact MH (O(N) per transition) vs subsampled MH (Alg. 3), plus the Sec-3.3
 normality safeguard report.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py            # full-size (~a minute on CPU)
+    python examples/quickstart.py --smoke    # CI-sized
 """
+import argparse
 import time
 
 import jax
@@ -21,22 +23,22 @@ from repro.core import (
 from repro.experiments import bayeslr
 
 
-def main():
-    n, d = 50_000, 50
+def main(smoke: bool = False):
+    n, d, steps = (5_000, 10, 100) if smoke else (50_000, 50, 400)
     data = bayeslr.synth_mnist_like(jax.random.key(0), n_train=n, n_test=1000, d=d)
     target = bayeslr.make_target(data.x_train, data.y_train)
     w0 = jnp.zeros(d)
     prop = RandomWalk(0.03)
-    steps = 400
 
     print(f"Bayesian logistic regression, N={n}, D={d} (paper Sec 4.1 scale)")
     print("\n--- Sec 3.3 safeguard (trial run) ---")
     print(trial_run_report(jax.random.key(1), w0, target, prop, num_trials=10))
 
     results = {}
+    m = 200 if smoke else 1000
     for kernel, cfg in [
         ("exact", None),
-        ("subsampled", SubsampledMHConfig(batch_size=1000, epsilon=0.05, sampler="stream")),
+        ("subsampled", SubsampledMHConfig(batch_size=m, epsilon=0.05, sampler="stream")),
     ]:
         t0 = time.perf_counter()
         _, samples, infos = run_chain(
@@ -61,4 +63,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (seconds instead of minutes)")
+    main(smoke=ap.parse_args().smoke)

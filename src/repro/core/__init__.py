@@ -17,16 +17,31 @@ from .samplers import (
     FisherYatesState,
     StreamSliceState,
     fy_draw,
+    fy_draw_bounded,
     fy_from_buffer,
     fy_init,
     fy_reset,
+    make_bounded_draw,
     make_sampler,
     stream_draw,
+    stream_draw_bounded,
     stream_init,
     stream_reset,
 )
 from .safeguard import TrialReport, trial_run_report
-from .sequential_test import SeqTestResult, expected_batches_theoretical, sequential_test
+from .schedule import (
+    ControllerState,
+    ScheduleConfig,
+    controller_init,
+    controller_params,
+    controller_update,
+)
+from .sequential_test import (
+    SeqTestResult,
+    expected_batches_theoretical,
+    sequential_test,
+    test_round_decision,
+)
 from .stats import (
     Welford,
     autocorrelation,
@@ -38,20 +53,30 @@ from .stats import (
     predictive_risk,
     split_rhat,
     student_t_sf,
+    tail_latency_summary,
     two_sided_t_pvalue,
 )
-from .subsampled_mh import SubsampledMHConfig, SubsampledMHInfo, make_kernel, subsampled_mh_step
+from .subsampled_mh import (
+    SubsampledMHConfig,
+    SubsampledMHInfo,
+    adaptive_max_rounds,
+    make_kernel,
+    propose_and_mu0,
+    subsampled_mh_step,
+)
 from .target import PartitionedTarget, from_iid_loglik
 
 __all__ = [
     "MALA",
     "ChainEnsemble",
+    "ControllerState",
     "EnsembleState",
     "FisherYatesState",
     "IndependentGaussian",
     "MHInfo",
     "PartitionedTarget",
     "RandomWalk",
+    "ScheduleConfig",
     "SeqTestResult",
     "StreamSliceState",
     "SubsampledMHConfig",
@@ -59,32 +84,42 @@ __all__ = [
     "TrialReport",
     "Welford",
     "acceptance_rate",
+    "adaptive_max_rounds",
     "autocorrelation",
+    "controller_init",
+    "controller_params",
+    "controller_update",
     "effective_sample_size",
     "ensemble_summary",
     "expected_batches_theoretical",
     "finite_population_std_err",
     "from_iid_loglik",
     "fy_draw",
+    "fy_draw_bounded",
     "fy_from_buffer",
     "fy_init",
     "fy_reset",
     "jarque_bera",
+    "make_bounded_draw",
     "make_kernel",
     "make_sampler",
     "mh_step",
     "multichain_ess",
     "predictive_risk",
+    "propose_and_mu0",
     "run_chain",
     "run_chain_timed",
     "run_ensemble",
     "sequential_test",
     "split_rhat",
     "stream_draw",
+    "stream_draw_bounded",
     "stream_init",
     "stream_reset",
     "student_t_sf",
     "subsampled_mh_step",
+    "tail_latency_summary",
+    "test_round_decision",
     "trial_run_report",
     "two_sided_t_pvalue",
 ]

@@ -12,16 +12,41 @@ lifts the single-chain kernels in this package over a leading chain axis:
     evaluation is a (K, m) block instead of K separate (m,) calls,
   * per-chain semantics are preserved exactly: chain k of the ensemble,
     seeded with key k, produces the same trajectory as a sequential
-    :func:`repro.core.chain.run_chain` call with that key (the batched
-    while_loop masks finished lanes, it never perturbs them),
+    :func:`repro.core.chain.run_chain` call with that key,
   * an optional ``shard_map`` fan-out over a chain mesh axis spreads the
     ensemble across devices (see :mod:`repro.distributed.sharding` for the
     data-axis counterpart); on one device it is skipped entirely.
 
+Two stepping modes control how the K sequential tests share the vmapped row:
+
+  ``lockstep``
+    transitions advance in sync; within a transition the batched while_loop
+    runs every round until the *slowest* chain's test stops, so one hard
+    accept/reject decision stalls the whole row (its per-row cost is
+    ``max_k rounds_k`` per transition).
+
+  ``masked``
+    the masked-continuation superstep: one while_loop over *rounds*, where a
+    chain whose test finishes immediately commits its transition and begins
+    the next proposal inside the same compiled loop — per-chain progress
+    counters instead of lock-step rounds. Total row count drops from
+    ``sum_t max_k rounds_{k,t}`` to ``max_k sum_t rounds_{k,t}``, which is
+    what restores the amortized speedup at large K. With adaptation
+    disabled the mode reproduces ``lockstep`` results bit for bit (the
+    stepping order of every chain's draws/merges/splits is identical).
+
+An optional :class:`repro.core.schedule.ScheduleConfig` attaches the
+adaptive per-chain controller: each chain's trailing ``rounds`` /
+``n_evaluated`` / acceptance statistics tune its ``batch_size`` (within a
+compile-time bucket set) and ``epsilon`` between transitions, in either
+stepping mode.
+
 Downstream, :func:`repro.core.stats.split_rhat` /
 :func:`repro.core.stats.ensemble_summary` consume the (K, T) outputs for
-cross-chain convergence diagnostics, and the fused (K, m) likelihood block
-has a Pallas twin in :mod:`repro.kernels.batched_loglik`.
+cross-chain convergence diagnostics; when the target carries a fused
+``log_local_ensemble`` (e.g. :func:`repro.kernels.ops.batched_logit_delta`)
+and the ops dispatch selects Pallas, the masked superstep routes each
+(K, m) round through it instead of vmapping ``log_local``.
 """
 from __future__ import annotations
 
@@ -33,17 +58,31 @@ import jax
 import jax.numpy as jnp
 
 from .mh import mh_step
-from .subsampled_mh import SubsampledMHConfig, make_kernel
+from .schedule import ScheduleConfig, controller_init, controller_params, controller_update
+from .sequential_test import test_round_decision
+from .stats import Welford
+from .subsampled_mh import (
+    SubsampledMHConfig,
+    SubsampledMHInfo,
+    adaptive_max_rounds,
+    make_kernel,
+    propose_and_mu0,
+)
+from .samplers import make_bounded_draw, make_sampler
 from .target import PartitionedTarget
 
 Params = Any
 
 
 class EnsembleState(NamedTuple):
-    """Per-chain carried state; every leaf has a leading (K,) chain axis."""
+    """Per-chain carried state; every leaf has a leading (K,) chain axis.
+
+    ``controller`` is ``None`` without a schedule, otherwise the batched
+    :class:`repro.core.schedule.ControllerState` pytree."""
 
     theta: Params
     sampler_state: Any  # batched sampler pytree ("exact" kernel: dummy zeros)
+    controller: Any = None
 
     @property
     def num_chains(self) -> int:
@@ -60,9 +99,47 @@ def _broadcast_chain_axis(tree: Params, num_chains: int) -> Params:
     return jax.tree.map(tile, tree)
 
 
+def _bselect(pred: jax.Array, on_true: Params, on_false: Params) -> Params:
+    """Tree-select with a (K,) predicate broadcast over trailing leaf dims."""
+
+    def sel(a, b):
+        p = pred.reshape(pred.shape + (1,) * (a.ndim - pred.ndim))
+        return jnp.where(p, a, b)
+
+    return jax.tree.map(sel, on_true, on_false)
+
+
+def _scatter_at(buf: jax.Array, pos: jax.Array, val: jax.Array, do: jax.Array) -> jax.Array:
+    """Per-chain write ``buf[pos] = val where do`` (buf: (T, ...), scalars pos/do)."""
+    cur = jax.lax.dynamic_index_in_dim(buf, pos, axis=0, keepdims=False)
+    new = jnp.where(do, val, cur)
+    return jax.lax.dynamic_update_index_in_dim(buf, new, pos, 0)
+
+
+class _MaskedCarry(NamedTuple):
+    """Superstep state of the masked-continuation loop (all leaves (K, ...))."""
+
+    test_key: jax.Array  # per-chain sequential-test key
+    theta: Params  # current sample
+    theta_prop: Params  # proposal under test
+    log_u: jax.Array
+    mu0: jax.Array
+    welford: Welford
+    sampler: Any
+    controller: Any
+    epsilon: jax.Array  # knobs frozen at each transition's start
+    batch_eff: jax.Array
+    steps_done: jax.Array  # i32: transitions committed per chain
+    rounds: jax.Array  # i32: rounds inside the current transition
+    fresh: jax.Array  # bool: chain must start a new proposal this superstep
+    samples: Params  # (K, T, ...) output buffers
+    infos: SubsampledMHInfo  # (K, T) leaves
+    supersteps: jax.Array  # scalar i32 safety counter
+
+
 @dataclasses.dataclass(frozen=True)
 class ChainEnsemble:
-    """K independent MH chains advanced in lock-step inside one jitted scan.
+    """K independent MH chains advanced inside one jitted program.
 
     Usage::
 
@@ -76,9 +153,38 @@ class ChainEnsemble:
     passing per-chain keys (a ``(K,)`` key array) reproduces K sequential
     ``run_chain`` calls bit-for-bit on elementwise targets.
 
+    ``stepping="masked"`` (subsampled kernel only) switches to the
+    masked-continuation superstep — chains that finish their sequential test
+    early begin their next transition inside the same compiled loop instead
+    of waiting for the row's slowest test. ``schedule=ScheduleConfig(...)``
+    attaches the per-chain adaptive controller (works in both modes).
+
     With multiple devices visible (and ``shard="auto"`` or ``True``), the
-    vmapped step is wrapped in ``shard_map`` over a 1-d chain mesh, so each
-    device advances ``K / n_devices`` chains with zero cross-device traffic.
+    lock-step vmapped step is wrapped in ``shard_map`` over a 1-d chain
+    mesh, so each device advances ``K / n_devices`` chains with zero
+    cross-device traffic (the masked mode currently runs unsharded).
+
+    Doctest — four subsampled chains, then the masked + adaptive form::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core import (ChainEnsemble, RandomWalk, ScheduleConfig,
+        ...                         SubsampledMHConfig, from_iid_loglik)
+        >>> x = 0.5 + jax.random.normal(jax.random.key(0), (300,))
+        >>> target = from_iid_loglik(lambda th: -0.5 * th**2,
+        ...                          lambda th, idx: -0.5 * (x[idx] - th) ** 2,
+        ...                          None, 300)
+        >>> cfg = SubsampledMHConfig(batch_size=50, epsilon=0.05)
+        >>> ens = ChainEnsemble(target, RandomWalk(0.1), num_chains=4, config=cfg)
+        >>> state, samples, infos = ens.run(jax.random.key(1),
+        ...                                 ens.init(jnp.zeros(())), 20)
+        >>> samples.shape, infos.n_evaluated.shape
+        ((4, 20), (4, 20))
+        >>> fast = ChainEnsemble(target, RandomWalk(0.1), num_chains=4, config=cfg,
+        ...                      stepping="masked", schedule=ScheduleConfig())
+        >>> state, samples, infos = fast.run(jax.random.key(1),
+        ...                                  fast.init(jnp.zeros(())), 20)
+        >>> samples.shape, bool(jnp.all(infos.epsilon >= cfg.epsilon))
+        ((4, 20), True)
     """
 
     target: PartitionedTarget
@@ -90,10 +196,51 @@ class ChainEnsemble:
     collect: Callable[[Params], Any] | None = None
     shard: Any = "auto"  # "auto" | True | False — shard_map over chains
     chain_axis: str = "chains"
+    stepping: str = "lockstep"  # "lockstep" | "masked" (subsampled only)
+    schedule: ScheduleConfig | None = None  # adaptive per-chain controller
+    fused_kernels: str = "auto"  # "auto" | "always" | "never" — (K, m) Pallas path
 
     def __post_init__(self):
         if self.kernel not in ("subsampled", "exact"):
             raise ValueError(f"unknown kernel {self.kernel!r}")
+        if self.stepping not in ("lockstep", "masked"):
+            raise ValueError(f"unknown stepping {self.stepping!r}")
+        if self.fused_kernels not in ("auto", "always", "never"):
+            raise ValueError(f"unknown fused_kernels {self.fused_kernels!r}")
+        if self.kernel == "exact" and (self.stepping == "masked" or self.schedule):
+            raise ValueError(
+                "masked stepping / adaptive scheduling require the subsampled "
+                "kernel (the exact kernel has no sequential test to overlap)"
+            )
+        if self.stepping == "masked" and self.shard is True:
+            raise ValueError("masked stepping runs unsharded; use shard='auto' or False")
+        if self.fused_kernels == "always" and self.stepping != "masked":
+            raise ValueError(
+                "fused_kernels='always' requires stepping='masked' — only the "
+                "masked superstep routes rounds through log_local_ensemble; the "
+                "lock-step scan would silently ignore the flag"
+            )
+
+    # -- derived static config -------------------------------------------
+
+    @property
+    def _config(self) -> SubsampledMHConfig:
+        return self.config or SubsampledMHConfig()
+
+    @functools.cached_property
+    def _buckets(self) -> tuple[int, ...]:
+        if self.schedule is None:
+            return (self._config.batch_size,)
+        return self.schedule.buckets_for(self._config, self.target.num_sections)
+
+    @functools.cached_property
+    def _max_rounds(self) -> int:
+        return adaptive_max_rounds(self._config, self.target.num_sections, self._buckets)
+
+    def _use_fused(self) -> bool:
+        if self.fused_kernels == "never" or self.target.log_local_ensemble is None:
+            return False
+        return self.fused_kernels == "always" or jax.default_backend() == "tpu"
 
     # -- state ------------------------------------------------------------
 
@@ -103,23 +250,42 @@ class ChainEnsemble:
         ``theta0`` is a single pytree broadcast to all chains, or (with
         ``batched=True``) a pytree whose leaves already carry a leading
         (num_chains,) axis — e.g. overdispersed starting points for R-hat.
+
+        Example::
+
+            >>> import jax.numpy as jnp
+            >>> from repro.core import ChainEnsemble, RandomWalk, from_iid_loglik
+            >>> t = from_iid_loglik(lambda th: -0.5 * th**2,
+            ...                     lambda th, idx: jnp.zeros(idx.shape), None, 10)
+            >>> ens = ChainEnsemble(t, RandomWalk(0.1), num_chains=3)
+            >>> ens.init(jnp.zeros(2)).theta.shape
+            (3, 2)
         """
         theta = theta0 if batched else _broadcast_chain_axis(theta0, self.num_chains)
         lead = jax.tree.leaves(theta)[0].shape[0]
         if lead != self.num_chains:
             raise ValueError(f"theta leading axis {lead} != num_chains {self.num_chains}")
         if self.kernel == "subsampled":
-            state0, _ = make_kernel(self.target, self.proposal, self.config or SubsampledMHConfig())
+            state0, _, _ = make_sampler(self._config.sampler, self.target.num_sections)
             sampler = _broadcast_chain_axis(state0, self.num_chains)
         else:
             sampler = jnp.zeros((self.num_chains,), jnp.int32)
-        return EnsembleState(theta, sampler)
+        ctrl = None
+        if self.schedule is not None:
+            ctrl = controller_init(
+                self.schedule, self._config, self.target.num_sections, self.num_chains
+            )
+        return EnsembleState(theta, sampler, ctrl)
 
     # -- single-chain step with a uniform (key, theta, state) signature ---
 
     def _make_step(self):
         if self.kernel == "subsampled":
-            _, step = make_kernel(self.target, self.proposal, self.config or SubsampledMHConfig())
+            scheduled = self.schedule is not None
+            _, step = make_kernel(
+                self.target, self.proposal, self._config, scheduled=scheduled,
+                batch_max=max(self._buckets) if scheduled else None,
+            )
             return step
 
         def exact_step(key, theta, state):
@@ -143,34 +309,232 @@ class ChainEnsemble:
     def _run_jit(self):
         step = self._make_step()
         collect = self.collect or (lambda t: t)
+        sched = self.schedule
+        buckets = self._buckets
+        max_rounds = self._max_rounds
+        n_total = self.target.num_sections
+        eps_floor = sched.epsilon_floor(self._config) if sched else 0.0
 
-        def one_chain(key, theta0, sampler0, num_steps):
+        def one_chain(key, theta0, sampler0, ctrl0, num_steps):
             keys = jax.random.split(key, num_steps)
 
-            def body(carry, k):
-                theta, sstate = carry
-                theta, sstate, info = step(k, theta, sstate)
-                return (theta, sstate), (collect(theta), info)
+            if sched is None:
 
-            (theta, sstate), (samples, infos) = jax.lax.scan(body, (theta0, sampler0), keys)
-            return theta, sstate, samples, infos
+                def body(carry, k):
+                    theta, sstate, ctrl = carry
+                    theta, sstate, info = step(k, theta, sstate)
+                    return (theta, sstate, ctrl), (collect(theta), info)
 
-        def run_all(keys, theta, sampler, num_steps):
-            fn = jax.vmap(lambda k, t, s: one_chain(k, t, s, num_steps))
+            else:
+
+                def body(carry, k):
+                    theta, sstate, ctrl = carry
+                    eps, meff = controller_params(ctrl, buckets)
+                    theta, sstate, info = step(k, theta, sstate, eps, meff, max_rounds)
+                    ctrl = controller_update(ctrl, info, sched, buckets, n_total, eps_floor)
+                    return (theta, sstate, ctrl), (collect(theta), info)
+
+            (theta, sstate, ctrl), (samples, infos) = jax.lax.scan(
+                body, (theta0, sampler0, ctrl0), keys
+            )
+            return theta, sstate, ctrl, samples, infos
+
+        def run_all(keys, theta, sampler, ctrl, num_steps):
+            fn = jax.vmap(lambda k, t, s, c: one_chain(k, t, s, c, num_steps))
             mesh = self._chain_mesh()
             if mesh is not None:
                 from jax.experimental.shard_map import shard_map
                 from jax.sharding import PartitionSpec as P
 
                 spec = P(self.chain_axis)
-                fn = shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec),
-                               out_specs=(spec, spec, spec, spec), check_rep=False)
-            return fn(keys, theta, sampler)
+                fn = shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
+                               out_specs=(spec,) * 5, check_rep=False)
+            return fn(keys, theta, sampler, ctrl)
 
         return jax.jit(run_all, static_argnames=("num_steps",))
 
+    # -- masked-continuation superstep ------------------------------------
+
+    @functools.cached_property
+    def _run_masked_jit(self):
+        target = self.target
+        proposal = self.proposal
+        config = self._config
+        sched = self.schedule
+        collect = self.collect or (lambda t: t)
+        buckets = self._buckets
+        m_max = max(buckets)
+        max_rounds = self._max_rounds
+        n_total = target.num_sections
+        eps_floor = sched.epsilon_floor(config) if sched else 0.0
+        _, reset_fn, draw_fn = make_sampler(config.sampler, n_total)
+        draw_bounded = make_bounded_draw(config.sampler)
+        adaptive = sched is not None
+        use_fused = self._use_fused()
+        K = self.num_chains
+
+        def knobs(ctrl):
+            if not adaptive:
+                return (jnp.full((K,), config.epsilon, jnp.float32),
+                        jnp.full((K,), config.batch_size, jnp.int32))
+            return jax.vmap(lambda c: controller_params(c, buckets))(ctrl)
+
+        def run_masked(keys, theta, sampler, ctrl, num_steps):
+            step_keys = jax.vmap(lambda k: jax.random.split(k, num_steps))(keys)
+            eps0, meff0 = knobs(ctrl)
+            zero = jnp.zeros((K,), jnp.int32)
+            sample_sd = jax.eval_shape(jax.vmap(collect), theta)
+            samples0 = jax.tree.map(
+                lambda s: jnp.zeros((K, num_steps) + s.shape[1:], s.dtype), sample_sd
+            )
+            infos0 = SubsampledMHInfo(
+                accepted=jnp.zeros((K, num_steps), bool),
+                n_evaluated=jnp.zeros((K, num_steps), jnp.int32),
+                rounds=jnp.zeros((K, num_steps), jnp.int32),
+                mu_hat=jnp.zeros((K, num_steps), jnp.float32),
+                mu0=jnp.zeros((K, num_steps), jnp.float32),
+                pvalue=jnp.zeros((K, num_steps), jnp.float32),
+                log_u=jnp.zeros((K, num_steps), jnp.float32),
+                epsilon=jnp.zeros((K, num_steps), jnp.float32),
+                batch_eff=jnp.zeros((K, num_steps), jnp.int32),
+            )
+            carry0 = _MaskedCarry(
+                test_key=keys,  # placeholder; replaced at each chain's first start
+                theta=theta,
+                theta_prop=theta,
+                log_u=jnp.zeros((K,), jnp.float32),
+                mu0=jnp.zeros((K,), jnp.float32),
+                welford=Welford(*(jnp.zeros((K,), jnp.float32) for _ in range(3))),
+                sampler=sampler,
+                controller=ctrl,
+                epsilon=eps0,
+                batch_eff=meff0,
+                steps_done=zero,
+                rounds=zero,
+                fresh=jnp.ones((K,), bool),
+                samples=samples0,
+                infos=infos0,
+                supersteps=jnp.zeros((), jnp.int32),
+            )
+            cap = jnp.int32(num_steps * max_rounds + num_steps + 1)
+
+            def cond(c: _MaskedCarry):
+                return jnp.any(c.steps_done < num_steps) & (c.supersteps < cap)
+
+            def body(c: _MaskedCarry):
+                active = c.steps_done < num_steps
+                start = c.fresh & active
+                pos = jnp.minimum(c.steps_done, num_steps - 1)
+
+                # --- transition start: propose, reset test state (Alg.3 2-6).
+                # Guarded by a scalar cond: mid-test supersteps (no chain
+                # starting) skip the proposal / log_global / reset work
+                # entirely instead of computing and discarding it.
+                def start_block(_):
+                    k_step = jax.vmap(lambda ks, i: ks[i])(step_keys, pos)
+                    th_p, mu0_n, log_u_n, ktest_n = jax.vmap(
+                        lambda k, t: propose_and_mu0(k, t, target, proposal)
+                    )(k_step, c.theta)
+                    eps_n, meff_n = knobs(c.controller)
+                    return (
+                        jnp.where(start, ktest_n, c.test_key),
+                        _bselect(start, th_p, c.theta_prop),
+                        jnp.where(start, mu0_n, c.mu0),
+                        jnp.where(start, log_u_n, c.log_u),
+                        jnp.where(start, eps_n, c.epsilon),
+                        jnp.where(start, meff_n, c.batch_eff),
+                        _bselect(
+                            start,
+                            Welford(*(jnp.zeros((K,), jnp.float32) for _ in range(3))),
+                            c.welford,
+                        ),
+                        _bselect(start, jax.vmap(reset_fn)(c.sampler), c.sampler),
+                        jnp.where(start, 0, c.rounds),
+                    )
+
+                def no_start(_):
+                    return (c.test_key, c.theta_prop, c.mu0, c.log_u, c.epsilon,
+                            c.batch_eff, c.welford, c.sampler, c.rounds)
+
+                (test_key, theta_prop, mu0, log_u, epsilon, batch_eff, welford,
+                 sampler, rounds) = jax.lax.cond(jnp.any(start), start_block, no_start, None)
+
+                # --- one sequential-test round for every active chain
+                pairs = jax.vmap(jax.random.split)(test_key)
+                tkey, sub = pairs[:, 0], pairs[:, 1]
+                if adaptive:
+                    sampler2, idx, valid = jax.vmap(
+                        lambda k, s, m: draw_bounded(k, s, m_max, m)
+                    )(sub, sampler, batch_eff)
+                else:
+                    sampler2, idx, valid = jax.vmap(
+                        lambda k, s: draw_fn(k, s, m_max)
+                    )(sub, sampler)
+                if use_fused:
+                    l = target.log_local_ensemble(c.theta, theta_prop, idx)
+                else:
+                    l = jax.vmap(target.log_local)(c.theta, theta_prop, idx)
+                w2 = jax.vmap(Welford.merge_batch)(welford, l, valid)
+                decision, pval, test_ok, exhausted = jax.vmap(
+                    lambda w, m, e: test_round_decision(w, m, n_total, e)
+                )(w2, mu0, epsilon)
+                rounds2 = rounds + 1
+                done = active & (test_ok | exhausted | (rounds2 >= max_rounds))
+
+                # --- commit finished transitions (Alg.3 15-19)
+                theta_new = _bselect(done & decision, theta_prop, c.theta)
+                info_now = SubsampledMHInfo(
+                    accepted=decision,
+                    n_evaluated=w2.count.astype(jnp.int32),
+                    rounds=rounds2,
+                    mu_hat=w2.mean,
+                    mu0=mu0,
+                    pvalue=pval,
+                    log_u=log_u,
+                    epsilon=epsilon,
+                    batch_eff=batch_eff,
+                )
+                scatter = jax.vmap(_scatter_at)
+                samples = jax.tree.map(
+                    lambda buf, val: scatter(buf, pos, val, done),
+                    c.samples, jax.vmap(collect)(theta_new),
+                )
+                infos = jax.tree.map(
+                    lambda buf, val: scatter(buf, pos, val, done), c.infos, info_now
+                )
+                ctrl = c.controller
+                if adaptive:
+                    ctrl2 = jax.vmap(
+                        lambda cs, i: controller_update(cs, i, sched, buckets, n_total, eps_floor)
+                    )(ctrl, info_now)
+                    ctrl = _bselect(done, ctrl2, ctrl)
+
+                return _MaskedCarry(
+                    test_key=jnp.where(active, tkey, test_key),
+                    theta=theta_new,
+                    theta_prop=theta_prop,
+                    log_u=log_u,
+                    mu0=mu0,
+                    welford=_bselect(active, w2, welford),
+                    sampler=_bselect(active, sampler2, sampler),
+                    controller=ctrl,
+                    epsilon=epsilon,
+                    batch_eff=batch_eff,
+                    steps_done=c.steps_done + done.astype(jnp.int32),
+                    rounds=jnp.where(active, rounds2, rounds),
+                    fresh=jnp.where(active, done, c.fresh),
+                    samples=samples,
+                    infos=infos,
+                    supersteps=c.supersteps + 1,
+                )
+
+            end = jax.lax.while_loop(cond, body, carry0)
+            return end.theta, end.sampler, end.controller, end.samples, end.infos
+
+        return jax.jit(run_masked, static_argnames=("num_steps",))
+
     def _chain_mesh(self):
-        if self.shard is False:
+        if self.shard is False or self.stepping == "masked":
             return None
         devices = jax.devices()
         if len(devices) <= 1:
@@ -194,13 +558,15 @@ class ChainEnsemble:
         """Advance every chain ``num_steps`` transitions in one XLA program.
 
         Returns ``(state, samples, infos)`` with ``samples`` leaves shaped
-        (K, num_steps, ...) and ``infos`` leaves (K, num_steps).
+        (K, num_steps, ...) and ``infos`` leaves (K, num_steps). ``key`` may
+        be one key (split per chain) or a (K,) per-chain key array.
         """
         keys = self._per_chain_keys(key)
-        theta, sampler, samples, infos = self._run_jit(
-            keys, state.theta, state.sampler_state, num_steps=num_steps
+        runner = self._run_masked_jit if self.stepping == "masked" else self._run_jit
+        theta, sampler, ctrl, samples, infos = runner(
+            keys, state.theta, state.sampler_state, state.controller, num_steps=num_steps
         )
-        return EnsembleState(theta, sampler), samples, infos
+        return EnsembleState(theta, sampler, ctrl), samples, infos
 
     def run_timed(self, key: jax.Array, state: EnsembleState, num_steps: int,
                   block_every: int = 1):
@@ -209,6 +575,20 @@ class ChainEnsemble:
 
         Returns (state, dict) with ``transitions_per_sec`` aggregated over
         chains — the number ``benchmarks/multichain_bench.py`` reports.
+
+        Example::
+
+            >>> import jax, jax.numpy as jnp
+            >>> from repro.core import ChainEnsemble, RandomWalk, from_iid_loglik
+            >>> x = jax.random.normal(jax.random.key(0), (50,))
+            >>> t = from_iid_loglik(lambda th: -0.5 * th**2,
+            ...                     lambda th, idx: -0.5 * (x[idx] - th) ** 2,
+            ...                     None, 50)
+            >>> ens = ChainEnsemble(t, RandomWalk(0.1), num_chains=2)
+            >>> state, out = ens.run_timed(jax.random.key(1),
+            ...                            ens.init(jnp.zeros(())), 4, block_every=2)
+            >>> out["samples"].shape, out["wall"] > 0
+            ((2, 4), True)
         """
         import time
 
@@ -260,7 +640,25 @@ def run_ensemble(
     config: SubsampledMHConfig | None = None,
     **kw,
 ):
-    """One-shot convenience wrapper: init + run. Returns (state, samples, infos)."""
+    """One-shot convenience wrapper: init + run. Returns (state, samples, infos).
+
+    Extra keyword arguments reach :class:`ChainEnsemble` — e.g.
+    ``stepping="masked"``, ``schedule=ScheduleConfig()`` for the adaptive
+    masked-continuation engine.
+
+    Example::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core import RandomWalk, from_iid_loglik, run_ensemble
+        >>> x = jax.random.normal(jax.random.key(0), (100,))
+        >>> t = from_iid_loglik(lambda th: -0.5 * th**2,
+        ...                     lambda th, idx: -0.5 * (x[idx] - th) ** 2, None, 100)
+        >>> _, samples, infos = run_ensemble(jax.random.key(1), jnp.zeros(()),
+        ...                                  t, RandomWalk(0.1), num_chains=2,
+        ...                                  num_steps=10)
+        >>> samples.shape
+        (2, 10)
+    """
     ens = ChainEnsemble(target, proposal, num_chains, kernel=kernel, config=config, **kw)
     state = ens.init(theta0)
     return ens.run(key, state, num_steps)

@@ -90,6 +90,25 @@ def fy_draw(
     return FisherYatesState(idx, new_pos, state.size), out, valid
 
 
+def fy_draw_bounded(
+    key: jax.Array, state: FisherYatesState, m_max: int, m_eff: jax.Array
+) -> tuple[FisherYatesState, jax.Array, jax.Array]:
+    """Fisher–Yates draw with a *traced* effective batch size.
+
+    Shapes stay static at ``m_max`` (so one compiled program serves every
+    batch-size bucket of the adaptive scheduler); only the first ``m_eff``
+    lanes are valid and only those consume pool positions — the next draw
+    resumes at ``pos + m_eff``. The extra swaps beyond ``m_eff`` merely
+    re-permute the tail, which leaves future without-replacement draws
+    exactly uniform (any permutation is a valid Fisher–Yates start state).
+    """
+    m_eff = jnp.clip(jnp.asarray(m_eff, jnp.int32), 0, m_max)
+    new_state, idx, valid = fy_draw(key, state, m_max)
+    valid = valid & (jnp.arange(m_max, dtype=jnp.int32) < m_eff)
+    new_pos = jnp.minimum(state.pos + m_eff, state.size)
+    return FisherYatesState(new_state.idx, new_pos, state.size), idx, valid
+
+
 class StreamSliceState(NamedTuple):
     """TPU-native without-replacement sampler over a pre-permuted pool.
 
@@ -125,10 +144,37 @@ def stream_draw(
     return StreamSliceState(jnp.minimum(state.pos + m, state.n), state.n), out, valid
 
 
+def stream_draw_bounded(
+    key: jax.Array, state: StreamSliceState, m_max: int, m_eff: jax.Array
+) -> tuple[StreamSliceState, jax.Array, jax.Array]:
+    """Stream-slice draw with a traced effective batch size <= ``m_max``.
+
+    Lanes past ``m_eff`` are flagged invalid and do NOT advance the stream
+    position, so the pool is consumed at exactly the adaptive rate.
+    """
+    del key
+    m_eff = jnp.clip(jnp.asarray(m_eff, jnp.int32), 0, m_max)
+    offs = state.pos + jnp.arange(m_max, dtype=jnp.int32)
+    valid = (offs < state.n) & (jnp.arange(m_max, dtype=jnp.int32) < m_eff)
+    out = jnp.minimum(offs, state.n - 1).astype(jnp.int32)
+    return StreamSliceState(jnp.minimum(state.pos + m_eff, state.n), state.n), out, valid
+
+
 def make_sampler(kind: str, n: int):
     """Returns (init_state, reset_fn, draw_fn) for ``kind`` in {fy, stream}."""
     if kind == "fy":
         return fy_init(n), fy_reset, fy_draw
     if kind == "stream":
         return stream_init(n), stream_reset, stream_draw
+    raise ValueError(f"unknown sampler kind: {kind!r}")
+
+
+def make_bounded_draw(kind: str):
+    """The bounded twin of ``make_sampler``'s draw_fn:
+    draw(key, state, m_max static, m_eff traced) -> (state, idx[m_max], valid).
+    """
+    if kind == "fy":
+        return fy_draw_bounded
+    if kind == "stream":
+        return stream_draw_bounded
     raise ValueError(f"unknown sampler kind: {kind!r}")

@@ -1,0 +1,201 @@
+"""Adaptive per-chain scheduling for the subsampled-MH ensemble.
+
+The sequential test (Alg. 2) makes each transition's cost data dependent:
+an easy accept/reject decision stops after one mini-batch, a hard one burns
+the whole pool. Two static knobs govern that trade — ``batch_size`` (sections
+per round) and ``epsilon`` (the test's p-value tolerance) — and the right
+setting differs per chain and drifts as chains move through the posterior.
+
+This module closes the ROADMAP's "async / adaptive chain scheduling" item
+with a jittable per-chain controller in the spirit of the adaptive
+subsampling patterns surveyed by Angelino et al. (*Patterns of Scalable
+Bayesian Inference*): after every completed transition it folds that
+transition's ``rounds`` / ``n_evaluated`` / ``accepted`` into trailing EMAs
+and re-tunes
+
+  * ``batch_size`` within a **compile-time bucket set**: chains whose tests
+    run long (rounds EMA above ``rounds_high``) step up to a bigger bucket so
+    they finish in fewer rounds and stop stalling the vmapped row; chains
+    that decide in ~one round step back down, touching less data per
+    transition (the paper's measured sublinearity metric). Buckets are
+    static, so the program is compiled once; the *effective* batch is a
+    traced per-chain value applied through the bounded draws in
+    :mod:`repro.core.samplers`.
+  * ``epsilon`` within ``[epsilon floor, epsilon_max]``: a chain that keeps
+    exhausting its pool (the decision is statistically hard, so the exact
+    fallback is doing O(N) work anyway) relaxes its tolerance multiplicatively
+    to stop earlier; easy chains decay back to the floor — the configured
+    ``SubsampledMHConfig.epsilon`` — restoring the user's accuracy target.
+
+Everything is a scalar-per-chain pytree (:class:`ControllerState`) threaded
+through :func:`repro.core.subsampled_mh.subsampled_mh_step` by
+:class:`repro.core.ensemble.ChainEnsemble`, in both the lock-step and the
+masked-continuation stepping modes. The controller is pure and jittable, so
+it composes with ``vmap``/``scan``/``while_loop`` like every other kernel in
+this package (the composable-kernel discipline of Handa et al.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ControllerState(NamedTuple):
+    """Per-chain adaptation state; every field is a scalar (or, in ensemble
+    use, a (K,)-leaved pytree). ``bucket`` indexes the static bucket tuple,
+    ``epsilon`` is the chain's current tolerance, the ``ema_*`` fields are
+    trailing averages of the last transitions' test statistics."""
+
+    bucket: jax.Array  # int32 index into the static batch-bucket tuple
+    epsilon: jax.Array  # f32 current per-chain tolerance
+    ema_rounds: jax.Array  # f32 trailing mean of rounds per transition
+    ema_frac: jax.Array  # f32 trailing mean of n_evaluated / N
+    ema_accept: jax.Array  # f32 trailing acceptance rate
+    t: jax.Array  # int32 transitions folded in so far
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Static controller configuration (hashable; safe to close over in jit).
+
+    ``batch_buckets``: the compile-time set of candidate batch sizes. When
+    ``None`` it is derived from the kernel's base ``batch_size`` as
+    ``{m//2, m, 2m, 4m}`` clipped to ``[1, N]`` (see :func:`buckets_for`).
+
+    ``epsilon_min``: the tolerance floor. ``None`` means "the base
+    ``SubsampledMHConfig.epsilon``" — adaptation may temporarily *relax* the
+    test on hard chains but never makes it stricter than requested, and easy
+    chains always decay back to the floor.
+
+    Example::
+
+        >>> sched = ScheduleConfig(epsilon_max=0.2)
+        >>> from repro.core import SubsampledMHConfig
+        >>> sched.buckets_for(SubsampledMHConfig(batch_size=100), num_sections=5000)
+        (50, 100, 200, 400)
+    """
+
+    batch_buckets: tuple[int, ...] | None = None
+    epsilon_max: float = 0.2
+    epsilon_min: float | None = None  # None -> base config epsilon (the floor)
+    adapt_batch_size: bool = True
+    adapt_epsilon: bool = True
+    ema_halflife: float = 8.0  # transitions until a stat's weight halves
+    rounds_high: float = 3.0  # rounds EMA above this -> bigger bucket
+    rounds_low: float = 1.25  # rounds EMA below this -> smaller bucket
+    exhaust_frac: float = 0.9  # n_evaluated/N above this -> relax epsilon
+    epsilon_grow: float = 1.25
+    epsilon_decay: float = 0.97
+
+    def __post_init__(self):
+        if self.batch_buckets is not None:
+            b = tuple(sorted(set(int(x) for x in self.batch_buckets)))
+            if not b or b[0] < 1:
+                raise ValueError(f"batch_buckets must be positive ints, got {self.batch_buckets}")
+            object.__setattr__(self, "batch_buckets", b)
+        if not 0.0 < self.epsilon_decay <= 1.0 or self.epsilon_grow < 1.0:
+            raise ValueError("need 0 < epsilon_decay <= 1 <= epsilon_grow")
+
+    def buckets_for(self, config, num_sections: int | None = None) -> tuple[int, ...]:
+        """The sorted static bucket tuple for a given kernel config."""
+        if self.batch_buckets is not None:
+            buckets = self.batch_buckets
+        else:
+            m = config.batch_size
+            buckets = tuple(sorted({max(1, m // 2), m, 2 * m, 4 * m}))
+        if num_sections is not None:
+            buckets = tuple(sorted({min(b, num_sections) for b in buckets}))
+        return buckets
+
+    def epsilon_floor(self, config) -> float:
+        eps = config.epsilon if self.epsilon_min is None else self.epsilon_min
+        return float(min(eps, self.epsilon_max))
+
+
+def controller_init(
+    sched: ScheduleConfig,
+    config,
+    num_sections: int,
+    num_chains: int | None = None,
+) -> ControllerState:
+    """Initial controller state: base bucket, floor epsilon, neutral EMAs.
+
+    With ``num_chains`` given, every field carries a leading (K,) axis so the
+    state vmaps/shards exactly like the sampler state.
+    """
+    buckets = sched.buckets_for(config, num_sections)
+    base = min(range(len(buckets)), key=lambda i: abs(buckets[i] - config.batch_size))
+    st = ControllerState(
+        bucket=jnp.asarray(base, jnp.int32),
+        epsilon=jnp.asarray(sched.epsilon_floor(config), jnp.float32),
+        ema_rounds=jnp.ones((), jnp.float32),
+        ema_frac=jnp.asarray(min(config.batch_size / max(num_sections, 1), 1.0), jnp.float32),
+        ema_accept=jnp.asarray(0.5, jnp.float32),
+        t=jnp.zeros((), jnp.int32),
+    )
+    if num_chains is None:
+        return st
+    return jax.tree.map(lambda l: jnp.broadcast_to(l, (num_chains,) + l.shape), st)
+
+
+def controller_params(
+    state: ControllerState, buckets: tuple[int, ...]
+) -> tuple[jax.Array, jax.Array]:
+    """The knobs a transition should run with: (epsilon f32, batch_eff i32).
+
+    ``buckets`` is the static tuple the ``bucket`` index points into; the
+    returned effective batch size is a traced value <= max(buckets).
+    """
+    arr = jnp.asarray(buckets, jnp.int32)
+    return state.epsilon, arr[jnp.clip(state.bucket, 0, len(buckets) - 1)]
+
+
+def controller_update(
+    state: ControllerState,
+    info,
+    sched: ScheduleConfig,
+    buckets: tuple[int, ...],
+    num_sections: int,
+    epsilon_floor: float,
+) -> ControllerState:
+    """Fold one completed transition's info into the controller (jittable).
+
+    ``info`` needs ``rounds``, ``n_evaluated`` and ``accepted`` fields —
+    scalar entries of :class:`repro.core.subsampled_mh.SubsampledMHInfo`.
+    Bucket moves are hysteretic (one step per transition, driven by the
+    rounds EMA); epsilon moves multiplicatively, clamped to
+    ``[epsilon_floor, epsilon_max]``.
+    """
+    decay = jnp.float32(2.0 ** (-1.0 / max(sched.ema_halflife, 1e-6)))
+    mix = lambda old, new: decay * old + (1.0 - decay) * jnp.asarray(new, jnp.float32)
+    ema_rounds = mix(state.ema_rounds, info.rounds)
+    ema_frac = mix(state.ema_frac, info.n_evaluated / jnp.float32(max(num_sections, 1)))
+    ema_accept = mix(state.ema_accept, info.accepted)
+
+    up = ema_rounds > sched.rounds_high
+    down = (ema_rounds < sched.rounds_low) & ~up
+    bucket = jnp.clip(
+        state.bucket + up.astype(jnp.int32) - down.astype(jnp.int32), 0, len(buckets) - 1
+    )
+    if not sched.adapt_batch_size:
+        bucket = state.bucket
+
+    hard = info.n_evaluated >= sched.exhaust_frac * num_sections
+    eps = jnp.where(
+        hard, state.epsilon * sched.epsilon_grow, state.epsilon * sched.epsilon_decay
+    )
+    eps = jnp.clip(eps, jnp.float32(epsilon_floor), jnp.float32(sched.epsilon_max))
+    if not sched.adapt_epsilon:
+        eps = state.epsilon
+
+    return ControllerState(
+        bucket=bucket,
+        epsilon=eps,
+        ema_rounds=ema_rounds,
+        ema_frac=ema_frac,
+        ema_accept=ema_accept,
+        t=state.t + 1,
+    )

@@ -29,6 +29,26 @@ import jax.numpy as jnp
 from .stats import Welford, finite_population_std_err, two_sided_t_pvalue
 
 
+def test_round_decision(welford: Welford, mu0, n_total, epsilon):
+    """One round's stopping logic on the running accumulator (Alg. 2 steps
+    7–14). Returns ``(decision, pvalue, test_ok, exhausted)``; shared by
+    :func:`sequential_test` and the masked-continuation superstep of
+    :class:`repro.core.ensemble.ChainEnsemble` so the two stepping modes are
+    float-for-float identical. ``epsilon`` may be a traced per-chain scalar
+    (the adaptive scheduler's knob)."""
+    n = welford.count
+    exhausted = n >= n_total
+    s = finite_population_std_err(welford, n_total)
+    df = jnp.maximum(n - 1.0, 1.0)
+    tstat = jnp.where(s > 0, jnp.abs(welford.mean - mu0) / jnp.maximum(s, 1e-30), jnp.inf)
+    pval = jnp.where(s > 0, two_sided_t_pvalue(tstat, df), jnp.zeros((), jnp.float32))
+    # s_l == 0 guard: no test unless the sample std is positive — except
+    # when the pool is exhausted, where the comparison is exact anyway.
+    test_ok = (welford.std > 0) & (pval < epsilon)
+    decision = welford.mean > mu0
+    return decision, pval, test_ok, exhausted
+
+
 class SeqTestResult(NamedTuple):
     decision: jax.Array  # bool: True = H1 (mu > mu0) = accept
     n_evaluated: jax.Array  # int32: local sections actually evaluated
@@ -50,17 +70,43 @@ def sequential_test(
     epsilon: float,
     max_rounds: int | None = None,
     aux=None,
+    batch_eff=None,
+    draw_bounded_fn: Callable | None = None,
 ) -> SeqTestResult:
     """Run the sequential test inside a single jittable while_loop.
 
     draw_fn(key, sampler_state, m) -> (sampler_state, idx[m], valid[m])
     eval_fn(idx[m]) -> l[m]   (per-section log-weight sums)
 
+    ``epsilon`` may be a traced scalar (per-chain adaptive tolerance). With
+    ``batch_eff`` (a traced effective batch size <= ``batch_size``) and a
+    matching ``draw_bounded_fn(key, state, m_max, m_eff)``, each round's
+    shapes stay at the static ``batch_size`` but only ``batch_eff`` sections
+    are drawn, evaluated into the statistics, and consumed from the pool —
+    the adaptive scheduler's bucket mechanism (see
+    :mod:`repro.core.schedule`). Pass an explicit ``max_rounds`` that covers
+    pool exhaustion at the smallest bucket in that case.
+
     When ``aux`` is given, eval_fn is stateful: eval_fn(idx, aux) -> (l, aux).
     This lets evaluators carry caches across rounds (the Sec-3.5 lazy
     stale-value mechanism at tensor scale).
+
+    Doctest — an easy decision (all l_i far above mu0) stops after one round::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.core import make_sampler, sequential_test
+        >>> state0, reset, draw = make_sampler("stream", 1000)
+        >>> res = sequential_test(
+        ...     key=jax.random.key(0), mu0=jnp.float32(-1.0), draw_fn=draw,
+        ...     eval_fn=lambda idx: idx.astype(jnp.float32),
+        ...     sampler_state=reset(state0), num_sections=1000,
+        ...     batch_size=50, epsilon=0.05)
+        >>> bool(res.decision), int(res.rounds), int(res.n_evaluated)
+        (True, 1, 50)
     """
     n_total = num_sections
+    if batch_eff is not None and draw_bounded_fn is None:
+        raise ValueError("batch_eff requires a matching draw_bounded_fn")
     if max_rounds is None:
         try:
             max_rounds = int(math.ceil(int(n_total) / batch_size))
@@ -96,24 +142,18 @@ def sequential_test(
 
     def body(st: _St):
         key, sub = jax.random.split(st.key)
-        sampler, idx, valid = draw_fn(sub, st.sampler, batch_size)
+        if batch_eff is None:
+            sampler, idx, valid = draw_fn(sub, st.sampler, batch_size)
+        else:
+            sampler, idx, valid = draw_bounded_fn(sub, st.sampler, batch_size, batch_eff)
         if stateful:
             l, new_aux = eval_fn(idx, st.aux)
         else:
             l, new_aux = eval_fn(idx), st.aux
         w = st.welford.merge_batch(l, valid)
-        n = w.count
         rounds = st.rounds + 1
-        exhausted = n >= n_total
-        s = finite_population_std_err(w, n_total)
-        df = jnp.maximum(n - 1.0, 1.0)
-        tstat = jnp.where(s > 0, jnp.abs(w.mean - mu0) / jnp.maximum(s, 1e-30), jnp.inf)
-        pval = jnp.where(s > 0, two_sided_t_pvalue(tstat, df), jnp.zeros((), jnp.float32))
-        # s_l == 0 guard: no test unless the sample std is positive — except
-        # when the pool is exhausted, where the comparison is exact anyway.
-        test_ok = (w.std > 0) & (pval < epsilon)
+        decision, pval, test_ok, exhausted = test_round_decision(w, mu0, n_total, epsilon)
         done = test_ok | exhausted | (rounds >= max_rounds)
-        decision = w.mean > mu0
         return _St(key, sampler, w, rounds, done, decision, pval, new_aux)
 
     st = jax.lax.while_loop(cond, body, st0)

@@ -179,7 +179,9 @@ def ensemble_summary(infos) -> dict:
 
     Returns per-chain acceptance rates and mean evaluated-section counts
     plus their ensemble aggregates — the Sec-4 "fraction of data touched"
-    numbers, now across chains.
+    numbers, now across chains. When the infos carry the adaptation trace
+    (``epsilon`` / ``batch_eff`` from :mod:`repro.core.schedule`), their
+    per-chain means and final values are summarized too.
     """
     acc = np.asarray(infos.accepted, np.float64)
     n_eval = np.asarray(infos.n_evaluated, np.float64)
@@ -193,6 +195,38 @@ def ensemble_summary(infos) -> dict:
         rounds = np.asarray(infos.rounds, np.float64)
         out["mean_rounds"] = rounds.mean(axis=1)
         out["mean_rounds_overall"] = float(rounds.mean())
+        out["rounds_tail"] = tail_latency_summary(rounds)
+    if hasattr(infos, "epsilon"):
+        eps = np.asarray(infos.epsilon, np.float64)
+        out["mean_epsilon"] = eps.mean(axis=1)
+        out["final_epsilon"] = eps[:, -1]
+    if hasattr(infos, "batch_eff"):
+        be = np.asarray(infos.batch_eff, np.float64)
+        out["mean_batch_eff"] = be.mean(axis=1)
+        out["final_batch_eff"] = be[:, -1]
+    return out
+
+
+def tail_latency_summary(rounds, percentiles=(50, 90, 99)) -> dict:
+    """Tail statistics of per-transition sequential-test rounds.
+
+    In the lock-step ensemble the whole vmapped row pays every transition's
+    *max* round count, so the tail of this distribution — not its mean — is
+    what throughput is made of; the masked-continuation mode exists to make
+    the tail per-chain instead of per-row. Returns percentiles, mean/max,
+    and a histogram over integer round counts (``hist[i]`` = transitions
+    that took ``edges[i]`` rounds).
+    """
+    r = np.asarray(rounds, np.float64).ravel()
+    if r.size == 0:
+        raise ValueError("tail_latency_summary needs at least one transition")
+    out = {f"p{p}": float(np.percentile(r, p)) for p in percentiles}
+    out["mean"] = float(r.mean())
+    out["max"] = float(r.max())
+    edges = np.arange(1, max(int(r.max()), 1) + 1)
+    hist, _ = np.histogram(r, bins=np.concatenate([edges - 0.5, [edges[-1] + 0.5]]))
+    out["edges"] = edges
+    out["hist"] = hist
     return out
 
 

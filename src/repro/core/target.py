@@ -39,6 +39,12 @@ class PartitionedTarget:
     # Optional: full-posterior log density (global part + all sections), used
     # by diagnostics and by gradient-informed proposals. May be None.
     log_density: Callable[[Params], jax.Array] | None = None
+    # Optional ensemble-fused local evaluation: (theta, theta', idx) with a
+    # leading (K,) chain axis on every argument -> (K, m) deltas, backed by a
+    # fused kernel (e.g. repro.kernels.ops.batched_logit_delta). When set and
+    # the ops dispatch selects Pallas, ChainEnsemble routes each sequential-
+    # test round through it instead of vmapping ``log_local``.
+    log_local_ensemble: Callable[[Params, Params, jax.Array], jax.Array] | None = None
 
 
 def from_iid_loglik(

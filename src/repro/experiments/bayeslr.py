@@ -81,11 +81,19 @@ def make_target(x: jax.Array, y: jax.Array, prior_var: float = PRIOR_VAR) -> Par
         z = -jnp.logaddexp(0.0, -y * (x @ w)).sum()
         return (-0.5 / prior_var) * jnp.sum(w**2) + z
 
+    def log_local_ensemble(w, w_p, idx):
+        # (K, m) multi-chain round through the fused kernel dispatch: one
+        # pallas_call per sequential-test round on TPU, pure-jnp ref on CPU.
+        from ..kernels import ops
+
+        return ops.batched_logit_delta(x[idx], y[idx], w, w_p)
+
     return PartitionedTarget(
         num_sections=n,
         log_global=log_global,
         log_local=log_local_batched,
         log_density=log_density,
+        log_local_ensemble=log_local_ensemble,
     )
 
 
@@ -124,13 +132,17 @@ def run_posterior_ensemble(
     sampler: str = "stream",
     sigma: float = 0.05,
     overdisperse: float = 0.5,
+    stepping: str = "lockstep",
+    schedule=None,
 ):
     """K-chain posterior sampling with cross-chain diagnostics.
 
     Runs a :class:`repro.core.ensemble.ChainEnsemble` from overdispersed
     starting points and returns (samples (K, T, D), diagnostics dict with
     per-dimension split-R-hat, total ESS of w[0], and the per-chain
-    acceptance / evaluated-section summaries).
+    acceptance / evaluated-section summaries). ``stepping="masked"`` plus a
+    :class:`repro.core.schedule.ScheduleConfig` turns on the adaptive
+    masked-continuation engine.
     """
     from ..core import (
         ChainEnsemble,
@@ -144,7 +156,8 @@ def run_posterior_ensemble(
     target = make_target(data.x_train, data.y_train)
     d = data.x_train.shape[1]
     cfg = SubsampledMHConfig(batch_size=batch_size, epsilon=epsilon, sampler=sampler)
-    ens = ChainEnsemble(target, RandomWalk(sigma), num_chains, kernel=kernel, config=cfg)
+    ens = ChainEnsemble(target, RandomWalk(sigma), num_chains, kernel=kernel, config=cfg,
+                        stepping=stepping, schedule=schedule)
     k_init, k_run = jax.random.split(key)
     theta0 = overdisperse * jax.random.normal(k_init, (num_chains, d))
     state = ens.init(theta0, batched=True)

@@ -1,0 +1,312 @@
+"""Adaptive scheduling layer: controller edge cases, bounded draws, and the
+masked-continuation stepping mode's equivalence/throughput properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChainEnsemble,
+    RandomWalk,
+    ScheduleConfig,
+    SubsampledMHConfig,
+    SubsampledMHInfo,
+    controller_init,
+    controller_params,
+    controller_update,
+    fy_draw_bounded,
+    fy_init,
+    fy_reset,
+    run_chain,
+    split_rhat,
+    stream_draw_bounded,
+    stream_init,
+    tail_latency_summary,
+)
+
+CFG = SubsampledMHConfig(batch_size=50, epsilon=0.05)
+
+
+def _info(rounds=1, n_evaluated=50, accepted=True):
+    z = lambda v, dt: jnp.asarray(v, dt)
+    return SubsampledMHInfo(
+        accepted=z(accepted, bool), n_evaluated=z(n_evaluated, jnp.int32),
+        rounds=z(rounds, jnp.int32), mu_hat=z(0.0, jnp.float32),
+        mu0=z(0.0, jnp.float32), pvalue=z(0.5, jnp.float32),
+        log_u=z(-1.0, jnp.float32), epsilon=z(0.05, jnp.float32),
+        batch_eff=z(50, jnp.int32),
+    )
+
+
+def _drive(sched, info, steps, n=1000, cfg=CFG):
+    buckets = sched.buckets_for(cfg, n)
+    floor = sched.epsilon_floor(cfg)
+    st = controller_init(sched, cfg, n)
+    for _ in range(steps):
+        st = controller_update(st, info, sched, buckets, n, floor)
+    return st, buckets
+
+
+# ---------------------------------------------------------------------------
+# Controller unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_epsilon_clamped_at_floor_on_easy_chains():
+    """A stream of easy one-round decisions decays epsilon to the floor —
+    the base config epsilon — and never below it."""
+    sched = ScheduleConfig(epsilon_max=0.2)
+    st, _ = _drive(sched, _info(rounds=1, n_evaluated=50), steps=400)
+    assert float(st.epsilon) == pytest.approx(CFG.epsilon)
+    # one more easy transition cannot go under the floor
+    buckets = sched.buckets_for(CFG, 1000)
+    st2 = controller_update(st, _info(), sched, buckets, 1000, sched.epsilon_floor(CFG))
+    assert float(st2.epsilon) >= CFG.epsilon
+
+
+def test_epsilon_clamped_at_ceiling_on_hard_chains():
+    sched = ScheduleConfig(epsilon_max=0.2)
+    st, _ = _drive(sched, _info(rounds=20, n_evaluated=1000), steps=400)
+    assert float(st.epsilon) == pytest.approx(0.2)
+
+
+def test_bucket_saturates_at_boundaries():
+    sched = ScheduleConfig(batch_buckets=(25, 50, 100))
+    # hard chains climb to the top bucket and stay there
+    hi, buckets = _drive(sched, _info(rounds=10, n_evaluated=500), steps=50)
+    assert int(hi.bucket) == len(buckets) - 1
+    _, meff = controller_params(hi, buckets)
+    assert int(meff) == 100
+    # easy chains descend to the bottom bucket and stay there
+    lo, _ = _drive(sched, _info(rounds=1, n_evaluated=25), steps=50)
+    assert int(lo.bucket) == 0
+    eps, meff = controller_params(lo, buckets)
+    assert int(meff) == 25 and float(eps) >= CFG.epsilon
+
+
+def test_adaptation_toggles_freeze_knobs():
+    sched = ScheduleConfig(adapt_batch_size=False, adapt_epsilon=False)
+    st, buckets = _drive(sched, _info(rounds=50, n_evaluated=1000), steps=30)
+    init = controller_init(sched, CFG, 1000)
+    assert int(st.bucket) == int(init.bucket)
+    assert float(st.epsilon) == float(init.epsilon)
+    # EMAs still track even with frozen knobs
+    assert float(st.ema_rounds) > 10
+
+
+def test_schedule_config_validation():
+    with pytest.raises(ValueError):
+        ScheduleConfig(batch_buckets=(0, 10))
+    with pytest.raises(ValueError):
+        ScheduleConfig(epsilon_grow=0.5)
+    # buckets are sorted, deduped, and clipped to the pool
+    sched = ScheduleConfig(batch_buckets=(100, 25, 100, 50))
+    assert sched.batch_buckets == (25, 50, 100)
+    assert sched.buckets_for(CFG, num_sections=60) == (25, 50, 60)
+
+
+def test_controller_init_batched_and_jittable():
+    sched = ScheduleConfig()
+    st = controller_init(sched, CFG, 1000, num_chains=8)
+    assert st.bucket.shape == (8,)
+    buckets = sched.buckets_for(CFG, 1000)
+    upd = jax.jit(jax.vmap(
+        lambda s, i: controller_update(s, i, sched, buckets, 1000, CFG.epsilon)
+    ))
+    infos = jax.tree.map(lambda l: jnp.broadcast_to(l, (8,) + l.shape), _info(rounds=9))
+    st2 = upd(st, infos)
+    assert st2.t.shape == (8,) and int(st2.t[0]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Bounded without-replacement draws (the bucket mechanism)
+# ---------------------------------------------------------------------------
+
+
+def test_fy_draw_bounded_consumes_pool_at_effective_rate():
+    n, m_max = 40, 16
+    state = fy_reset(fy_init(n))
+    key = jax.random.key(0)
+    seen = []
+    for r in range(10):
+        key, sub = jax.random.split(key)
+        m_eff = jnp.int32(5)
+        state, idx, valid = fy_draw_bounded(sub, state, m_max, m_eff)
+        assert valid.shape == (m_max,)
+        got = np.asarray(idx)[np.asarray(valid)]
+        assert len(got) == min(5, n - 5 * r)
+        seen.extend(got.tolist())
+        if int(state.pos) >= n:
+            break
+    assert int(state.pos) == n
+    assert sorted(seen) == list(range(n)), "bounded draws must still be a permutation"
+
+
+def test_stream_draw_bounded_advances_by_m_eff():
+    state = stream_init(100)
+    state, idx, valid = stream_draw_bounded(jax.random.key(0), state, 32, jnp.int32(10))
+    assert int(state.pos) == 10
+    assert int(valid.sum()) == 10
+    np.testing.assert_array_equal(np.asarray(idx[:10]), np.arange(10))
+    # clamp: m_eff beyond m_max is capped
+    state, _, valid = stream_draw_bounded(jax.random.key(0), state, 32, jnp.int32(99))
+    assert int(valid.sum()) == 32 and int(state.pos) == 42
+
+
+# ---------------------------------------------------------------------------
+# Masked-continuation stepping: equivalence and correctness
+# ---------------------------------------------------------------------------
+
+
+def test_masked_matches_lockstep_bit_for_bit_when_adaptation_disabled(
+    gaussian_target_factory,
+):
+    """Acceptance criterion: with no schedule, stepping="masked" reproduces
+    the lock-step engine's samples/infos exactly (pvalue is compared to f32
+    tolerance only: XLA fuses the betainc tail differently in the two
+    programs, which moves the last ulp without touching any decision)."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    K, T = 3, 80
+    keys = jax.random.split(jax.random.key(7), K)
+    lock = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG)
+    mask = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG, stepping="masked")
+    st_l, s_l, i_l = lock.run(keys, lock.init(jnp.zeros(())), T)
+    st_m, s_m, i_m = mask.run(keys, mask.init(jnp.zeros(())), T)
+    np.testing.assert_array_equal(np.asarray(s_l), np.asarray(s_m))
+    np.testing.assert_array_equal(np.asarray(st_l.theta), np.asarray(st_m.theta))
+    for field in ("accepted", "n_evaluated", "rounds", "mu_hat", "mu0", "log_u",
+                  "epsilon", "batch_eff"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(i_l, field)), np.asarray(getattr(i_m, field)), err_msg=field
+        )
+    np.testing.assert_allclose(
+        np.asarray(i_l.pvalue), np.asarray(i_m.pvalue), rtol=1e-5, atol=1e-30
+    )
+
+
+def test_masked_single_chain_matches_run_chain(gaussian_target_factory):
+    """K=1 edge case: the superstep degenerates to a single chain and must
+    still reproduce the sequential driver."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    keys = jax.random.split(jax.random.key(3), 1)
+    ens = ChainEnsemble(target, RandomWalk(0.05), 1, config=CFG, stepping="masked")
+    _, samples, infos = ens.run(keys, ens.init(jnp.zeros(())), 60)
+    _, s_seq, i_seq = run_chain(keys[0], jnp.zeros(()), target, RandomWalk(0.05), 60,
+                                config=CFG)
+    np.testing.assert_array_equal(np.asarray(samples[0]), np.asarray(s_seq))
+    np.testing.assert_array_equal(np.asarray(infos.accepted[0]), np.asarray(i_seq.accepted))
+
+
+def test_masked_adaptive_stays_within_knob_bounds(gaussian_target_factory):
+    target, pm, ps = gaussian_target_factory(n=600, seed=1)
+    sched = ScheduleConfig(epsilon_max=0.2)
+    K, T = 4, 300
+    ens = ChainEnsemble(target, RandomWalk(0.08), K, config=CFG, stepping="masked",
+                        schedule=sched)
+    state = ens.init(jnp.zeros(()) + pm)
+    state, samples, infos = ens.run(jax.random.key(2), state, T)
+    eps = np.asarray(infos.epsilon)
+    meff = np.asarray(infos.batch_eff)
+    buckets = set(sched.buckets_for(CFG, 600))
+    assert eps.min() >= CFG.epsilon - 1e-7 and eps.max() <= 0.2 + 1e-7
+    assert set(np.unique(meff).tolist()) <= buckets
+    assert np.asarray(state.controller.t).tolist() == [T] * K
+    # chains stay distinct and near the posterior
+    s = np.asarray(samples)
+    assert not np.array_equal(s[0], s[1])
+    assert abs(s[:, T // 2:].mean() - pm) < 6 * ps
+    rhat = split_rhat(s[:, T // 2:])
+    assert rhat < 1.2, f"adaptive chains did not mix: rhat={rhat}"
+
+
+def test_adaptive_lockstep_threads_controller(gaussian_target_factory):
+    """The controller also rides the lock-step scan (per-chain traced knobs
+    through the vmapped subsampled_mh_step)."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    ens = ChainEnsemble(target, RandomWalk(0.05), 3, config=CFG,
+                        schedule=ScheduleConfig())
+    state, samples, infos = ens.run(jax.random.key(0), ens.init(jnp.zeros(())), 50)
+    assert samples.shape == (3, 50)
+    assert np.asarray(state.controller.t).tolist() == [50, 50, 50]
+    assert np.asarray(infos.batch_eff).min() >= 1
+
+
+def test_lockstep_schedule_realizes_buckets_above_base_batch(
+    gaussian_target_factory,
+):
+    """Buckets larger than config.batch_size must actually be drawn in the
+    lock-step scheduled path (the static draw shape is max(buckets), not
+    the base batch size)."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    sched = ScheduleConfig(batch_buckets=(200,))
+    ens = ChainEnsemble(target, RandomWalk(0.05), 2, config=CFG, schedule=sched)
+    _, _, infos = ens.run(jax.random.key(0), ens.init(jnp.zeros(())), 20)
+    assert np.asarray(infos.batch_eff).min() == 200
+    # every transition's first round already merges a full 200-section batch
+    assert np.asarray(infos.n_evaluated).min() >= 200
+
+
+def test_masked_state_carries_across_runs(gaussian_target_factory):
+    """Continuation purity holds in masked mode exactly as in lock-step."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    ens = ChainEnsemble(target, RandomWalk(0.05), 2, config=CFG, stepping="masked",
+                        schedule=ScheduleConfig())
+    keys = jax.random.split(jax.random.key(11), 2)
+    st_a, s_a, _ = ens.run(keys, ens.init(jnp.zeros(())), 40)
+    _, s_c1, _ = ens.run(jax.random.key(12), st_a, 10)
+    _, s_c2, _ = ens.run(jax.random.key(12), st_a, 10)
+    np.testing.assert_array_equal(np.asarray(s_c1), np.asarray(s_c2))
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(st_a.theta)[0]), np.asarray(s_a[:, -1])
+    )
+
+
+def test_ensemble_config_validation(gaussian_target_factory):
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, kernel="exact", stepping="masked")
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, kernel="exact",
+                      schedule=ScheduleConfig())
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, stepping="masked", shard=True)
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, stepping="nope")
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, fused_kernels="maybe")
+    with pytest.raises(ValueError):
+        # only the masked superstep honors the forced fused route
+        ChainEnsemble(target, RandomWalk(0.05), 2, fused_kernels="always")
+
+
+def test_masked_fused_kernel_path_matches_vmap(gaussian_target_factory):
+    """Forcing the fused (K, m) kernel route (interpret/ref off-TPU) agrees
+    with the vmapped log_local path to float tolerance."""
+    import jax.numpy as jnp
+
+    from repro.experiments import bayeslr
+
+    data = bayeslr.synth_2d(jax.random.key(0), n=800)
+    target = bayeslr.make_target(data.x_train, data.y_train)
+    cfg = SubsampledMHConfig(batch_size=50, epsilon=0.05, sampler="stream")
+    K, T = 3, 40
+    keys = jax.random.split(jax.random.key(5), K)
+    plain = ChainEnsemble(target, RandomWalk(0.1), K, config=cfg, stepping="masked",
+                          fused_kernels="never")
+    fused = ChainEnsemble(target, RandomWalk(0.1), K, config=cfg, stepping="masked",
+                          fused_kernels="always")
+    _, s_p, i_p = plain.run(keys, plain.init(jnp.zeros(2)), T)
+    _, s_f, i_f = fused.run(keys, fused.init(jnp.zeros(2)), T)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_f), rtol=2e-4, atol=2e-5)
+    # the decision stream should agree everywhere at this tolerance
+    assert (np.asarray(i_p.accepted) == np.asarray(i_f.accepted)).mean() > 0.95
+
+
+def test_tail_latency_summary_shapes():
+    rounds = np.array([[1, 1, 2, 8], [1, 3, 1, 1]])
+    t = tail_latency_summary(rounds)
+    assert t["max"] == 8.0 and t["p50"] == 1.0
+    assert t["hist"].sum() == rounds.size
+    assert t["edges"][0] == 1 and len(t["edges"]) == len(t["hist"])
+    with pytest.raises(ValueError):
+        tail_latency_summary(np.empty((0,)))
