@@ -1,8 +1,9 @@
-"""Multi-chain throughput: sequential chains vs the three ensemble engines.
+"""Multi-chain throughput: sequential chains vs the ensemble engines, for
+all three paper workloads.
 
 The number that matters for the ROADMAP north star is aggregate
-transitions/sec across an ensemble. This bench runs K subsampled-MH chains
-on the Fig-5 BayesLR target four ways:
+transitions/sec across an ensemble. The BayesLR section runs K subsampled-MH
+chains on the Fig-5 target four ways:
 
   sequential — K independent ``run_chain_timed`` host loops (one jitted
                step, python dispatch per transition: the pre-ensemble idiom),
@@ -22,6 +23,12 @@ Per engine we report end-to-end (including one-time compiles — what a cold
 posterior query costs) and steady-state (compile-excluded) transitions/sec,
 plus a tail-latency histogram of per-transition sequential-test rounds —
 the lock-step row pays the tail's max, the masked modes only its mean.
+
+The ``stochvol-sig/phi`` and ``jointdpm-w`` sections run the other two
+paper workloads' full composite cycles (particle Gibbs + per-variable
+subsampled MH; alpha-MH + Gibbs-z + dynamic-pool w-moves) as K-chain
+ensembles vs K sequential single-chain scans, at K in {4, 16} — the
+K-scaling acceptance row for the composite engine.
 
 Reproduction guide and reference CPU numbers: docs/BENCHMARKS.md.
 """
@@ -107,11 +114,85 @@ def run(n: int = 5000, num_chains: int = 16, steps: int = 100,
     return out
 
 
+def _bench_cycle(cyc, theta0, num_chains: int, steps: int, seed: int, collect):
+    """Steady-state throughput of a composite cycle: K sequential single-chain
+    scans (one shared compile, per-chain dispatch) vs one composite
+    ChainEnsemble program. Compile time excluded on both sides."""
+    from repro.core import ChainEnsemble
+    from repro.core.composite import run_cycle_sequential
+
+    keys = jax.random.split(jax.random.key(seed), num_chains)
+    seq = jax.jit(lambda k: run_cycle_sequential(k, theta0, cyc, steps, collect)[1])
+    jax.block_until_ready(seq(keys[0]))  # compile
+    t0 = time.perf_counter()
+    for c in range(num_chains):
+        jax.block_until_ready(seq(keys[c]))
+    seq_wall = time.perf_counter() - t0
+
+    ens = ChainEnsemble(num_chains=num_chains, transition=cyc, collect=collect)
+    state = ens.init(theta0)
+    warm, _, _ = ens.run(keys, state, steps)  # compile
+    jax.block_until_ready(warm.theta)
+    t0 = time.perf_counter()
+    state, _, _ = ens.run(keys, state, steps)
+    jax.block_until_ready(state.theta)
+    ens_wall = time.perf_counter() - t0
+
+    total = num_chains * steps
+    return {
+        "sequential_tps_steady": total / max(seq_wall, 1e-12),
+        "ensemble_tps_steady": total / max(ens_wall, 1e-12),
+        "ensemble_vs_sequential_steady": seq_wall / max(ens_wall, 1e-12),
+        "ensemble_us_per_transition": 1e6 * ens_wall / total,
+    }
+
+
+def run_stochvol(num_chains: int, steps: int = 40, series: int = 100,
+                 length: int = 5, seed: int = 0) -> dict:
+    """The Sec-4.3 cycle (pgibbs + subsampled-MH sig/phi) at ensemble scale."""
+    from repro.experiments import stochvol
+
+    data = stochvol.synth(jax.random.key(seed), num_series=series, length=length)
+    cyc = stochvol.make_inference_cycle(data.obs, batch_size=100, epsilon=0.05,
+                                        num_particles=15)
+    out = _bench_cycle(cyc, stochvol.init_theta(data.obs), num_chains, steps,
+                       seed + 1, lambda th: th["phi"])
+    out.update(N=series * length, K=num_chains, steps=steps)
+    return out
+
+
+def run_jointdpm(num_chains: int, cycles: int = 5, n: int = 1000,
+                 w_moves: int = 5, seed: int = 0) -> dict:
+    """The Sec-4.2 cycle (alpha-MH + Gibbs-z + dynamic-pool subsampled-MH w)
+    over K replicas. Transitions counted as w-moves (the austerity kernel)."""
+    from repro.experiments import jointdpm
+
+    cfg = jointdpm.JDPMConfig()
+    data = jointdpm.synth(jax.random.key(seed), n=n, n_test=10)
+    cyc = jointdpm.make_inference_cycle(data, cfg, batch_size=100, epsilon=0.3,
+                                        w_moves=w_moves, gibbs_frac=0.25)
+    state0 = jointdpm.init_state(jax.random.key(seed + 1), data, cfg)
+    out = _bench_cycle(cyc, state0, num_chains, cycles, seed + 2,
+                       lambda s: s.alpha)
+    # report per w-move (the subsampled kernel the paper scales)
+    scale = 1.0 / w_moves
+    out["ensemble_us_per_transition"] *= scale
+    out["sequential_tps_steady"] /= scale
+    out["ensemble_tps_steady"] /= scale
+    out.update(N=n, K=num_chains, steps=cycles * w_moves)
+    return out
+
+
+WORKLOADS = {"stochvol": run_stochvol, "jointdpm": run_jointdpm}
+
+
 def main(fast: bool = True):
     if fast:
         configs, steps = [(5000, 4), (5000, 16)], 100
+        workload_ks = (4, 16)
     else:
         configs, steps = [(50_000, 4), (50_000, 16), (50_000, 64)], 400
+        workload_ks = (4, 16)
     rows, raws = [], []
     for n, k in configs:
         r = run(n=n, num_chains=k, steps=steps)
@@ -133,6 +214,16 @@ def main(fast: bool = True):
                 f"_steady={r[f'{engine}_tps_steady']:.0f}"
                 f"_rounds_p50={tail['p50']:.0f}_p99={tail['p99']:.0f}_max={tail['max']:.0f}"
                 + extra,
+            ))
+    for wl_name, wl_fn in WORKLOADS.items():
+        for k in workload_ks:
+            w = wl_fn(k)
+            rows.append((
+                f"multichain_{wl_name}_N{w['N']}_K{w['K']}",
+                w["ensemble_us_per_transition"],
+                f"seq_steady={w['sequential_tps_steady']:.0f}"
+                f"_ens_steady={w['ensemble_tps_steady']:.0f}"
+                f"_ens_vs_seq={w['ensemble_vs_sequential_steady']:.1f}x",
             ))
     return rows, raws
 

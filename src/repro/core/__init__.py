@@ -10,6 +10,13 @@ The paper's primary contribution as a composable JAX module:
   - ``run_chain`` drivers and Sec-3.3 safeguard diagnostics.
 """
 from .chain import acceptance_rate, run_chain, run_chain_timed
+from .composite import (
+    CycleOp,
+    SubsampledMHOp,
+    SweepOp,
+    cycle,
+    run_cycle_sequential,
+)
 from .ensemble import ChainEnsemble, EnsembleState, run_ensemble
 from .mh import MHInfo, mh_step
 from .proposals import MALA, IndependentGaussian, RandomWalk
@@ -65,14 +72,23 @@ from .subsampled_mh import (
     subsampled_mh_step,
 )
 from .target import PartitionedTarget, from_iid_loglik
+from .target_builder import (
+    KernelFamily,
+    build_target,
+    get_family,
+    register_family,
+    registered_families,
+)
 
 __all__ = [
     "MALA",
     "ChainEnsemble",
     "ControllerState",
+    "CycleOp",
     "EnsembleState",
     "FisherYatesState",
     "IndependentGaussian",
+    "KernelFamily",
     "MHInfo",
     "PartitionedTarget",
     "RandomWalk",
@@ -81,14 +97,18 @@ __all__ = [
     "StreamSliceState",
     "SubsampledMHConfig",
     "SubsampledMHInfo",
+    "SubsampledMHOp",
+    "SweepOp",
     "TrialReport",
     "Welford",
     "acceptance_rate",
     "adaptive_max_rounds",
     "autocorrelation",
+    "build_target",
     "controller_init",
     "controller_params",
     "controller_update",
+    "cycle",
     "effective_sample_size",
     "ensemble_summary",
     "expected_batches_theoretical",
@@ -99,6 +119,7 @@ __all__ = [
     "fy_from_buffer",
     "fy_init",
     "fy_reset",
+    "get_family",
     "jarque_bera",
     "make_bounded_draw",
     "make_kernel",
@@ -107,8 +128,11 @@ __all__ = [
     "multichain_ess",
     "predictive_risk",
     "propose_and_mu0",
+    "register_family",
+    "registered_families",
     "run_chain",
     "run_chain_timed",
+    "run_cycle_sequential",
     "run_ensemble",
     "sequential_test",
     "split_rhat",

@@ -1,0 +1,197 @@
+"""Composite transition operators: the paper's ``[infer (cycle (...))]`` at
+ensemble scale.
+
+All three applications of the paper run *programs* of kernels, not a single
+kernel: BayesLR is one subsampled-MH move, but stochastic volatility cycles
+``subsampled_mh sig/phi`` with a particle-Gibbs sweep over the latent paths,
+and the joint DP mixture cycles MH over alpha, Gibbs over assignments, and
+subsampled MH over expert weights. This module gives
+:class:`repro.core.ensemble.ChainEnsemble` that same compositional shape:
+
+  :func:`cycle`          — an ordered cycle of component operators,
+  :class:`SubsampledMHOp` — a per-variable subsampled-MH kernel (its target
+                           may read latent state from ``theta``; when the
+                           target carries ``log_local_ensemble`` and dispatch
+                           selects the fused path, its rounds run as (K, m)
+                           fused-kernel blocks),
+  :class:`SweepOp`        — an opaque inner kernel ``fn(key, theta) -> theta``
+                           (or ``-> (theta, info)``) vmapped over chains:
+                           Gibbs scans, particle-Gibbs sweeps, or any jittable
+                           transition the engine should not introspect.
+
+:func:`run_cycle_sequential` is the single-chain reference driver with the
+identical key-splitting discipline — chain k of a composite ensemble seeded
+with key k reproduces it bit for bit (regression-tested), which is what
+makes the ensemble port of stochvol/jointdpm a pure engine swap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .samplers import make_sampler
+from .subsampled_mh import SubsampledMHConfig, adaptive_max_rounds, subsampled_mh_step
+from .target import PartitionedTarget
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SubsampledMHOp:
+    """One per-variable subsampled-MH component of a composite cycle.
+
+    ``target.num_sections`` must be static; the target's ``log_local`` /
+    ``log_local_ensemble`` may read latent state (e.g. particle-Gibbs paths)
+    from ``theta`` as long as ``proposal`` does not move those leaves.
+    """
+
+    target: PartitionedTarget
+    proposal: Any
+    config: SubsampledMHConfig | None = None
+    name: str | None = None
+
+    @property
+    def cfg(self) -> SubsampledMHConfig:
+        return self.config or SubsampledMHConfig()
+
+    @property
+    def max_rounds(self) -> int:
+        cfg = self.cfg
+        return adaptive_max_rounds(cfg, self.target.num_sections, (cfg.batch_size,))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepOp:
+    """An opaque inner kernel cycled between MH moves.
+
+    ``fn(key, theta) -> theta``, or ``fn(key, theta) -> (theta, info)`` with
+    ``has_info=True`` (the info pytree is recorded per step under this op's
+    name, like the MH ops' :class:`~repro.core.subsampled_mh.SubsampledMHInfo`).
+    """
+
+    fn: Callable
+    name: str | None = None
+    has_info: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class CycleOp:
+    """An ordered cycle of component operators — one engine transition applies
+    each component once, in order (the paper's ``(cycle (...) 1)``)."""
+
+    ops: tuple
+
+    def __post_init__(self):
+        if not self.ops:
+            raise ValueError("cycle() needs at least one component operator")
+        for op in self.ops:
+            if not isinstance(op, (SubsampledMHOp, SweepOp)):
+                raise TypeError(
+                    f"cycle components must be SubsampledMHOp or SweepOp, got {op!r}"
+                )
+        names = self.names
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate component names: {names}")
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return tuple(
+            op.name if op.name is not None else f"op{i}"
+            for i, op in enumerate(self.ops)
+        )
+
+    @property
+    def mh_ops(self) -> tuple[tuple[int, SubsampledMHOp], ...]:
+        return tuple(
+            (i, op) for i, op in enumerate(self.ops) if isinstance(op, SubsampledMHOp)
+        )
+
+
+def cycle(ops) -> CycleOp:
+    """Build a composite cycle operator from a sequence of components.
+
+    Example — one MH variable cycled with an opaque sweep::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core import RandomWalk, SweepOp, SubsampledMHOp, cycle
+        >>> from repro.core import from_iid_loglik
+        >>> t = from_iid_loglik(lambda th: -0.5 * th**2,
+        ...                     lambda th, idx: jnp.zeros(idx.shape), None, 10)
+        >>> c = cycle([SubsampledMHOp(t, RandomWalk(0.1), name="theta"),
+        ...            SweepOp(lambda k, th: th, name="noop")])
+        >>> c.names
+        ('theta', 'noop')
+    """
+    return CycleOp(tuple(ops))
+
+
+def init_cycle_samplers(op_cycle: CycleOp):
+    """Initial sampler state per component (a zeros placeholder for sweeps)."""
+    states = []
+    for op in op_cycle.ops:
+        if isinstance(op, SubsampledMHOp):
+            s0, _, _ = make_sampler(op.cfg.sampler, op.target.num_sections)
+            states.append(s0)
+        else:
+            states.append(jnp.zeros((), jnp.int32))
+    return tuple(states)
+
+
+def run_cycle_sequential(
+    key: jax.Array,
+    theta0: Params,
+    op_cycle: CycleOp,
+    num_steps: int,
+    collect: Callable[[Params], Any] | None = None,
+):
+    """Single-chain reference driver for a composite cycle, one jitted scan.
+
+    Per step the key splits into one subkey per component, consumed in cycle
+    order — exactly the discipline of the ensemble's composite runner, so a
+    K=1 :class:`~repro.core.ensemble.ChainEnsemble` with ``transition=cycle``
+    reproduces this bit for bit. Returns ``(theta, samples, infos)`` with
+    ``infos`` a dict keyed by component name (MH ops always; sweeps when
+    ``has_info``).
+    """
+    collect = collect or (lambda t: t)
+    ops = op_cycle.ops
+    names = op_cycle.names
+    machinery = []
+    for op in ops:
+        if isinstance(op, SubsampledMHOp):
+            _, reset_fn, draw_fn = make_sampler(op.cfg.sampler, op.target.num_sections)
+            machinery.append((reset_fn, draw_fn))
+        else:
+            machinery.append(None)
+    samplers0 = init_cycle_samplers(op_cycle)
+
+    def body(carry, k):
+        theta, samplers = carry
+        # A single-component cycle consumes the step key directly, so
+        # cycle([op]) reproduces the bare kernel bit for bit.
+        subkeys = jax.random.split(k, len(ops)) if len(ops) > 1 else jnp.asarray(k)[None]
+        infos = {}
+        new_samplers = list(samplers)
+        for i, op in enumerate(ops):
+            if isinstance(op, SubsampledMHOp):
+                reset_fn, draw_fn = machinery[i]
+                theta, new_samplers[i], info = subsampled_mh_step(
+                    subkeys[i], theta, samplers[i], op.target, op.proposal,
+                    op.cfg, reset_fn, draw_fn, max_rounds=op.max_rounds,
+                )
+                infos[names[i]] = info
+            else:
+                out = op.fn(subkeys[i], theta)
+                if op.has_info:
+                    theta, info = out
+                    infos[names[i]] = info
+                else:
+                    theta = out
+        return (theta, tuple(new_samplers)), (collect(theta), infos)
+
+    keys = jax.random.split(key, num_steps)
+    (theta, _), (samples, infos) = jax.lax.scan(body, (theta0, samplers0), keys)
+    return theta, samples, infos

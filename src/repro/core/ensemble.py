@@ -44,9 +44,19 @@ stepping mode.
 Downstream, :func:`repro.core.stats.split_rhat` /
 :func:`repro.core.stats.ensemble_summary` consume the (K, T) outputs for
 cross-chain convergence diagnostics; when the target carries a fused
-``log_local_ensemble`` (e.g. :func:`repro.kernels.ops.batched_logit_delta`)
-and the ops dispatch selects Pallas, the masked superstep routes each
-(K, m) round through it instead of vmapping ``log_local``.
+``log_local_ensemble`` (attached by :mod:`repro.core.target_builder`, e.g.
+:func:`repro.kernels.ops.batched_logit_delta`) and the dispatch selects
+Pallas, BOTH stepping modes route each (K, m) round through it instead of
+vmapping ``log_local`` — the masked superstep natively, the lock-step scan
+via the batched-transition form of the same round loop.
+
+Composite programs — the paper's ``(cycle (...))`` inference expressions —
+run through ``transition=cycle([...])``: per-variable
+:class:`repro.core.composite.SubsampledMHOp` kernels (each with its own
+target/proposal/config, fused rounds when available) interleaved with
+opaque vmapped :class:`repro.core.composite.SweepOp` sweeps (Gibbs scans,
+particle Gibbs). That is how stochvol and jointdpm ride this engine; see
+:mod:`repro.experiments.stochvol` / :mod:`repro.experiments.jointdpm`.
 """
 from __future__ import annotations
 
@@ -57,6 +67,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .composite import CycleOp, SubsampledMHOp, SweepOp, init_cycle_samplers
 from .mh import mh_step
 from .schedule import ScheduleConfig, controller_init, controller_params, controller_update
 from .sequential_test import test_round_decision
@@ -114,6 +125,105 @@ def _scatter_at(buf: jax.Array, pos: jax.Array, val: jax.Array, do: jax.Array) -
     cur = jax.lax.dynamic_index_in_dim(buf, pos, axis=0, keepdims=False)
     new = jnp.where(do, val, cur)
     return jax.lax.dynamic_update_index_in_dim(buf, new, pos, 0)
+
+
+def _make_batched_transition(
+    target: PartitionedTarget,
+    proposal,
+    config: SubsampledMHConfig,
+    num_chains: int,
+    use_fused: bool,
+    *,
+    adaptive: bool = False,
+    batch_max: int | None = None,
+    max_rounds: int,
+):
+    """One *batched* subsampled-MH transition for K chains: vmapped
+    propose/reset, then a single while_loop over sequential-test rounds where
+    each round evaluates one (K, m) block — through
+    ``target.log_local_ensemble`` when ``use_fused`` (the fused lock-step
+    route), through ``vmap(target.log_local)`` otherwise.
+
+    Round-for-round this reproduces ``vmap(subsampled_mh_step)`` (the same
+    key-splitting, draw, Welford-merge, and ``test_round_decision`` order;
+    finished lanes keep their whole state, exactly as XLA's batched
+    while_loop does) — it exists so the lock-step scan and composite cycles
+    can route rounds through the fused kernels, which a vmapped scalar step
+    cannot express.
+
+    Returns ``transition(keys (K,), theta, sampler, epsilon (K,),
+    batch_eff (K,)) -> (theta', sampler', info)``.
+    """
+    _, reset_fn, draw_fn = make_sampler(config.sampler, target.num_sections)
+    draw_bounded = make_bounded_draw(config.sampler) if adaptive else None
+    m_max = batch_max if batch_max is not None else config.batch_size
+    n_total = target.num_sections
+    K = num_chains
+
+    def transition(keys, theta, sampler, epsilon, batch_eff):
+        th_p, mu0, log_u, ktest = jax.vmap(
+            lambda k, t: propose_and_mu0(k, t, target, proposal)
+        )(keys, theta)
+        init = (
+            ktest,
+            jax.vmap(reset_fn)(sampler),
+            Welford(*(jnp.zeros((K,), jnp.float32) for _ in range(3))),
+            jnp.zeros((K,), jnp.int32),  # rounds
+            jnp.zeros((K,), bool),  # done
+            jnp.zeros((K,), bool),  # decision
+            jnp.ones((K,), jnp.float32),  # pvalue
+        )
+
+        def cond(c):
+            return jnp.any(~c[4])
+
+        def body(c):
+            tk, smp, w, rounds, done, decision, pval = c
+            active = ~done
+            pairs = jax.vmap(jax.random.split)(tk)
+            tkey, sub = pairs[:, 0], pairs[:, 1]
+            if adaptive:
+                smp2, idx, valid = jax.vmap(
+                    lambda k, s, m: draw_bounded(k, s, m_max, m)
+                )(sub, smp, batch_eff)
+            else:
+                smp2, idx, valid = jax.vmap(lambda k, s: draw_fn(k, s, m_max))(sub, smp)
+            if use_fused:
+                l = target.log_local_ensemble(theta, th_p, idx)
+            else:
+                l = jax.vmap(target.log_local)(theta, th_p, idx)
+            w2 = jax.vmap(Welford.merge_batch)(w, l, valid)
+            dec, pv, test_ok, exhausted = jax.vmap(
+                lambda w_, m_, e: test_round_decision(w_, m_, n_total, e)
+            )(w2, mu0, epsilon)
+            rounds2 = rounds + 1
+            fin = test_ok | exhausted | (rounds2 >= max_rounds)
+            return (
+                jnp.where(active, tkey, tk),
+                _bselect(active, smp2, smp),
+                _bselect(active, w2, w),
+                jnp.where(active, rounds2, rounds),
+                done | fin,
+                jnp.where(active, dec, decision),
+                jnp.where(active, pv, pval),
+            )
+
+        _, sampler2, w, rounds, _, decision, pval = jax.lax.while_loop(cond, body, init)
+        theta_new = _bselect(decision, th_p, theta)
+        info = SubsampledMHInfo(
+            accepted=decision,
+            n_evaluated=w.count.astype(jnp.int32),
+            rounds=rounds,
+            mu_hat=w.mean,
+            mu0=mu0,
+            pvalue=pval,
+            log_u=log_u,
+            epsilon=jnp.asarray(epsilon, jnp.float32),
+            batch_eff=jnp.asarray(batch_eff, jnp.int32),
+        )
+        return theta_new, sampler2, info
+
+    return transition
 
 
 class _MaskedCarry(NamedTuple):
@@ -187,9 +297,9 @@ class ChainEnsemble:
         ((4, 20), True)
     """
 
-    target: PartitionedTarget
-    proposal: Any
-    num_chains: int
+    target: PartitionedTarget | None = None
+    proposal: Any = None
+    num_chains: int = 1
     kernel: str = "subsampled"  # "subsampled" | "exact"
     config: SubsampledMHConfig | None = None
     chunk_size: int | None = None  # exact kernel: lax.map chunking
@@ -199,6 +309,7 @@ class ChainEnsemble:
     stepping: str = "lockstep"  # "lockstep" | "masked" (subsampled only)
     schedule: ScheduleConfig | None = None  # adaptive per-chain controller
     fused_kernels: str = "auto"  # "auto" | "always" | "never" — (K, m) Pallas path
+    transition: CycleOp | None = None  # composite cycle (replaces target+proposal)
 
     def __post_init__(self):
         if self.kernel not in ("subsampled", "exact"):
@@ -207,6 +318,47 @@ class ChainEnsemble:
             raise ValueError(f"unknown stepping {self.stepping!r}")
         if self.fused_kernels not in ("auto", "always", "never"):
             raise ValueError(f"unknown fused_kernels {self.fused_kernels!r}")
+        if self.num_chains < 1:
+            raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
+        if self.transition is not None:
+            if self.target is not None or self.proposal is not None:
+                raise ValueError(
+                    "pass either (target, proposal) or transition=cycle(...), not both"
+                )
+            if self.kernel != "subsampled" or self.config is not None or \
+                    self.chunk_size is not None:
+                raise ValueError(
+                    "composite transitions take kernel/config per component "
+                    "(SubsampledMHOp(..., config=)); the ensemble-level "
+                    "kernel=, config=, and chunk_size= knobs do not apply"
+                )
+            if self.stepping != "lockstep":
+                raise ValueError(
+                    "composite transitions run on the lock-step scan; the masked "
+                    "superstep supports single-kernel ensembles only"
+                )
+            if self.schedule is not None:
+                raise ValueError(
+                    "adaptive scheduling is not supported with composite "
+                    "transitions yet (the controller assumes one target)"
+                )
+            if self.shard is True:
+                raise ValueError(
+                    "composite transitions run unsharded; use shard='auto' or False"
+                )
+            if self.fused_kernels == "always":
+                names = self.transition.names
+                missing = [names[i] for i, op in self.transition.mh_ops
+                           if op.target.log_local_ensemble is None]
+                if missing:
+                    raise ValueError(
+                        f"fused_kernels='always' but composite MH components "
+                        f"{missing} carry no log_local_ensemble (build their "
+                        "targets via repro.core.build_target)"
+                    )
+            return
+        if self.target is None or self.proposal is None:
+            raise ValueError("target and proposal are required without transition=")
         if self.kernel == "exact" and (self.stepping == "masked" or self.schedule):
             raise ValueError(
                 "masked stepping / adaptive scheduling require the subsampled "
@@ -214,11 +366,20 @@ class ChainEnsemble:
             )
         if self.stepping == "masked" and self.shard is True:
             raise ValueError("masked stepping runs unsharded; use shard='auto' or False")
-        if self.fused_kernels == "always" and self.stepping != "masked":
+        if self.fused_kernels == "always" and self.kernel == "exact":
             raise ValueError(
-                "fused_kernels='always' requires stepping='masked' — only the "
-                "masked superstep routes rounds through log_local_ensemble; the "
-                "lock-step scan would silently ignore the flag"
+                "fused_kernels='always' requires the subsampled kernel — only "
+                "its sequential-test rounds route through log_local_ensemble"
+            )
+        if self.fused_kernels == "always" and self.target.log_local_ensemble is None:
+            raise ValueError(
+                "fused_kernels='always' but the target carries no "
+                "log_local_ensemble (build it via repro.core.build_target)"
+            )
+        if self.fused_kernels == "always" and self.shard is True:
+            raise ValueError(
+                "fused_kernels='always' runs the (K, m) rounds unsharded; "
+                "use shard='auto' or False"
             )
 
     # -- derived static config -------------------------------------------
@@ -237,10 +398,20 @@ class ChainEnsemble:
     def _max_rounds(self) -> int:
         return adaptive_max_rounds(self._config, self.target.num_sections, self._buckets)
 
-    def _use_fused(self) -> bool:
-        if self.fused_kernels == "never" or self.target.log_local_ensemble is None:
+    def _fused_for(self, target: PartitionedTarget) -> bool:
+        """Does the fused (K, m) route apply to ``target`` under this
+        ensemble's ``fused_kernels`` setting? One decision for the masked
+        superstep, the fused lock-step scan, and composite MH components —
+        delegating the "auto" case to :func:`repro.kernels.ops.use_kernel`
+        (TPU, or the ``REPRO_FUSED`` environment default)."""
+        if self.fused_kernels == "never" or target.log_local_ensemble is None:
             return False
-        return self.fused_kernels == "always" or jax.default_backend() == "tpu"
+        from ..kernels import ops
+
+        return ops.use_kernel(self.fused_kernels)
+
+    def _use_fused(self) -> bool:
+        return self.target is not None and self._fused_for(self.target)
 
     # -- state ------------------------------------------------------------
 
@@ -265,6 +436,10 @@ class ChainEnsemble:
         lead = jax.tree.leaves(theta)[0].shape[0]
         if lead != self.num_chains:
             raise ValueError(f"theta leading axis {lead} != num_chains {self.num_chains}")
+        if self.transition is not None:
+            sampler = _broadcast_chain_axis(init_cycle_samplers(self.transition),
+                                            self.num_chains)
+            return EnsembleState(theta, sampler, None)
         if self.kernel == "subsampled":
             state0, _, _ = make_sampler(self._config.sampler, self.target.num_sections)
             sampler = _broadcast_chain_axis(state0, self.num_chains)
@@ -350,6 +525,122 @@ class ChainEnsemble:
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
                                out_specs=(spec,) * 5, check_rep=False)
             return fn(keys, theta, sampler, ctrl)
+
+        return jax.jit(run_all, static_argnames=("num_steps",))
+
+    # -- fused lock-step scan ---------------------------------------------
+
+    @functools.cached_property
+    def _run_lockstep_fused_jit(self):
+        """Lock-step scan whose sequential-test rounds are (K, m) blocks
+        through ``target.log_local_ensemble`` — the fused-kernel route of the
+        plain (non-masked) engine. Chain semantics match the vmapped scan
+        round for round; only the block evaluation's float order differs
+        (parity-tested against ``fused_kernels="never"``)."""
+        config = self._config
+        sched = self.schedule
+        buckets = self._buckets
+        collect = self.collect or (lambda t: t)
+        K = self.num_chains
+        n_total = self.target.num_sections
+        eps_floor = sched.epsilon_floor(config) if sched else 0.0
+        transition = _make_batched_transition(
+            self.target, self.proposal, config, K, True,
+            adaptive=sched is not None,
+            batch_max=max(buckets) if sched else None,
+            max_rounds=self._max_rounds,
+        )
+
+        def run_all(keys, theta, sampler, ctrl, num_steps):
+            step_keys = jnp.swapaxes(
+                jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
+            )  # (num_steps, K)
+
+            def body(carry, keys_t):
+                theta, sampler, ctrl = carry
+                if sched is None:
+                    eps = jnp.full((K,), config.epsilon, jnp.float32)
+                    meff = jnp.full((K,), config.batch_size, jnp.int32)
+                else:
+                    eps, meff = jax.vmap(lambda c: controller_params(c, buckets))(ctrl)
+                theta, sampler, info = transition(keys_t, theta, sampler, eps, meff)
+                if sched is not None:
+                    ctrl = jax.vmap(
+                        lambda c, i: controller_update(c, i, sched, buckets, n_total, eps_floor)
+                    )(ctrl, info)
+                return (theta, sampler, ctrl), (jax.vmap(collect)(theta), info)
+
+            (theta, sampler, ctrl), (samples, infos) = jax.lax.scan(
+                body, (theta, sampler, ctrl), step_keys
+            )
+            swap = lambda t: jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), t)
+            return theta, sampler, ctrl, swap(samples), swap(infos)
+
+        return jax.jit(run_all, static_argnames=("num_steps",))
+
+    # -- composite cycle --------------------------------------------------
+
+    @functools.cached_property
+    def _run_composite_jit(self):
+        """Lock-step scan over a composite cycle: per engine transition each
+        component applies once, in order — batched subsampled-MH transitions
+        (fused (K, m) rounds when dispatch selects them) interleaved with
+        vmapped opaque sweeps. Key discipline matches
+        :func:`repro.core.composite.run_cycle_sequential` per chain."""
+        cyc = self.transition
+        names = cyc.names
+        K = self.num_chains
+        collect = self.collect or (lambda t: t)
+        n_ops = len(cyc.ops)
+        comps = []
+        for op in cyc.ops:
+            if isinstance(op, SubsampledMHOp):
+                trans = _make_batched_transition(
+                    op.target, op.proposal, op.cfg, K,
+                    self._fused_for(op.target), max_rounds=op.max_rounds,
+                )
+                comps.append(("mh", trans, op.cfg))
+            else:
+                comps.append(("sweep", op.fn, op.has_info))
+
+        def run_all(keys, theta, samplers, ctrl, num_steps):
+            del ctrl  # composite cycles run unscheduled
+            step_keys = jnp.swapaxes(
+                jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
+            )
+
+            def body(carry, keys_t):
+                theta, samplers = carry
+                # single-component cycles consume the step key directly
+                # (mirrors run_cycle_sequential: cycle([op]) == bare kernel)
+                if n_ops > 1:
+                    subkeys = jax.vmap(lambda k: jax.random.split(k, n_ops))(keys_t)
+                else:
+                    subkeys = keys_t[:, None]
+                infos = {}
+                new_s = list(samplers)
+                for i, comp in enumerate(comps):
+                    k_i = subkeys[:, i]
+                    if comp[0] == "mh":
+                        _, trans, cfg = comp
+                        eps = jnp.full((K,), cfg.epsilon, jnp.float32)
+                        meff = jnp.full((K,), cfg.batch_size, jnp.int32)
+                        theta, new_s[i], info = trans(k_i, theta, samplers[i], eps, meff)
+                        infos[names[i]] = info
+                    else:
+                        _, fn, has_info = comp
+                        out = jax.vmap(fn)(k_i, theta)
+                        if has_info:
+                            theta, infos[names[i]] = out
+                        else:
+                            theta = out
+                return (theta, tuple(new_s)), (jax.vmap(collect)(theta), infos)
+
+            (theta, samplers), (samples, infos) = jax.lax.scan(
+                body, (theta, samplers), step_keys
+            )
+            swap = lambda t: jax.tree.map(lambda l: jnp.swapaxes(l, 0, 1), t)
+            return theta, samplers, None, swap(samples), swap(infos)
 
         return jax.jit(run_all, static_argnames=("num_steps",))
 
@@ -534,7 +825,7 @@ class ChainEnsemble:
         return jax.jit(run_masked, static_argnames=("num_steps",))
 
     def _chain_mesh(self):
-        if self.shard is False or self.stepping == "masked":
+        if self.shard is False or self.stepping == "masked" or self.transition is not None:
             return None
         devices = jax.devices()
         if len(devices) <= 1:
@@ -562,7 +853,19 @@ class ChainEnsemble:
         be one key (split per chain) or a (K,) per-chain key array.
         """
         keys = self._per_chain_keys(key)
-        runner = self._run_masked_jit if self.stepping == "masked" else self._run_jit
+        if self.transition is not None:
+            runner = self._run_composite_jit
+        elif self.stepping == "masked":
+            runner = self._run_masked_jit
+        elif (self.kernel == "subsampled" and self._use_fused()
+              and (self.fused_kernels == "always" or self._chain_mesh() is None)):
+            # The fused lock-step scan runs unsharded. An explicit "always"
+            # wins over the chain mesh (shard=True + "always" is rejected at
+            # construction); under "auto" with a mesh present, the vmapped
+            # scan keeps the multi-device fan-out instead.
+            runner = self._run_lockstep_fused_jit
+        else:
+            runner = self._run_jit
         theta, sampler, ctrl, samples, infos = runner(
             keys, state.theta, state.sampler_state, state.controller, num_steps=num_steps
         )

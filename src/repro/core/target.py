@@ -45,6 +45,9 @@ class PartitionedTarget:
     # the ops dispatch selects Pallas, ChainEnsemble routes each sequential-
     # test round through it instead of vmapping ``log_local``.
     log_local_ensemble: Callable[[Params, Params, jax.Array], jax.Array] | None = None
+    # Name of the registered kernel family (repro.core.target_builder) that
+    # built log_local / log_local_ensemble, or None for hand-wired targets.
+    family: str | None = None
 
 
 def from_iid_loglik(

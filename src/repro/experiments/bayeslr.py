@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.target import PartitionedTarget
+from ..core.target_builder import build_target
+from ..kernels.ref import logit_loglik
 
 PRIOR_VAR = 0.1
 
@@ -60,40 +62,21 @@ def synth_2d(key: jax.Array, n: int) -> LRData:
     return LRData(x, y, x[: max(n // 10, 1)], y[: max(n // 10, 1)], w_true)
 
 
-def loglik(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
-    """Per-observation log Logit(y | x, w) = -log(1 + exp(-y x·w))."""
-    return -jnp.logaddexp(0.0, -y * (x @ w))
+# The shared reference logistic factor lives in repro.kernels.ref; re-exported
+# here because the experiments historically imported it from this module.
+loglik = logit_loglik
 
 
 def make_target(x: jax.Array, y: jax.Array, prior_var: float = PRIOR_VAR) -> PartitionedTarget:
-    n = x.shape[0]
-
-    def log_global(w, w_p):
-        return (-0.5 / prior_var) * (jnp.sum(w_p**2) - jnp.sum(w**2))
-
-    def log_local_batched(w, w_p, idx):
-        xi, yi = x[idx], y[idx]
-        lp = -jnp.logaddexp(0.0, -yi * (xi @ w_p))
-        lc = -jnp.logaddexp(0.0, -yi * (xi @ w))
-        return lp - lc
-
-    def log_density(w):
-        z = -jnp.logaddexp(0.0, -y * (x @ w)).sum()
-        return (-0.5 / prior_var) * jnp.sum(w**2) + z
-
-    def log_local_ensemble(w, w_p, idx):
-        # (K, m) multi-chain round through the fused kernel dispatch: one
-        # pallas_call per sequential-test round on TPU, pure-jnp ref on CPU.
-        from ..kernels import ops
-
-        return ops.batched_logit_delta(x[idx], y[idx], w, w_p)
-
-    return PartitionedTarget(
-        num_sections=n,
-        log_global=log_global,
-        log_local=log_local_batched,
-        log_density=log_density,
-        log_local_ensemble=log_local_ensemble,
+    """BayesLR partitioned target via the ``logit`` kernel family: the
+    builder attaches ``log_local`` and the fused (K, m) ``log_local_ensemble``
+    (one pallas_call per multi-chain sequential-test round on TPU, pure-jnp
+    ref elsewhere) — no hand-wired kernel hookup."""
+    return build_target(
+        "logit",
+        (x, y),
+        x.shape[0],
+        prior_logpdf=lambda w: (-0.5 / prior_var) * jnp.sum(w**2),
     )
 
 

@@ -26,11 +26,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.composite import CycleOp, SweepOp, cycle
 from ..core.samplers import fy_draw, fy_from_buffer, fy_reset
 from ..core.sequential_test import sequential_test
-from ..core.target import PartitionedTarget
 from ..inference.niw import ClusterStats, NIWPrior, predictive_all_clusters
-from .bayeslr import loglik as logit_loglik
+from ..kernels.ref import logit_loglik
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,6 +241,133 @@ def subsampled_mh_w(
         rounds=res.rounds,
     )
     return state._replace(w=w_new), info
+
+
+# ---------------------------------------------------------------------------
+# The paper's inference program on the ensemble engine
+# ---------------------------------------------------------------------------
+
+
+def make_inference_cycle(
+    data: JDPMData,
+    cfg: JDPMConfig,
+    *,
+    batch_size: int = 100,
+    epsilon: float = 0.1,
+    sigma_prop: float = 0.3,
+    gibbs_frac: float = 0.5,
+    w_moves: int = 10,
+) -> CycleOp:
+    """The paper's Fig-7 program as a composite cycle:
+
+        [infer (cycle ((mh alpha all 1) (gibbs z one step_z)
+                       (subsampled_mh w one {Nbatch} {eps} 'drift {sigma} 1)) 1)]
+
+    ``alpha`` and ``z`` are opaque sweeps; the ``w`` component applies
+    ``w_moves`` :func:`subsampled_mh_w` transitions (each picking a random
+    non-empty expert, its dynamic member pool the local sections) and records
+    the stacked :class:`WMoveInfo` trace. One cycle object serves the
+    sequential reference and the K-replica ensemble.
+    """
+    n = data.x.shape[0]
+    n_gibbs = max(1, int(n * gibbs_frac))
+
+    def alpha_op(key, state):
+        return mh_alpha(key, state, cfg)
+
+    def z_op(key, state):
+        k_pts, k_gibbs = jax.random.split(key)
+        pts = jax.random.permutation(k_pts, n)[:n_gibbs]
+        return gibbs_z_steps(k_gibbs, state, data, cfg, pts)
+
+    def w_op(key, state):
+        infos = []
+        for j in range(w_moves):
+            state, info = subsampled_mh_w(
+                jax.random.fold_in(key, j), state, data, cfg,
+                batch_size=batch_size, epsilon=epsilon, sigma_prop=sigma_prop,
+            )
+            infos.append(info)
+        return state, jax.tree.map(lambda *ls: jnp.stack(ls), *infos)
+
+    return cycle([
+        SweepOp(alpha_op, name="alpha"),
+        SweepOp(z_op, name="z"),
+        SweepOp(w_op, name="w", has_info=True),
+    ])
+
+
+def _collect_summary(state: JDPMState):
+    return {
+        "alpha": state.alpha,
+        "k_active": jnp.sum(state.stats.n > 0.5).astype(jnp.int32),
+        "w": state.w,
+    }
+
+
+def run_posterior_sequential(
+    key: jax.Array,
+    data: JDPMData,
+    cfg: JDPMConfig,
+    num_cycles: int = 30,
+    *,
+    state0: JDPMState | None = None,
+    collect=None,
+    **cycle_kw,
+):
+    """Single-replica reference run of the full JDPM program in one jitted
+    scan. Returns (state_final, samples, infos)."""
+    from ..core.composite import run_cycle_sequential
+
+    cyc = make_inference_cycle(data, cfg, **cycle_kw)
+    if state0 is None:
+        state0 = init_state(jax.random.fold_in(key, 0), data, cfg)
+    return run_cycle_sequential(key, state0, cyc, num_cycles,
+                                collect or _collect_summary)
+
+
+def run_posterior_ensemble(
+    key: jax.Array,
+    data: JDPMData,
+    cfg: JDPMConfig,
+    num_chains: int = 4,
+    num_cycles: int = 30,
+    *,
+    state0: JDPMState | None = None,
+    collect=None,
+    **cycle_kw,
+):
+    """K independent replicas of the JDPM program on the ensemble engine —
+    ``subsampled_mh_w`` (and the alpha/z sweeps) advance all replicas inside
+    one jitted program, so the dynamic-pool austerity moves of paper Table 1
+    row 2 amortize exactly like the BayesLR chains do.
+
+    Replica k seeded with per-chain key k reproduces
+    :func:`run_posterior_sequential` bit for bit (given the same ``state0``).
+    Returns ``(state, samples, infos, diagnostics)``; ``diagnostics`` carries
+    the per-replica w-move acceptance and evaluated-fraction summaries.
+    """
+    from ..core import ChainEnsemble
+
+    cyc = make_inference_cycle(data, cfg, **cycle_kw)
+    ens = ChainEnsemble(num_chains=num_chains, transition=cyc,
+                        collect=collect or _collect_summary)
+    if state0 is None:
+        # ``key`` may be a (K,) per-chain key array (the form the K=1
+        # equivalence contract uses); seed the shared init from its first key.
+        karr = jnp.asarray(key)
+        typed = jnp.issubdtype(karr.dtype, jax.dtypes.prng_key)
+        init_key = karr[0] if (karr.ndim >= 1 if typed else karr.ndim >= 2) else key
+        state0 = init_state(jax.random.fold_in(init_key, 0), data, cfg)
+    state, samples, infos = ens.run(key, ens.init(state0), num_cycles)
+    w_info = infos["w"]
+    n_k = np.maximum(np.asarray(w_info.n_k, np.float64), 1.0)
+    diagnostics = {
+        "w_accept_rate": np.asarray(w_info.accepted, np.float64).mean(axis=(1, 2)),
+        "w_frac_evaluated": (np.asarray(w_info.n_evaluated, np.float64) / n_k).mean(),
+        "k_active_final": np.asarray(samples["k_active"])[:, -1],
+    }
+    return state, samples, infos, diagnostics
 
 
 # ---------------------------------------------------------------------------

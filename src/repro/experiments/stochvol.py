@@ -17,7 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.composite import CycleOp, SubsampledMHOp, SweepOp, cycle
+from ..core.subsampled_mh import SubsampledMHConfig
 from ..core.target import PartitionedTarget
+from ..core.target_builder import build_target
 from ..inference.smc import csmc
 
 _LOG2PI = 1.8378770664093453
@@ -85,10 +88,20 @@ def _obs_logpdf(x_t, h_t):
 # -- partitioned targets ------------------------------------------------------
 
 
+def _sv_prior(theta):
+    return log_prior_phi(theta["phi"]) + log_prior_sigma2(theta["sigma2"])
+
+
+def _sv_params(theta):
+    return theta["phi"], theta["sigma2"]
+
+
 def make_param_target(h: jax.Array, which: str,
                       permute_key: jax.Array | None = None) -> PartitionedTarget:
     """Target over ``params = {phi, sigma2}`` for one parameter's move, with
-    local sections = all (series, t) transition factors given current h.
+    local sections = all (series, t) transition factors given current h —
+    built through the ``gaussian_ar1`` kernel family, which also attaches the
+    fused (K, m) ``log_local_ensemble`` round.
 
     ``which`` selects the moving parameter; the other is held in the closure
     of the proposal (core kernels treat theta as the full dict — symmetric RW
@@ -109,24 +122,40 @@ def make_param_target(h: jax.Array, which: str,
         ht_flat = ht_flat[perm]
         hp_flat = hp_flat[perm]
 
-    def log_prior(theta):
-        return log_prior_phi(theta["phi"]) + log_prior_sigma2(theta["sigma2"])
-
-    def log_global(theta, theta_p):
-        return log_prior(theta_p) - log_prior(theta)
-
-    def log_local(theta, theta_p, idx):
-        ht, hp = ht_flat[idx], hp_flat[idx]
-        lp = _trans_logpdf(ht, hp, theta_p["phi"], theta_p["sigma2"])
-        lc = _trans_logpdf(ht, hp, theta["phi"], theta["sigma2"])
-        return lp - lc
-
-    def log_density(theta):
-        lp = _trans_logpdf(ht_flat, hp_flat, theta["phi"], theta["sigma2"]).sum()
-        return log_prior(theta) + lp
-
     del which  # both parameters share the same section structure
-    return PartitionedTarget(n, log_global, log_local, log_density)
+    return build_target(
+        "gaussian_ar1", (ht_flat, hp_flat), n,
+        prior_logpdf=_sv_prior, params_fn=_sv_params,
+    )
+
+
+def make_joint_param_target(num_series: int, length: int,
+                            permute_key: jax.Array | None = None) -> PartitionedTarget:
+    """The ensemble-ready form of :func:`make_param_target`: the latent paths
+    live in ``theta["h"]`` instead of a construction-time closure, so one
+    target serves every chain of a :class:`~repro.core.ensemble.ChainEnsemble`
+    (each chain's sections derive from its own paths) and the particle-Gibbs
+    sweep can update ``h`` between MH moves inside the same compiled program.
+
+    The family ``data`` is a callable reading ``theta["h"]`` — valid because
+    the phi/sigma2 proposals never move the ``h`` leaf.
+    """
+    n = num_series * length
+    perm = None if permute_key is None else jax.random.permutation(permute_key, n)
+
+    def data_fn(theta):
+        h = theta["h"]  # (S, T) — or (K, S, T) inside the ensemble round
+        zeros = jnp.zeros(h.shape[:-1] + (1,), h.dtype)
+        h_prev = jnp.concatenate([zeros, h[..., :-1]], axis=-1)
+        ht = h.reshape(h.shape[:-2] + (n,))
+        hp = h_prev.reshape(h_prev.shape[:-2] + (n,))
+        if perm is not None:
+            ht, hp = ht[..., perm], hp[..., perm]
+        return ht, hp
+
+    return build_target(
+        "gaussian_ar1", data_fn, n, prior_logpdf=_sv_prior, params_fn=_sv_params,
+    )
 
 
 class SingleLeafRW:
@@ -164,6 +193,129 @@ def pgibbs_sweep(key: jax.Array, obs: jax.Array, h: jax.Array, params: SVParams,
         return csmc(k, x_s, h_s, params, transition_sample, obs_logpdf, num_particles).trajectory
 
     return jax.vmap(one)(keys, obs, h)
+
+
+# -- the paper's inference program on the ensemble engine ---------------------
+
+
+def make_inference_cycle(
+    obs: jax.Array,
+    *,
+    batch_size: int = 100,
+    epsilon: float = 0.05,
+    sigma_phi: float = 0.02,
+    sigma_sig: float = 0.003,
+    num_particles: int = 25,
+    sampler: str = "fy",
+    permute_key: jax.Array | None = None,
+) -> CycleOp:
+    """The paper's Sec-4.3 program as a composite cycle:
+
+        [infer (cycle ((pgibbs h ...) (subsampled_mh phi ...)
+                       (subsampled_mh sig ...)) 1)]
+
+    — one opaque particle-Gibbs sweep over the latent paths, then per-variable
+    subsampled-MH moves on phi and sigma^2 whose local sections are the
+    transition factors of the *current* paths (``theta["h"]``). The same
+    cycle object drives :func:`run_posterior_sequential` and the K-chain
+    :func:`run_posterior_ensemble`, which is what makes them bit-for-bit
+    comparable.
+    """
+    s, t_len = obs.shape
+    target = make_joint_param_target(s, t_len, permute_key)
+    cfg = SubsampledMHConfig(batch_size=batch_size, epsilon=epsilon, sampler=sampler)
+
+    def pg_sweep(key, theta):
+        h = pgibbs_sweep(key, obs, theta["h"],
+                         SVParams(theta["phi"], theta["sigma2"]), num_particles)
+        return {**theta, "h": h}
+
+    return cycle([
+        SweepOp(pg_sweep, name="pgibbs"),
+        SubsampledMHOp(target, SingleLeafRW("phi", sigma_phi), cfg, name="phi"),
+        SubsampledMHOp(target, SingleLeafRW("sigma2", sigma_sig), cfg, name="sigma2"),
+    ])
+
+
+def init_theta(obs: jax.Array, phi: float = 0.7, sigma2: float = 0.03) -> dict:
+    return {
+        "phi": jnp.asarray(phi, jnp.float32),
+        "sigma2": jnp.asarray(sigma2, jnp.float32),
+        "h": jnp.zeros_like(obs),
+    }
+
+
+def _collect_params(theta):
+    return {"phi": theta["phi"], "sigma2": theta["sigma2"]}
+
+
+def run_posterior_sequential(
+    key: jax.Array,
+    data: SVData,
+    num_steps: int = 400,
+    *,
+    theta0: dict | None = None,
+    collect=None,
+    **cycle_kw,
+):
+    """Single-chain reference run of the joint pgibbs + subsampled-MH program
+    (one jitted scan). Returns (theta_final, samples, infos) with ``samples``
+    the collected (phi, sigma2) trace and ``infos`` keyed by component."""
+    from ..core.composite import run_cycle_sequential
+
+    cyc = make_inference_cycle(data.obs, **cycle_kw)
+    theta0 = theta0 if theta0 is not None else init_theta(data.obs)
+    return run_cycle_sequential(key, theta0, cyc, num_steps,
+                                collect or _collect_params)
+
+
+def run_posterior_ensemble(
+    key: jax.Array,
+    data: SVData,
+    num_chains: int = 4,
+    num_steps: int = 400,
+    *,
+    theta0: dict | None = None,
+    collect=None,
+    fused_kernels: str = "auto",
+    **cycle_kw,
+):
+    """K-chain stochastic-volatility posterior on the ensemble engine.
+
+    The composite cycle advances every chain's (h, phi, sigma2) inside one
+    jitted program; the phi/sigma2 sequential-test rounds evaluate (K, m)
+    blocks (through the fused ``gaussian_ar1`` kernel when dispatch selects
+    it). Chain k seeded with per-chain key k reproduces
+    :func:`run_posterior_sequential` bit for bit.
+
+    Returns ``(state, samples, infos, diagnostics)``: ``samples`` maps
+    "phi"/"sigma2" to (K, T) traces; ``diagnostics`` has split-R-hat over
+    chains and the evaluated-section fractions per MH variable.
+    """
+    from ..core import ChainEnsemble
+    from ..core.stats import split_rhat
+
+    cyc = make_inference_cycle(data.obs, **cycle_kw)
+    ens = ChainEnsemble(num_chains=num_chains, transition=cyc,
+                        collect=collect or _collect_params,
+                        fused_kernels=fused_kernels)
+    theta0 = theta0 if theta0 is not None else init_theta(data.obs)
+    state, samples, infos = ens.run(key, ens.init(theta0), num_steps)
+    n = data.obs.size
+    half = num_steps // 2
+    diagnostics = {
+        "rhat_phi": split_rhat(np.asarray(samples["phi"])[:, half:]),
+        "rhat_sigma2": split_rhat(np.asarray(samples["sigma2"])[:, half:]),
+        "frac_evaluated": {
+            name: float(np.asarray(infos[name].n_evaluated, np.float64).mean() / n)
+            for name in ("phi", "sigma2")
+        },
+        "accept_rate": {
+            name: np.asarray(infos[name].accepted, np.float64).mean(axis=1)
+            for name in ("phi", "sigma2")
+        },
+    }
+    return state, samples, infos, diagnostics
 
 
 def exact_state_loglik(obs: jax.Array, h: jax.Array, params: SVParams) -> jax.Array:

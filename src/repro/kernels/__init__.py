@@ -1,15 +1,30 @@
 """Pallas TPU kernels for the likelihood hot spots (+ jnp oracles).
 
-fused_ce            — vocab-blocked per-token log-likelihood (online logsumexp)
-logit_delta         — pair-fused BayesLR MH delta (x read once for theta, theta')
-batched_logit_delta — the (K, m) ensemble-batched form of logit_delta: one
-                      fused pallas_call per multi-chain sequential-test round
-ops                 — jit'd dispatch wrappers (kernel on TPU, interpret/ref on CPU)
-ref                 — pure-jnp oracles (the allclose ground truth)
+fused_ce                  — vocab-blocked per-token log-likelihood (online logsumexp)
+batched_fused_ce          — the (K, T) ensemble-batched form: one grid over chains
+logit_delta               — pair-fused BayesLR MH delta (x read once for theta, theta')
+batched_logit_delta       — the (K, m) ensemble-batched form of logit_delta: one
+                            fused pallas_call per multi-chain sequential-test round
+batched_gaussian_ar1_delta — the (K, m) AR(1) transition-factor delta (stochvol)
+ops                       — jit'd dispatch wrappers (mode="auto|always|never":
+                            kernel on TPU, interpret/ref on CPU, REPRO_FUSED env
+                            overrides the auto default)
+ref                       — pure-jnp oracles (the allclose ground truth) and the
+                            shared reference likelihoods (logit_loglik)
 """
 from . import ops, ref
 from .batched_loglik import batched_logit_delta, gather_and_delta
-from .fused_ce import fused_ce
+from .fused_ce import batched_fused_ce, fused_ce
+from .gaussian_ar1 import batched_gaussian_ar1_delta
 from .logit_loglik import logit_delta
 
-__all__ = ["batched_logit_delta", "fused_ce", "gather_and_delta", "logit_delta", "ops", "ref"]
+__all__ = [
+    "batched_fused_ce",
+    "batched_gaussian_ar1_delta",
+    "batched_logit_delta",
+    "fused_ce",
+    "gather_and_delta",
+    "logit_delta",
+    "ops",
+    "ref",
+]

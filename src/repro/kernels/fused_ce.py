@@ -103,3 +103,98 @@ def fused_ce(
         interpret=interpret,
     )(targets.astype(jnp.int32), h, table)
     return out[:t]
+
+
+def _batched_kernel(tgt_ref, h_ref, tab_ref, out_ref, m_ref, s_ref, t_ref,
+                    *, tile_v, n_v, v_real, shared_table):
+    vj = pl.program_id(2)
+
+    @pl.when(vj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        t_ref[...] = jnp.zeros_like(t_ref)
+
+    h = h_ref[0]  # (tile_t, D) of this chain
+    tab = tab_ref[...] if shared_table else tab_ref[0]  # (tile_v, D)
+    logits = jax.lax.dot_general(
+        h, tab, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (tile_t, tile_v)
+    col_global = vj * tile_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    logits = jnp.where(col_global < v_real, logits, _NEG)
+
+    m_old = m_ref[...]
+    m_new = jnp.maximum(m_old, logits.max(axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    s_ref[...] = s_ref[...] * corr + jnp.exp(logits - m_new[:, None]).sum(axis=-1)
+    m_ref[...] = m_new
+
+    tgt = tgt_ref[0]
+    local = tgt - vj * tile_v
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    hit = cols == local[:, None]
+    t_ref[...] = t_ref[...] + jnp.where(hit, logits, 0.0).sum(axis=-1)
+
+    @pl.when(vj == n_v - 1)
+    def _finish():
+        out_ref[0] = t_ref[...] - (jnp.log(s_ref[...]) + m_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t", "tile_v", "interpret"))
+def batched_fused_ce(
+    h: jax.Array,  # (K, T, D) per-chain token activations
+    table: jax.Array,  # (V, D) shared vocab table, or (K, V, D) per-chain
+    targets: jax.Array,  # (K, T) int32
+    *,
+    tile_t: int = 256,
+    tile_v: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Ensemble-batched per-token log-likelihood: the (K, m) multi-chain
+    round of the LM likelihood, one ``pallas_call`` for all K chains.
+
+    The chain axis joins the grid (grid = (K, T/tile_t, V/tile_v), vocab-major
+    accumulation per (chain, token-tile) as in :func:`fused_ce`). ``table``
+    may be shared (the common case: chains sample activations-producing
+    parameters) or carry a per-chain leading axis (chains sample the table
+    itself, e.g. an unembedding MH move).
+    """
+    k, t, d = h.shape
+    shared_table = table.ndim == 2
+    v = table.shape[0] if shared_table else table.shape[1]
+    tile_t = min(tile_t, t)
+    tile_v = min(tile_v, v)
+    pad_t = (-t) % tile_t
+    pad_v = (-v) % tile_v
+    if pad_t:
+        h = jnp.pad(h, ((0, 0), (0, pad_t), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad_t)))
+    if pad_v:
+        pad_spec = ((0, pad_v), (0, 0)) if shared_table else ((0, 0), (0, pad_v), (0, 0))
+        table = jnp.pad(table, pad_spec)
+    tp, vp = t + pad_t, v + pad_v
+    n_t, n_v = tp // tile_t, vp // tile_v
+
+    if shared_table:
+        tab_spec = pl.BlockSpec((tile_v, d), lambda c, i, j: (j, 0))
+    else:
+        tab_spec = pl.BlockSpec((1, tile_v, d), lambda c, i, j: (c, j, 0))
+    out = pl.pallas_call(
+        functools.partial(_batched_kernel, tile_v=tile_v, n_v=n_v, v_real=v,
+                          shared_table=shared_table),
+        grid=(k, n_t, n_v),
+        in_specs=[
+            pl.BlockSpec((1, tile_t), lambda c, i, j: (c, i)),
+            pl.BlockSpec((1, tile_t, d), lambda c, i, j: (c, i, 0)),
+            tab_spec,
+        ],
+        out_specs=pl.BlockSpec((1, tile_t), lambda c, i, j: (c, i)),
+        out_shape=jax.ShapeDtypeStruct((k, tp), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_t,), jnp.float32),
+            pltpu.VMEM((tile_t,), jnp.float32),
+            pltpu.VMEM((tile_t,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(targets.astype(jnp.int32), h, table)
+    return out[:, :t]

@@ -1,0 +1,74 @@
+"""Pallas kernel: ensemble-batched AR(1) transition-factor delta.
+
+The stochastic-volatility local sections (paper Sec. 4.3) are the T
+transition factors N(h_t | phi h_{t-1}, sigma^2); a multi-chain sequential-
+test round over K chains evaluates a (K, m) block of pair-deltas
+
+    l[k, i] = log N(xt[k,i] | phi'_k xp[k,i], s2'_k)
+            - log N(xt[k,i] | phi_k  xp[k,i], s2_k)
+
+with per-chain (phi, sigma^2) pairs. Pure VPU work — the fusion win is a
+single kernel launch per round with the per-chain parameter broadcast, the
+masking, and both sides of the MH ratio in one pass over the gathered
+(K, m) slabs (which stay outside the kernel, fused with the sampler's index
+production, exactly like :mod:`repro.kernels.batched_loglik`).
+
+Grid: (K, ceil(m / tile_m)). ``ref.batched_gaussian_ar1_delta_ref`` is the
+pure-jnp twin used for interpret-mode parity tests on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xt_ref, xp_ref, par_ref, out_ref):
+    xt = xt_ref[0].astype(jnp.float32)  # (tile_m,) gathered x_t of this chain
+    xp = xp_ref[0].astype(jnp.float32)  # (tile_m,) gathered x_{t-1}
+    par = par_ref[0]  # (4,): [phi, s2, phi', s2']
+    phi_c, s2_c, phi_p, s2_p = par[0], par[1], par[2], par[3]
+    s2_c = jnp.maximum(s2_c, 1e-12)
+    s2_p = jnp.maximum(s2_p, 1e-12)
+    lc = -0.5 * ((xt - phi_c * xp) ** 2 / s2_c + jnp.log(s2_c))
+    lp = -0.5 * ((xt - phi_p * xp) ** 2 / s2_p + jnp.log(s2_p))
+    out_ref[0] = lp - lc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "interpret"))
+def batched_gaussian_ar1_delta(
+    xt: jax.Array,  # (K, m) gathered x_t, one mini-batch per chain
+    xp: jax.Array,  # (K, m) gathered x_{t-1}
+    phi_cur: jax.Array,  # (K,)
+    s2_cur: jax.Array,  # (K,)
+    phi_prop: jax.Array,  # (K,)
+    s2_prop: jax.Array,  # (K,)
+    *,
+    tile_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """(K, m) AR(1) pair-delta block — one call per multi-chain test round."""
+    k, m = xt.shape
+    tile_m = min(tile_m, m)
+    pad = (-m) % tile_m
+    if pad:
+        xt = jnp.pad(xt, ((0, 0), (0, pad)))
+        xp = jnp.pad(xp, ((0, 0), (0, pad)))
+    par = jnp.stack(
+        [phi_cur, s2_cur, phi_prop, s2_prop], axis=-1
+    ).astype(jnp.float32)  # (K, 4)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(k, (m + pad) // tile_m),
+        in_specs=[
+            pl.BlockSpec((1, tile_m), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_m), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_m), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, m + pad), jnp.float32),
+        interpret=interpret,
+    )(xt.astype(jnp.float32), xp.astype(jnp.float32), par)
+    return out[:, :m]

@@ -1,43 +1,112 @@
 """Jitted public wrappers: pick the Pallas kernel on TPU, interpret-mode
-kernel or pure-jnp reference elsewhere."""
+kernel or pure-jnp reference elsewhere.
+
+One dispatch vocabulary serves every fused entry point AND the ensemble
+engine's ``fused_kernels`` knob:
+
+  ``mode="auto"``    kernel on TPU, reference elsewhere — unless the
+                     ``REPRO_FUSED`` environment variable pins a different
+                     default (CI sets ``REPRO_FUSED=always`` to exercise the
+                     Pallas twins in interpret mode on CPU),
+  ``mode="always"``  force the Pallas kernel (interpret=True off-TPU),
+  ``mode="never"``   force the pure-jnp reference.
+
+The legacy spellings ``mode="kernel"`` / ``mode="ref"`` are deprecated
+aliases for ``always`` / ``never`` and emit a ``DeprecationWarning``.
+"""
 from __future__ import annotations
+
+import os
+import warnings
 
 import jax
 
 from . import ref
 from .batched_loglik import batched_logit_delta as _batched_logit_delta_kernel
+from .fused_ce import batched_fused_ce as _batched_fused_ce_kernel
 from .fused_ce import fused_ce as _fused_ce_kernel
+from .gaussian_ar1 import batched_gaussian_ar1_delta as _batched_gaussian_ar1_kernel
 from .logit_loglik import logit_delta as _logit_delta_kernel
+
+MODES = ("auto", "always", "never")
+_DEPRECATED_ALIASES = {"kernel": "always", "ref": "never"}
+ENV_VAR = "REPRO_FUSED"
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def normalize_mode(mode: str) -> str:
+    """Canonicalize a dispatch mode, accepting (and warning on) the
+    deprecated ``kernel``/``ref`` spellings."""
+    if mode in _DEPRECATED_ALIASES:
+        canon = _DEPRECATED_ALIASES[mode]
+        warnings.warn(
+            f"mode={mode!r} is deprecated; use mode={canon!r}",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return canon
+    if mode not in MODES:
+        raise ValueError(f"unknown dispatch mode {mode!r}; expected one of {MODES}")
+    return mode
+
+
+def use_kernel(mode: str = "auto") -> bool:
+    """Resolve a dispatch mode to "run the Pallas kernel?" — the single
+    decision shared by these wrappers and ``ChainEnsemble._use_fused``."""
+    mode = normalize_mode(mode)
+    if mode == "auto":
+        env = os.environ.get(ENV_VAR, "auto")
+        mode = normalize_mode(env) if env != "auto" else "auto"
+    if mode == "always":
+        return True
+    if mode == "never":
+        return False
+    return _on_tpu()
+
+
 def fused_ce(h, table, targets, *, mode: str = "auto", **kw):
     """Per-token log-likelihood over a large vocab.
 
-    mode: "auto" (kernel on TPU, ref elsewhere), "kernel" (force Pallas,
-    interpret=True off-TPU), "ref".
+    mode: "auto" (kernel on TPU, ref elsewhere), "always" (force Pallas,
+    interpret=True off-TPU), "never" (pure-jnp reference).
     """
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if not use_kernel(mode):
         return ref.fused_ce_ref(h, table, targets)
-    interpret = not _on_tpu()
-    return _fused_ce_kernel(h, table, targets, interpret=interpret, **kw)
+    return _fused_ce_kernel(h, table, targets, interpret=not _on_tpu(), **kw)
+
+
+def batched_fused_ce(h, table, targets, *, mode: str = "auto", **kw):
+    """Ensemble-batched (K, T) per-token log-likelihood — one call per
+    multi-chain round of the LM likelihood (table shared or per-chain)."""
+    if not use_kernel(mode):
+        return ref.batched_fused_ce_ref(h, table, targets)
+    return _batched_fused_ce_kernel(h, table, targets, interpret=not _on_tpu(), **kw)
 
 
 def logit_delta(x, y, w_cur, w_prop, *, mode: str = "auto", **kw):
     """Fused BayesLR pair-evaluation of the MH local-section deltas."""
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if not use_kernel(mode):
         return ref.logit_delta_ref(x, y, w_cur, w_prop)
-    interpret = not _on_tpu()
-    return _logit_delta_kernel(x, y, w_cur, w_prop, interpret=interpret, **kw)
+    return _logit_delta_kernel(x, y, w_cur, w_prop, interpret=not _on_tpu(), **kw)
 
 
 def batched_logit_delta(xg, yg, w_cur, w_prop, *, mode: str = "auto", **kw):
     """Ensemble-batched (K, m) BayesLR delta block — one call per multi-chain
     sequential-test round."""
-    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+    if not use_kernel(mode):
         return ref.batched_logit_delta_ref(xg, yg, w_cur, w_prop)
-    interpret = not _on_tpu()
-    return _batched_logit_delta_kernel(xg, yg, w_cur, w_prop, interpret=interpret, **kw)
+    return _batched_logit_delta_kernel(xg, yg, w_cur, w_prop, interpret=not _on_tpu(), **kw)
+
+
+def batched_gaussian_ar1_delta(xt, xp, phi_cur, s2_cur, phi_prop, s2_prop,
+                               *, mode: str = "auto", **kw):
+    """Ensemble-batched (K, m) AR(1) transition-factor delta block (the
+    stochvol sig/phi local sections)."""
+    if not use_kernel(mode):
+        return ref.batched_gaussian_ar1_delta_ref(xt, xp, phi_cur, s2_cur, phi_prop, s2_prop)
+    return _batched_gaussian_ar1_kernel(
+        xt, xp, phi_cur, s2_cur, phi_prop, s2_prop, interpret=not _on_tpu(), **kw
+    )

@@ -1,8 +1,27 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+This module also owns the shared *reference* likelihoods (e.g.
+:func:`logit_loglik`): one definition that the experiments, the kernel-family
+registry (:mod:`repro.core.target_builder`), and the parity tests all import,
+so the fused kernels always have a single source of truth to agree with.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def logit_loglik(w: jax.Array, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Per-observation log Logit(y | x, w) = -log(1 + exp(-y x·w)).
+
+    The shared reference implementation of the paper's logistic factor —
+    BayesLR and the joint DP mixture both score observations with it; the
+    fused kernels in :mod:`repro.kernels.logit_loglik` /
+    :mod:`repro.kernels.batched_loglik` compute its pair-delta form.
+
+    w: (D,), x: (..., D), y: (...) in {-1, +1} -> (...) f32.
+    """
+    return -jnp.logaddexp(0.0, -y * (x @ w))
 
 
 def fused_ce_ref(h: jax.Array, table: jax.Array, targets: jax.Array) -> jax.Array:
@@ -38,3 +57,54 @@ def batched_logit_delta_ref(
     z_c = jnp.einsum("kmd,kd->km", xg, w_cur).astype(jnp.float32)
     z_p = jnp.einsum("kmd,kd->km", xg, w_prop).astype(jnp.float32)
     return -jnp.logaddexp(0.0, -yg * z_p) + jnp.logaddexp(0.0, -yg * z_c)
+
+
+def gaussian_ar1_delta_ref(
+    xt: jax.Array, xp: jax.Array,
+    phi_cur: jax.Array, s2_cur: jax.Array,
+    phi_prop: jax.Array, s2_prop: jax.Array,
+) -> jax.Array:
+    """AR(1) transition-factor delta (the stochvol local sections):
+
+        l_i = log N(xt_i | phi' xp_i, s2') - log N(xt_i | phi xp_i, s2)
+
+    The 2pi constant cancels in the pair. sigma^2 is clipped at 1e-12 so
+    out-of-support proposals (rejected via the -inf prior in the global
+    section) still produce finite local evaluations.
+
+    xt, xp: (..., m); phi/s2 scalars broadcast against them -> (..., m) f32.
+    """
+    s2c = jnp.clip(s2_cur, 1e-12, None).astype(jnp.float32)
+    s2p = jnp.clip(s2_prop, 1e-12, None).astype(jnp.float32)
+    xt = xt.astype(jnp.float32)
+    xp = xp.astype(jnp.float32)
+    lc = -0.5 * ((xt - phi_cur * xp) ** 2 / s2c + jnp.log(s2c))
+    lp = -0.5 * ((xt - phi_prop * xp) ** 2 / s2p + jnp.log(s2p))
+    return lp - lc
+
+
+def batched_gaussian_ar1_delta_ref(
+    xt: jax.Array, xp: jax.Array,
+    phi_cur: jax.Array, s2_cur: jax.Array,
+    phi_prop: jax.Array, s2_prop: jax.Array,
+) -> jax.Array:
+    """Ensemble-batched AR(1) delta: xt/xp (K, m), params (K,) -> (K, m)."""
+    return gaussian_ar1_delta_ref(
+        xt, xp,
+        phi_cur[:, None], s2_cur[:, None], phi_prop[:, None], s2_prop[:, None],
+    )
+
+
+def batched_fused_ce_ref(h: jax.Array, table: jax.Array, targets: jax.Array) -> jax.Array:
+    """Ensemble-batched per-token log-likelihood.
+
+    h: (K, T, D); table: (V, D) shared across chains or (K, V, D) per-chain;
+    targets: (K, T) int32 -> (K, T) f32.
+    """
+    if table.ndim == 2:
+        logits = jnp.einsum("ktd,vd->ktv", h, table).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("ktd,kvd->ktv", h, table).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    return tgt - logz

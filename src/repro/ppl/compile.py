@@ -6,6 +6,14 @@ symbolically on the graph, partitioned at the border node, and the local
 sections — stored structure-of-arrays inside a ``Plate`` — are scored by one
 vectorized log-density evaluation per mini-batch (DESIGN.md §3).
 
+Emission goes through :func:`repro.core.target_builder.build_target`: when
+the plate's local score matches a registered kernel family (currently the
+``logit`` observation factor — a ``BernoulliLogits`` node fed by an inner
+product of a plate-constant feature matrix with the target variable), the
+compiled target carries the family's fused ``log_local_ensemble``, so the
+program gets the multi-chain Pallas path for free; otherwise the generic
+graph-evaluated target is emitted unchanged.
+
 Restrictions enforced here mirror the paper's Sec. 3.1 assumptions:
 T(rho, v) = ∅ and all local sections attach through a single border node.
 """
@@ -13,9 +21,13 @@ from __future__ import annotations
 
 from typing import Any
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.target import PartitionedTarget
+from ..core.target_builder import build_target
+from . import dists
 from .trace import Node, Plate, Trace, border_node, partition, scaffold
 
 
@@ -79,8 +91,65 @@ class _Evaluator:
         return out
 
 
+def _match_logit_family(ev: _Evaluator, v: Node):
+    """Does the plate's local score match the ``logit`` kernel family?
+
+    Structural check: exactly one local scoring node with a
+    ``BernoulliLogits`` distribution over {-1, +1} labels, fed by exactly one
+    plate-local deterministic node whose parents are a plate-constant feature
+    matrix and the target variable v. The deterministic function itself is
+    opaque (an arbitrary Python callable), so its inner-product form is
+    verified *numerically* on random probe weights — a wrong match here would
+    silently change the model, so both gates must pass.
+
+    Returns the family data ``(x, y)`` or None.
+    """
+    if len(ev.score_local) != 1 or len(ev.det_local) != 1 or ev.det_global:
+        return None
+    y_node = ev.score_local[0]
+    if not isinstance(y_node.dist, dists.BernoulliLogits):
+        return None
+    if len(y_node.parents) != 1 or y_node.parents[0] is not ev.det_local[0]:
+        return None
+    z = ev.det_local[0]
+    if len(z.parents) != 2:
+        return None
+    pa, pb = z.parents
+    candidates = []
+    if pa.kind == "constant" and pa.plate is not None and pb is v:
+        candidates.append((pa, lambda xx, ww: z.fn(xx, ww)))
+    if pb.kind == "constant" and pb.plate is not None and pa is v:
+        candidates.append((pb, lambda xx, ww: z.fn(ww, xx)))
+    for x_node, apply_fn in candidates:
+        x = jnp.asarray(x_node.value)
+        y = jnp.asarray(y_node.value)
+        w0 = jnp.asarray(v.value)
+        if x.ndim != 2 or y.ndim != 1 or w0.shape != (x.shape[1],):
+            continue
+        if not bool(jnp.all((y == 1.0) | (y == -1.0))):
+            continue
+        probe_rows = x[: min(32, x.shape[0])]
+        ok = True
+        # Two unit-scale probes plus a large-magnitude one: the latter pushes
+        # the logits far outside typical ranges, so saturating/clipped
+        # variants of the inner product (e.g. clip(x @ w, -c, c)) fail the
+        # gate instead of being misclassified as the pure logit family.
+        for seed, scale in ((0, 1.0), (1, 1.0), (2, 1e3)):
+            w_probe = scale * jax.random.normal(jax.random.key(seed), w0.shape, w0.dtype)
+            got = np.asarray(apply_fn(probe_rows, w_probe))
+            want = np.asarray(probe_rows @ w_probe)
+            if got.shape != want.shape or not np.allclose(got, want, rtol=1e-5,
+                                                          atol=1e-6 * max(scale, 1.0)):
+                ok = False
+                break
+        if ok:
+            return x, y
+    return None
+
+
 def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
-    """Scaffold → border-node partition → PartitionedTarget."""
+    """Scaffold → border-node partition → kernel-family detection →
+    :func:`repro.core.target_builder.build_target`."""
     sc = scaffold(trace, v)
     global_nodes, plate = partition(trace, sc)
     del global_nodes  # evaluator re-derives roles from the scaffold
@@ -103,9 +172,15 @@ def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
         idx = jnp.arange(n_sections, dtype=jnp.int32)
         return ev.global_score(theta) + ev.local_score(theta, idx).sum()
 
-    return PartitionedTarget(
-        num_sections=n_sections,
+    family_data = _match_logit_family(ev, v)
+    return build_target(
+        "logit" if family_data is not None else None,
+        family_data,
+        n_sections,
         log_global=log_global,
+        # The graph-evaluated log_local is kept even on a family match (it is
+        # numerically identical and exercises the scaffold machinery); the
+        # family contributes the fused (K, m) log_local_ensemble route.
         log_local=log_local,
         log_density=log_density,
     )

@@ -239,6 +239,73 @@ def test_sv_subsampled_mh_recovers_parameters_given_states():
     assert 0.06 < sig_hat < 0.16, sig_hat
 
 
+def test_sv_ensemble_k1_matches_sequential_bit_for_bit():
+    """Acceptance criterion: the stochvol ensemble driver at K=1 (adaptation
+    off) reproduces its sequential single-chain run exactly — particle Gibbs
+    sweep, phi move, sigma2 move, every transition."""
+    data = stochvol.synth(jax.random.key(7), num_series=30, length=5)
+    kw = dict(batch_size=50, epsilon=0.05, num_particles=12)
+    keys = jax.random.split(jax.random.key(8), 1)
+    _, samples, infos, _ = stochvol.run_posterior_ensemble(
+        keys, data, num_chains=1, num_steps=25, **kw)
+    _, s_seq, i_seq = stochvol.run_posterior_sequential(keys[0], data, 25, **kw)
+    for leaf in ("phi", "sigma2"):
+        np.testing.assert_array_equal(np.asarray(samples[leaf][0]), np.asarray(s_seq[leaf]))
+    for name in ("phi", "sigma2"):
+        for f in ("accepted", "n_evaluated", "rounds", "mu_hat", "mu0", "log_u"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(infos[name], f)[0]),
+                np.asarray(getattr(i_seq[name], f)), err_msg=f"{name}.{f}")
+
+
+def test_sv_ensemble_chains_distinct_and_fused_parity():
+    """K>1 stochvol chains differ per key; forcing the fused gaussian_ar1
+    route agrees with the unfused composite engine."""
+    data = stochvol.synth(jax.random.key(9), num_series=25, length=4)
+    kw = dict(batch_size=40, epsilon=0.05, num_particles=10)
+    keys = jax.random.split(jax.random.key(10), 3)
+    _, s_n, i_n, _ = stochvol.run_posterior_ensemble(
+        keys, data, num_chains=3, num_steps=15, fused_kernels="never", **kw)
+    _, s_f, i_f, _ = stochvol.run_posterior_ensemble(
+        keys, data, num_chains=3, num_steps=15, fused_kernels="always", **kw)
+    phi = np.asarray(s_n["phi"])
+    assert not np.array_equal(phi[0], phi[1])
+    np.testing.assert_allclose(phi, np.asarray(s_f["phi"]), rtol=1e-4, atol=1e-5)
+    agree = (np.asarray(i_n["phi"].accepted) == np.asarray(i_f["phi"].accepted)).mean()
+    assert agree > 0.9
+
+
+def test_jdpm_ensemble_k1_matches_sequential_bit_for_bit(jdpm_setup):
+    """Acceptance criterion: the jointdpm replica driver at K=1 reproduces
+    the sequential cycle (alpha MH, Gibbs z, w-moves) exactly."""
+    cfg, data, state = jdpm_setup
+    kw = dict(batch_size=50, epsilon=0.1, w_moves=4, gibbs_frac=0.25)
+    keys = jax.random.split(jax.random.key(21), 1)
+    _, samples, infos, _ = jointdpm.run_posterior_ensemble(
+        keys, data, cfg, num_chains=1, num_cycles=5, state0=state, **kw)
+    _, s_seq, i_seq = jointdpm.run_posterior_sequential(
+        keys[0], data, cfg, 5, state0=state, **kw)
+    for leaf in ("alpha", "k_active", "w"):
+        np.testing.assert_array_equal(np.asarray(samples[leaf][0]), np.asarray(s_seq[leaf]))
+    for f in ("cluster", "accepted", "n_evaluated", "n_k", "rounds"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(infos["w"], f)[0]),
+            np.asarray(getattr(i_seq["w"], f)), err_msg=f"w.{f}")
+
+
+def test_jdpm_ensemble_replicas_distinct(jdpm_setup):
+    cfg, data, state = jdpm_setup
+    keys = jax.random.split(jax.random.key(22), 2)
+    # per-chain key array with the default state0 (seeded from keys[0])
+    _, samples, _, diag = jointdpm.run_posterior_ensemble(
+        keys, data, cfg, num_chains=2, num_cycles=4,
+        batch_size=50, w_moves=3, gibbs_frac=0.25)
+    assert samples["alpha"].shape == (2, 4)
+    assert not np.array_equal(np.asarray(samples["w"][0]), np.asarray(samples["w"][1]))
+    assert diag["w_accept_rate"].shape == (2,)
+    assert 0.0 <= diag["w_frac_evaluated"] <= 1.0
+
+
 @pytest.mark.slow
 def test_sv_joint_pgibbs_mh_loop_runs():
     """Short joint loop (states + parameters) stays finite and in-support."""

@@ -5,9 +5,16 @@ import numpy as np
 import pytest
 
 from repro.kernels.batched_loglik import batched_logit_delta, gather_and_delta
-from repro.kernels.fused_ce import fused_ce
+from repro.kernels.fused_ce import batched_fused_ce, fused_ce
+from repro.kernels.gaussian_ar1 import batched_gaussian_ar1_delta
 from repro.kernels.logit_loglik import logit_delta
-from repro.kernels.ref import batched_logit_delta_ref, fused_ce_ref, logit_delta_ref
+from repro.kernels.ref import (
+    batched_fused_ce_ref,
+    batched_gaussian_ar1_delta_ref,
+    batched_logit_delta_ref,
+    fused_ce_ref,
+    logit_delta_ref,
+)
 
 
 @pytest.mark.parametrize("t,d,v", [(8, 32, 64), (16, 64, 128),
@@ -126,7 +133,7 @@ def test_ops_batched_dispatch_matches_kernel():
     w_c = jax.random.normal(jax.random.key(2), (k, d))
     w_p = jax.random.normal(jax.random.key(3), (k, d))
     out_auto = ops.batched_logit_delta(xg, yg, w_c, w_p)
-    out_kernel = ops.batched_logit_delta(xg, yg, w_c, w_p, mode="kernel", tile_m=8)
+    out_kernel = ops.batched_logit_delta(xg, yg, w_c, w_p, mode="always", tile_m=8)
     np.testing.assert_allclose(np.asarray(out_auto), np.asarray(out_kernel),
                                rtol=1e-5, atol=1e-5)
 
@@ -138,8 +145,115 @@ def test_ops_auto_dispatch_runs_on_cpu():
     table = jax.random.normal(jax.random.key(1), (32, 16))
     targets = jax.random.randint(jax.random.key(2), (8,), 0, 32)
     out_auto = ops.fused_ce(h, table, targets)
-    out_kernel = ops.fused_ce(h, table, targets, mode="kernel", tile_t=8, tile_v=16)
+    out_kernel = ops.fused_ce(h, table, targets, mode="always", tile_t=8, tile_v=16)
     np.testing.assert_allclose(np.asarray(out_auto), np.asarray(out_kernel), rtol=1e-5, atol=1e-5)
+
+
+def test_ops_mode_vocabulary_and_aliases():
+    """One dispatch vocabulary (auto|always|never); the legacy kernel/ref
+    spellings keep working as deprecated aliases and REPRO_FUSED pins auto."""
+    import os
+    import warnings
+
+    from repro.kernels import ops
+
+    x = jax.random.normal(jax.random.key(0), (8, 4))
+    y = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (8,)), 1.0, -1.0)
+    w_c = jax.random.normal(jax.random.key(2), (4,))
+    w_p = jax.random.normal(jax.random.key(3), (4,))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        old = ops.logit_delta(x, y, w_c, w_p, mode="ref")
+        assert any(issubclass(r.category, DeprecationWarning) for r in rec)
+    new = ops.logit_delta(x, y, w_c, w_p, mode="never")
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+    with pytest.raises(ValueError):
+        ops.logit_delta(x, y, w_c, w_p, mode="maybe")
+    assert ops.use_kernel("always") is True
+    assert ops.use_kernel("never") is False
+    before = os.environ.get(ops.ENV_VAR)
+    try:
+        os.environ[ops.ENV_VAR] = "always"
+        assert ops.use_kernel("auto") is True
+        os.environ[ops.ENV_VAR] = "never"
+        assert ops.use_kernel("auto") is False
+    finally:
+        if before is None:
+            os.environ.pop(ops.ENV_VAR, None)
+        else:
+            os.environ[ops.ENV_VAR] = before
+
+
+# ---------------------------------------------------------------------------
+# Ensemble-batched AR(1) delta (stochvol sections): interpret vs ref twin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "k,m,tile",
+    [(1, 8, 8), (4, 100, 32), (16, 37, 16), (3, 256, 256), (7, 5, 8)],
+)
+def test_batched_gaussian_ar1_delta_matches_ref(k, m, tile):
+    ks = jax.random.split(jax.random.key(k * 100 + m), 4)
+    xt = jax.random.normal(ks[0], (k, m))
+    xp = jax.random.normal(ks[1], (k, m))
+    phi = jax.random.uniform(ks[2], (k,), minval=0.3, maxval=0.99)
+    s2 = jax.random.uniform(ks[3], (k,), minval=1e-3, maxval=0.2)
+    phi_p = phi + 0.05
+    s2_p = s2 * 1.3
+    got = batched_gaussian_ar1_delta(xt, xp, phi, s2, phi_p, s2_p,
+                                     tile_m=tile, interpret=True)
+    want = batched_gaussian_ar1_delta_ref(xt, xp, phi, s2, phi_p, s2_p)
+    assert got.shape == (k, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_batched_gaussian_ar1_delta_out_of_support_is_finite():
+    """Negative sigma^2 proposals are rejected by the -inf prior, but the
+    local evaluations the test already drew must stay finite (clip guard)."""
+    k, m = 2, 16
+    xt = jax.random.normal(jax.random.key(0), (k, m))
+    xp = jax.random.normal(jax.random.key(1), (k, m))
+    phi = jnp.full((k,), 0.9)
+    s2 = jnp.full((k,), 0.05)
+    s2_bad = jnp.asarray([-0.01, 0.0])
+    got = batched_gaussian_ar1_delta(xt, xp, phi, s2, phi, s2_bad,
+                                     tile_m=8, interpret=True)
+    want = batched_gaussian_ar1_delta_ref(xt, xp, phi, s2, phi, s2_bad)
+    assert np.isfinite(np.asarray(got)).all()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Ensemble-batched fused CE: interpret vs ref twin, shared and per-chain tables
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,t,d,v", [(1, 8, 16, 32), (3, 19, 16, 50), (4, 16, 8, 33)])
+@pytest.mark.parametrize("per_chain_table", [False, True])
+def test_batched_fused_ce_matches_ref(k, t, d, v, per_chain_table):
+    ks = jax.random.split(jax.random.key(k * 10 + t), 3)
+    h = 0.4 * jax.random.normal(ks[0], (k, t, d))
+    shape = (k, v, d) if per_chain_table else (v, d)
+    table = 0.4 * jax.random.normal(ks[1], shape)
+    targets = jax.random.randint(ks[2], (k, t), 0, v)
+    got = batched_fused_ce(h, table, targets, tile_t=8, tile_v=16, interpret=True)
+    want = batched_fused_ce_ref(h, table, targets)
+    assert got.shape == (k, t)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_batched_fused_ce_rows_match_single_chain_kernel():
+    """Each chain's row must equal the single-chain fused_ce on its slice."""
+    k, t, d, v = 3, 12, 8, 40
+    h = 0.3 * jax.random.normal(jax.random.key(0), (k, t, d))
+    table = 0.3 * jax.random.normal(jax.random.key(1), (v, d))
+    targets = jax.random.randint(jax.random.key(2), (k, t), 0, v)
+    got = batched_fused_ce(h, table, targets, tile_t=8, tile_v=16, interpret=True)
+    for c in range(k):
+        row = fused_ce(h[c], table, targets[c], tile_t=8, tile_v=16, interpret=True)
+        np.testing.assert_allclose(np.asarray(got[c]), np.asarray(row),
+                                   rtol=1e-5, atol=1e-5)
 
 
 def test_kernel_used_by_model_loglik_semantics():

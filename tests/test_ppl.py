@@ -115,6 +115,94 @@ def test_compiled_target_log_density_is_consistent():
     np.testing.assert_allclose(delta_via_density, delta_via_parts, rtol=1e-4, atol=1e-4)
 
 
+def test_compiled_logit_program_gets_fused_family():
+    """ppl/compile.py emits through the target builder: a program whose local
+    score matches the logit family carries the fused ensemble evaluation."""
+    tr, w, x, yv = _bayeslr_trace(n=250)
+    target = compile_partitioned_target(tr, w)
+    assert target.family == "logit"
+    assert target.log_local_ensemble is not None
+
+
+def test_compiled_logit_fused_path_matches_unfused_bit_for_bit():
+    """The compiled program's log_local_ensemble (ref dispatch on CPU) must
+    agree bit for bit with its unfused log_local under vmap."""
+    tr, w, x, yv = _bayeslr_trace(n=250)
+    target = compile_partitioned_target(tr, w)
+    K, m = 4, 40
+    ks = jax.random.split(jax.random.key(2), 3)
+    wc = jax.random.normal(ks[0], (K, 3))
+    wp = jax.random.normal(ks[1], (K, 3))
+    idx = jax.random.randint(ks[2], (K, m), 0, 250)
+    vmapped = jax.jit(lambda a, b, i: jax.vmap(target.log_local)(a, b, i))(wc, wp, idx)
+    fused = jax.jit(target.log_local_ensemble)(wc, wp, idx)
+    np.testing.assert_array_equal(np.asarray(vmapped), np.asarray(fused))
+
+
+def test_compiled_clipped_logit_program_is_not_misclassified():
+    """A saturating variant of the inner product (clip(x@w, -c, c)) must
+    fail the numeric family gate — attaching the pure logit kernel would
+    silently change the model on the fused path."""
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (100, 3))
+    yv = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (100,)), 1.0, -1.0)
+    tr = Trace()
+    w = tr.sample(
+        "w", dists.mvnormal_diag,
+        tr.constant("mu_w", jnp.zeros(3)),
+        tr.constant("sig_w", jnp.ones(3)),
+        value=jnp.zeros(3),
+    )
+    with tr.plate("data", 100):
+        xn = tr.constant("x", x)
+        z = tr.det("z", lambda xx, ww: jnp.clip(xx @ ww, -15.0, 15.0), xn, w)
+        yn = tr.sample("y", dists.bernoulli_logits, z, value=yv)
+        tr.observe(yn, yv)
+    target = compile_partitioned_target(tr, w)
+    assert target.family is None
+    assert target.log_local_ensemble is None
+
+
+def test_compiled_non_logit_program_has_no_family():
+    """A conjugate-normal plate matches no registered family: the compiler
+    must emit the generic graph-evaluated target, not a wrong fused route."""
+    n = 50
+    x = 0.5 + jax.random.normal(jax.random.key(0), (n,))
+    tr = Trace()
+    mu = tr.sample("mu", dists.normal, tr.constant("m0", 0.0),
+                   tr.constant("s0", 1.0), value=jnp.asarray(0.2))
+    sig = tr.constant("sig", 1.0)
+    with tr.plate("data", n):
+        yn = tr.sample("y", dists.normal, mu, sig, value=x)
+        tr.observe(yn, x)
+    target = compile_partitioned_target(tr, mu)
+    assert target.family is None
+    assert target.log_local_ensemble is None
+    # and it still scores correctly
+    idx = jnp.arange(n, dtype=jnp.int32)
+    want = (-0.5 * (x - 0.3) ** 2) - (-0.5 * (x - 0.2) ** 2)
+    np.testing.assert_allclose(
+        np.asarray(target.log_local(jnp.asarray(0.2), jnp.asarray(0.3), idx)),
+        np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_compiled_family_target_rides_fused_ensemble():
+    """End to end: a compiled program on the fused lock-step ensemble agrees
+    with the unfused engine."""
+    from repro.core import ChainEnsemble, RandomWalk, SubsampledMHConfig
+
+    tr, w, x, yv = _bayeslr_trace(n=300)
+    target = compile_partitioned_target(tr, w)
+    cfg = SubsampledMHConfig(batch_size=50, epsilon=0.05, sampler="stream")
+    K, T = 2, 30
+    keys = jax.random.split(jax.random.key(4), K)
+    plain = ChainEnsemble(target, RandomWalk(0.1), K, config=cfg, fused_kernels="never")
+    fused = ChainEnsemble(target, RandomWalk(0.1), K, config=cfg, fused_kernels="always")
+    _, s_p, _ = plain.run(keys, plain.init(jnp.zeros(3)), T)
+    _, s_f, _ = fused.run(keys, fused.init(jnp.zeros(3)), T)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_f), rtol=2e-4, atol=2e-5)
+
+
 def test_compiled_target_runs_subsampled_chain():
     from repro.core import RandomWalk, SubsampledMHConfig, run_chain
 

@@ -275,7 +275,8 @@ def test_ensemble_config_validation(gaussian_target_factory):
     with pytest.raises(ValueError):
         ChainEnsemble(target, RandomWalk(0.05), 2, fused_kernels="maybe")
     with pytest.raises(ValueError):
-        # only the masked superstep honors the forced fused route
+        # forcing the fused route needs a target that actually carries the
+        # ensemble evaluation (build it via repro.core.build_target)
         ChainEnsemble(target, RandomWalk(0.05), 2, fused_kernels="always")
 
 

@@ -1,0 +1,303 @@
+"""Kernel-family registry / target builder and the composite cycle engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ChainEnsemble,
+    RandomWalk,
+    ScheduleConfig,
+    SubsampledMHConfig,
+    SubsampledMHOp,
+    SweepOp,
+    build_target,
+    cycle,
+    get_family,
+    registered_families,
+    run_cycle_sequential,
+)
+
+CFG = SubsampledMHConfig(batch_size=50, epsilon=0.05)
+
+
+def _logit_data(n=300, d=3, seed=0):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(k1, (n, d))
+    y = jnp.where(jax.random.bernoulli(k2, 0.5, (n,)), 1.0, -1.0)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_families_registered():
+    assert set(registered_families()) >= {"logit", "gaussian_ar1", "ce"}
+    assert get_family("logit").name == "logit"
+    with pytest.raises(KeyError):
+        get_family("nope")
+
+
+def test_build_target_validation():
+    x, y = _logit_data()
+    with pytest.raises(ValueError):
+        build_target("logit", (x, y), None, prior_logpdf=lambda w: 0.0)
+    with pytest.raises(ValueError):
+        build_target("logit", (x, y), 300)  # no prior_logpdf / log_global
+    with pytest.raises(ValueError):
+        build_target(None, num_sections=300, log_global=lambda a, b: 0.0)
+    with pytest.raises(KeyError):
+        build_target("nope", (x, y), 300, prior_logpdf=lambda w: 0.0)
+
+
+# ---------------------------------------------------------------------------
+# logit family
+# ---------------------------------------------------------------------------
+
+
+def test_logit_family_matches_hand_target():
+    x, y = _logit_data()
+    prior_var = 0.1
+    t = build_target("logit", (x, y), x.shape[0],
+                     prior_logpdf=lambda w: (-0.5 / prior_var) * jnp.sum(w**2))
+    assert t.family == "logit" and t.num_sections == 300
+    w0, w1 = jnp.zeros(3), jnp.asarray([0.4, -0.2, 0.1])
+    idx = jnp.arange(60, dtype=jnp.int32)
+    hand_local = (-jnp.logaddexp(0, -y[idx] * (x[idx] @ w1))
+                  + jnp.logaddexp(0, -y[idx] * (x[idx] @ w0)))
+    np.testing.assert_allclose(np.asarray(t.log_local(w0, w1, idx)),
+                               np.asarray(hand_local), rtol=1e-5, atol=1e-6)
+    hand_global = (-0.5 / prior_var) * (jnp.sum(w1**2) - jnp.sum(w0**2))
+    np.testing.assert_allclose(float(t.log_global(w0, w1)), float(hand_global), rtol=1e-5)
+    hand_density = ((-0.5 / prior_var) * jnp.sum(w1**2)
+                    - jnp.logaddexp(0, -y * (x @ w1)).sum())
+    np.testing.assert_allclose(float(t.log_density(w1)), float(hand_density), rtol=1e-5)
+
+
+def test_logit_family_ensemble_matches_vmapped_local_bit_for_bit():
+    """Acceptance criterion: the fused-path (ref dispatch on CPU) ensemble
+    round equals the vmapped unfused evaluation bit for bit."""
+    x, y = _logit_data()
+    t = build_target("logit", (x, y), x.shape[0], prior_logpdf=lambda w: 0.0)
+    K, m = 5, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    wc = jax.random.normal(ks[0], (K, 3))
+    wp = jax.random.normal(ks[1], (K, 3))
+    idx = jax.random.randint(ks[2], (K, m), 0, 300)
+    vmapped = jax.jit(lambda a, b, i: jax.vmap(t.log_local)(a, b, i))(wc, wp, idx)
+    fused = jax.jit(t.log_local_ensemble)(wc, wp, idx)
+    np.testing.assert_array_equal(np.asarray(vmapped), np.asarray(fused))
+
+
+# ---------------------------------------------------------------------------
+# gaussian_ar1 family
+# ---------------------------------------------------------------------------
+
+
+def test_gaussian_ar1_family_matches_transition_logpdf_delta():
+    from repro.experiments.stochvol import _trans_logpdf
+
+    n = 200
+    k1, k2 = jax.random.split(jax.random.key(3))
+    xt = jax.random.normal(k1, (n,))
+    xp = jax.random.normal(k2, (n,))
+    t = build_target(
+        "gaussian_ar1", (xt, xp), n,
+        prior_logpdf=lambda th: jnp.zeros(()),
+        params_fn=lambda th: (th["phi"], th["sigma2"]),
+    )
+    th0 = {"phi": jnp.asarray(0.9), "sigma2": jnp.asarray(0.05)}
+    th1 = {"phi": jnp.asarray(0.8), "sigma2": jnp.asarray(0.07)}
+    idx = jnp.arange(80, dtype=jnp.int32)
+    want = (_trans_logpdf(xt[idx], xp[idx], th1["phi"], th1["sigma2"])
+            - _trans_logpdf(xt[idx], xp[idx], th0["phi"], th0["sigma2"]))
+    np.testing.assert_allclose(np.asarray(t.log_local(th0, th1, idx)),
+                               np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_gaussian_ar1_latent_dependent_data_fn():
+    """Callable data: sections derived from theta (the stochvol ensemble
+    form) must agree with the closure-based target on the same h."""
+    from repro.experiments import stochvol
+
+    data = stochvol.synth(jax.random.key(4), num_series=20, length=5)
+    closure = stochvol.make_param_target(data.h_true, "phi")
+    joint = stochvol.make_joint_param_target(20, 5)
+    th0 = {"phi": jnp.asarray(0.9), "sigma2": jnp.asarray(0.02), "h": data.h_true}
+    th1 = {"phi": jnp.asarray(0.85), "sigma2": jnp.asarray(0.03), "h": data.h_true}
+    idx = jnp.arange(100, dtype=jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(joint.log_local(th0, th1, idx)),
+        np.asarray(closure.log_local(th0, th1, idx)), rtol=1e-6, atol=1e-7,
+    )
+    # ensemble form: a (K, 2) chain axis over theta, per-chain h
+    K = 2
+    b = lambda v: jnp.broadcast_to(jnp.asarray(v)[None], (K,) + jnp.shape(jnp.asarray(v)))
+    thb0 = {k: b(v) for k, v in th0.items()}
+    thb1 = {k: b(v) for k, v in th1.items()}
+    idxb = jnp.stack([idx, idx + 1])
+    fused = joint.log_local_ensemble(thb0, thb1, idxb)
+    for c in range(K):
+        np.testing.assert_allclose(
+            np.asarray(fused[c]),
+            np.asarray(joint.log_local(th0, th1, idxb[c])), rtol=1e-5, atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# ce family
+# ---------------------------------------------------------------------------
+
+
+def test_ce_family_delta_and_ensemble():
+    from repro.kernels.ref import fused_ce_ref
+
+    n, d, v = 60, 8, 30
+    ks = jax.random.split(jax.random.key(5), 4)
+    h = 0.3 * jax.random.normal(ks[0], (n, d))
+    targets = jax.random.randint(ks[1], (n,), 0, v)
+    t = build_target("ce", (h, targets), n, prior_logpdf=lambda tab: jnp.zeros(()))
+    tab0 = 0.3 * jax.random.normal(ks[2], (v, d))
+    tab1 = 0.3 * jax.random.normal(ks[3], (v, d))
+    idx = jnp.arange(40, dtype=jnp.int32)
+    want = (fused_ce_ref(h[idx], tab1, targets[idx])
+            - fused_ce_ref(h[idx], tab0, targets[idx]))
+    np.testing.assert_allclose(np.asarray(t.log_local(tab0, tab1, idx)),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+    K, m = 3, 16
+    idxb = jax.random.randint(jax.random.key(6), (K, m), 0, n)
+    tabs0 = jnp.stack([tab0] * K)
+    tabs1 = jnp.stack([tab1] * K)
+    fused = t.log_local_ensemble(tabs0, tabs1, idxb)
+    vmapped = jax.vmap(t.log_local, in_axes=(0, 0, 0))(tabs0, tabs1, idxb)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(vmapped),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Composite cycle engine
+# ---------------------------------------------------------------------------
+
+
+def test_cycle_validation():
+    x, y = _logit_data()
+    t = build_target("logit", (x, y), 300, prior_logpdf=lambda w: 0.0)
+    with pytest.raises(ValueError):
+        cycle([])
+    with pytest.raises(TypeError):
+        cycle([lambda k, th: th])
+    with pytest.raises(ValueError):
+        cycle([SubsampledMHOp(t, RandomWalk(0.1), name="a"),
+               SweepOp(lambda k, th: th, name="a")])
+
+
+def test_ensemble_composite_validation(gaussian_target_factory):
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    cyc = cycle([SubsampledMHOp(target, RandomWalk(0.05), CFG)])
+    with pytest.raises(ValueError):
+        ChainEnsemble(target, RandomWalk(0.05), 2, transition=cyc)
+    with pytest.raises(ValueError):
+        ChainEnsemble(num_chains=2, transition=cyc, stepping="masked")
+    with pytest.raises(ValueError):
+        ChainEnsemble(num_chains=2, transition=cyc, schedule=ScheduleConfig())
+    with pytest.raises(ValueError):
+        ChainEnsemble(num_chains=2, transition=cyc, shard=True)
+    with pytest.raises(ValueError):
+        ChainEnsemble(num_chains=2)  # neither target nor transition
+    with pytest.raises(ValueError):
+        # forcing the fused route on a composite whose MH target has no
+        # ensemble evaluation must fail loudly, not silently run unfused
+        ChainEnsemble(num_chains=2, transition=cyc, fused_kernels="always")
+    with pytest.raises(ValueError):
+        # kernel/config are per-component knobs in a composite; the
+        # ensemble-level ones would be silently ignored
+        ChainEnsemble(num_chains=2, transition=cyc, kernel="exact")
+    with pytest.raises(ValueError):
+        ChainEnsemble(num_chains=2, transition=cyc, config=CFG)
+    x, y = _logit_data()
+    fam_t = build_target("logit", (x, y), 300, prior_logpdf=lambda w: 0.0)
+    with pytest.raises(ValueError):
+        # shard=True demands the sharded vmapped scan; "always" demands the
+        # unsharded fused scan — contradictory, rejected at construction
+        ChainEnsemble(fam_t, RandomWalk(0.1), 2, fused_kernels="always", shard=True)
+
+
+def test_cycle_of_one_kernel_equals_bare_kernel(gaussian_target_factory):
+    """Determinism: cycle([op]) == the bare kernel ensemble, bit for bit."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    K, T = 3, 60
+    keys = jax.random.split(jax.random.key(7), K)
+    bare = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG)
+    comp = ChainEnsemble(num_chains=K, transition=cycle(
+        [SubsampledMHOp(target, RandomWalk(0.05), CFG, name="theta")]))
+    _, s_b, i_b = bare.run(keys, bare.init(jnp.zeros(())), T)
+    _, s_c, i_c = comp.run(keys, comp.init(jnp.zeros(())), T)
+    np.testing.assert_array_equal(np.asarray(s_b), np.asarray(s_c))
+    for field in ("accepted", "n_evaluated", "rounds", "mu_hat", "mu0", "log_u"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(i_b, field)),
+            np.asarray(getattr(i_c["theta"], field)), err_msg=field)
+
+
+def test_composite_k1_matches_sequential_cycle(gaussian_target_factory):
+    """A K=1 composite ensemble (MH op + opaque sweep with info) reproduces
+    run_cycle_sequential bit for bit."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+
+    def sweep(key, th):
+        return th + 0.01 * jax.random.normal(key, ()), {"noise": th}
+
+    cyc = cycle([SubsampledMHOp(target, RandomWalk(0.05), CFG, name="mh"),
+                 SweepOp(sweep, name="jitter", has_info=True)])
+    ens = ChainEnsemble(num_chains=1, transition=cyc)
+    keys = jax.random.split(jax.random.key(11), 1)
+    _, s_e, i_e = ens.run(keys, ens.init(jnp.zeros(())), 40)
+    _, s_q, i_q = run_cycle_sequential(keys[0], jnp.zeros(()), cyc, 40)
+    np.testing.assert_array_equal(np.asarray(s_e[0]), np.asarray(s_q))
+    np.testing.assert_array_equal(np.asarray(i_e["mh"].accepted[0]),
+                                  np.asarray(i_q["mh"].accepted))
+    np.testing.assert_array_equal(np.asarray(i_e["jitter"]["noise"][0]),
+                                  np.asarray(i_q["jitter"]["noise"]))
+
+
+# ---------------------------------------------------------------------------
+# Fused lock-step scan
+# ---------------------------------------------------------------------------
+
+
+def test_lockstep_fused_path_matches_vmap():
+    """Acceptance criterion: the lock-step scan routes rounds through
+    log_local_ensemble when dispatch selects the fused path, in parity with
+    the unfused scan."""
+    x, y = _logit_data(n=800, d=2, seed=9)
+    t = build_target("logit", (x, y), 800,
+                     prior_logpdf=lambda w: -5.0 * jnp.sum(w**2))
+    cfg = SubsampledMHConfig(batch_size=50, epsilon=0.05, sampler="stream")
+    K, T = 3, 40
+    keys = jax.random.split(jax.random.key(5), K)
+    plain = ChainEnsemble(t, RandomWalk(0.1), K, config=cfg, fused_kernels="never")
+    fused = ChainEnsemble(t, RandomWalk(0.1), K, config=cfg, fused_kernels="always")
+    _, s_p, i_p = plain.run(keys, plain.init(jnp.zeros(2)), T)
+    _, s_f, i_f = fused.run(keys, fused.init(jnp.zeros(2)), T)
+    np.testing.assert_allclose(np.asarray(s_p), np.asarray(s_f), rtol=2e-4, atol=2e-5)
+    assert (np.asarray(i_p.accepted) == np.asarray(i_f.accepted)).mean() > 0.95
+
+
+def test_lockstep_fused_with_schedule_stays_in_bounds():
+    """The fused lock-step scan composes with the adaptive controller."""
+    x, y = _logit_data(n=600, d=2, seed=13)
+    t = build_target("logit", (x, y), 600,
+                     prior_logpdf=lambda w: -5.0 * jnp.sum(w**2))
+    cfg = SubsampledMHConfig(batch_size=50, epsilon=0.05, sampler="stream")
+    sched = ScheduleConfig(epsilon_max=0.2)
+    ens = ChainEnsemble(t, RandomWalk(0.1), 3, config=cfg,
+                        fused_kernels="always", schedule=sched)
+    state, samples, infos = ens.run(jax.random.key(0), ens.init(jnp.zeros(2)), 50)
+    eps = np.asarray(infos.epsilon)
+    assert samples.shape == (3, 50, 2)
+    assert eps.min() >= cfg.epsilon - 1e-7 and eps.max() <= 0.2 + 1e-7
+    assert set(np.unique(np.asarray(infos.batch_eff)).tolist()) <= set(
+        sched.buckets_for(cfg, 600))
+    assert np.asarray(state.controller.t).tolist() == [50, 50, 50]
