@@ -34,6 +34,8 @@ Reproduction guide and reference CPU numbers: docs/BENCHMARKS.md.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -186,6 +188,51 @@ def run_jointdpm(num_chains: int, cycles: int = 5, n: int = 1000,
 WORKLOADS = {"stochvol": run_stochvol, "jointdpm": run_jointdpm}
 
 
+def bench_json_path(name: str) -> str:
+    """Where the machine-readable result lands (`BENCH_<name>.json` under
+    ``$REPRO_BENCH_DIR`` or the working directory); CI uploads these as
+    artifacts so the perf trajectory is tracked across PRs."""
+    return os.path.join(os.environ.get("REPRO_BENCH_DIR", os.getcwd()),
+                        f"BENCH_{name}.json")
+
+
+def _write_multichain_json(raws, workload_raws) -> str:
+    records = []
+    for r in raws:
+        for engine in ("sequential",) + ENGINES:
+            if f"{engine}_tps_steady" not in r and engine == "sequential":
+                continue
+            rec = {
+                "engine": engine,
+                "N": r["N"],
+                "K": r["K"],
+                "steps": r["steps"],
+                "tps_e2e": r.get(f"{engine}_tps_e2e"),
+                "tps_steady": r.get(f"{engine}_tps_steady"),
+            }
+            tail = r.get(f"{engine}_rounds_tail")
+            if tail is not None:
+                rec["rounds_tail"] = {
+                    k: (v.tolist() if isinstance(v, np.ndarray) else v)
+                    for k, v in tail.items()
+                }
+            records.append(rec)
+    for name, w in workload_raws:
+        records.append({
+            "engine": f"composite_{name}",
+            "N": w["N"],
+            "K": w["K"],
+            "steps": w["steps"],
+            "tps_steady": w["ensemble_tps_steady"],
+            "sequential_tps_steady": w["sequential_tps_steady"],
+            "ensemble_vs_sequential_steady": w["ensemble_vs_sequential_steady"],
+        })
+    path = bench_json_path("multichain")
+    with open(path, "w") as f:
+        json.dump({"bench": "multichain", "records": records}, f, indent=1)
+    return path
+
+
 def main(fast: bool = True):
     if fast:
         configs, steps = [(5000, 4), (5000, 16)], 100
@@ -215,9 +262,11 @@ def main(fast: bool = True):
                 f"_rounds_p50={tail['p50']:.0f}_p99={tail['p99']:.0f}_max={tail['max']:.0f}"
                 + extra,
             ))
+    workload_raws = []
     for wl_name, wl_fn in WORKLOADS.items():
         for k in workload_ks:
             w = wl_fn(k)
+            workload_raws.append((wl_name, w))
             rows.append((
                 f"multichain_{wl_name}_N{w['N']}_K{w['K']}",
                 w["ensemble_us_per_transition"],
@@ -225,6 +274,8 @@ def main(fast: bool = True):
                 f"_ens_steady={w['ensemble_tps_steady']:.0f}"
                 f"_ens_vs_seq={w['ensemble_vs_sequential_steady']:.1f}x",
             ))
+    path = _write_multichain_json(raws, workload_raws)
+    rows.append((f"multichain_json:{path}", 0.0, "machine-readable output"))
     return rows, raws
 
 

@@ -14,12 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig5,fig6,fig9,kernels,roofline,multichain")
+                    help="comma list: fig4,fig5,fig6,fig9,kernels,roofline,"
+                         "multichain,serving")
     args = ap.parse_args()
     fast = not args.full
 
     from . import fig4_bayeslr, fig5_sublinear, fig6_jointdpm, fig9_sv
-    from . import kernels_bench, multichain_bench, roofline
+    from . import kernels_bench, multichain_bench, roofline, serving_bench
 
     benches = {
         "fig5": fig5_sublinear,
@@ -29,6 +30,7 @@ def main() -> None:
         "kernels": kernels_bench,
         "roofline": roofline,
         "multichain": multichain_bench,
+        "serving": serving_bench,
     }
     selected = args.only.split(",") if args.only else list(benches)
 

@@ -1,0 +1,128 @@
+"""Serving-layer benchmark: request latency tails and refresh throughput.
+
+What the ROADMAP north star ("serve heavy traffic") is made of, measured on
+the real serving stack (``repro.serving``): a resident BayesLR ensemble
+kept warm by its refresh loop, and request classes served through the
+batching queue. Reported per batching level:
+
+  * p50/p95/p99 request latency and requests/sec — the queue coalesces up
+    to ``max_batch`` requests into one posterior-functional evaluation, so
+    tail latency vs throughput is exactly the batching trade;
+  * steady-state refresh throughput (transitions/sec) of the resident
+    ensemble — what bounds snapshot staleness under continuous refresh.
+
+Writes ``BENCH_serving.json`` (machine-readable; see ``bench_json_path``)
+next to ``BENCH_multichain.json`` so CI tracks the serving perf trajectory
+across PRs. Reproduction guide: docs/BENCHMARKS.md.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core import slo_summary
+
+from .multichain_bench import bench_json_path
+
+
+def _build_pool(num_chains: int, refresh_steps: int, window: int, smoke: bool):
+    from repro.serving import EnsemblePool, FreshnessPolicy, ServingConfig
+
+    config = ServingConfig(
+        num_chains=num_chains,
+        refresh_steps=refresh_steps,
+        window=window,
+        micro_batch=64,
+        freshness=FreshnessPolicy(
+            max_staleness_s=1e9,  # staleness is not the measured variable
+            min_draws=num_chains * window // 2,
+        ),
+        seed=0,
+    )
+    pool = EnsemblePool(config)
+    pool.add_workload("bayeslr", smoke=smoke)
+    pool.warm()
+    # compile the evaluator outside every measured window
+    wl = pool.workload("bayeslr")
+    spec = wl.query_specs["predictive"]
+    pool.query("bayeslr", "predictive", spec.make_queries(jax.random.key(0), 8))
+    return pool, wl
+
+
+def bench_queries(pool, wl, max_batch: int, num_queries: int, rows: int) -> dict:
+    from repro.serving import RequestQueue
+
+    queue = RequestQueue(pool, max_batch=max_batch, default_deadline_s=1.0)
+    spec = wl.query_specs["predictive"]
+    key = jax.random.key(1)
+    t0 = time.perf_counter()
+    for i in range(0, num_queries, max_batch):
+        for _ in range(min(max_batch, num_queries - i)):
+            key, sub = jax.random.split(key)
+            queue.submit("bayeslr", "predictive", spec.make_queries(sub, rows))
+        queue.drain()
+    wall = time.perf_counter() - t0
+    done = queue.completed
+    out = slo_summary([r.latency_s for r in done],
+                      deadlines_s=[r.deadline_s for r in done])
+    out["qps"] = len(done) / max(wall, 1e-12)
+    out["max_batch"] = max_batch
+    out["rows_per_query"] = rows
+    return out
+
+
+def bench_refresh(pool, steps: int) -> dict:
+    resident = pool.resident("bayeslr")
+    ens = resident.ensemble
+    state, timed = ens.run_timed(
+        jax.random.key(2), resident.state, steps, block_every=steps,
+        start_step=resident.steps_done,
+    )
+    return {
+        "transitions_per_sec": timed["transitions_per_sec"],
+        "K": ens.num_chains,
+        "steps": steps,
+    }
+
+
+def main(fast: bool = True):
+    if fast:
+        num_chains, refresh_steps, window = 4, 16, 32
+        num_queries, rows, refresh_bench_steps = 120, 8, 100
+        batches = (1, 8, 32)
+    else:
+        num_chains, refresh_steps, window = 16, 64, 128
+        num_queries, rows, refresh_bench_steps = 600, 16, 400
+        batches = (1, 8, 32, 128)
+    pool, wl = _build_pool(num_chains, refresh_steps, window, smoke=fast)
+
+    rows_out, records = [], []
+    refresh = bench_refresh(pool, refresh_bench_steps)
+    records.append({"kind": "refresh", **refresh})
+    rows_out.append((
+        f"serving_refresh_K{refresh['K']}",
+        1e6 / refresh["transitions_per_sec"],
+        f"steady_tps={refresh['transitions_per_sec']:.0f}",
+    ))
+    for max_batch in batches:
+        r = bench_queries(pool, wl, max_batch, num_queries, rows)
+        records.append({"kind": "queries", "K": num_chains, **r})
+        rows_out.append((
+            f"serving_query_b{max_batch}",
+            1e3 * r["p50_ms"],
+            f"p50_ms={r['p50_ms']:.2f}_p95_ms={r['p95_ms']:.2f}"
+            f"_p99_ms={r['p99_ms']:.2f}_qps={r['qps']:.0f}",
+        ))
+    path = bench_json_path("serving")
+    with open(path, "w") as f:
+        json.dump({"bench": "serving", "records": records}, f, indent=1)
+    rows_out.append((f"serving_json:{path}", 0.0, "machine-readable output"))
+    return rows_out, records
+
+
+if __name__ == "__main__":
+    for name, us, derived in main()[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -50,6 +50,12 @@ Pallas, BOTH stepping modes route each (K, m) round through it instead of
 vmapping ``log_local`` — the masked superstep natively, the lock-step scan
 via the batched-transition form of the same round loop.
 
+The serving layer (:mod:`repro.serving`) keeps ensembles *resident*: the
+:meth:`ChainEnsemble.step_keys` schedule (``fold_in(chain_key, t)``) makes
+chunked ``run``/``run_timed(start_step=)`` calls resume one logical run bit
+for bit, which is what lets a background refresh loop — and a checkpoint
+restore — continue exactly the trajectory an offline ``run`` would produce.
+
 Composite programs — the paper's ``(cycle (...))`` inference expressions —
 run through ``transition=cycle([...])``: per-variable
 :class:`repro.core.composite.SubsampledMHOp` kernels (each with its own
@@ -152,7 +158,9 @@ def _make_batched_transition(
     cannot express.
 
     Returns ``transition(keys (K,), theta, sampler, epsilon (K,),
-    batch_eff (K,)) -> (theta', sampler', info)``.
+    batch_eff (K,), prop_scale=None) -> (theta', sampler', info)`` where the
+    optional ``prop_scale`` is a (K,) per-chain proposal-sigma multiplier
+    (the adaptive-proposal knob; ``None`` keeps the static proposal call).
     """
     _, reset_fn, draw_fn = make_sampler(config.sampler, target.num_sections)
     draw_bounded = make_bounded_draw(config.sampler) if adaptive else None
@@ -160,10 +168,15 @@ def _make_batched_transition(
     n_total = target.num_sections
     K = num_chains
 
-    def transition(keys, theta, sampler, epsilon, batch_eff):
-        th_p, mu0, log_u, ktest = jax.vmap(
-            lambda k, t: propose_and_mu0(k, t, target, proposal)
-        )(keys, theta)
+    def transition(keys, theta, sampler, epsilon, batch_eff, prop_scale=None):
+        if prop_scale is None:
+            th_p, mu0, log_u, ktest = jax.vmap(
+                lambda k, t: propose_and_mu0(k, t, target, proposal)
+            )(keys, theta)
+        else:
+            th_p, mu0, log_u, ktest = jax.vmap(
+                lambda k, t, s: propose_and_mu0(k, t, target, proposal, s)
+            )(keys, theta, prop_scale)
         init = (
             ktest,
             jax.vmap(reset_fn)(sampler),
@@ -364,6 +377,23 @@ class ChainEnsemble:
                 "masked stepping / adaptive scheduling require the subsampled "
                 "kernel (the exact kernel has no sequential test to overlap)"
             )
+        if self.schedule is not None and self.schedule.adapt_proposal:
+            import inspect
+
+            try:
+                params = inspect.signature(self.proposal).parameters
+                takes_scale = len(params) >= 3 or any(
+                    p.kind is inspect.Parameter.VAR_POSITIONAL
+                    or p.kind is inspect.Parameter.VAR_KEYWORD
+                    for p in params.values()
+                )
+            except (TypeError, ValueError):  # builtins etc: trust the caller
+                takes_scale = True
+            if not takes_scale:
+                raise ValueError(
+                    "schedule.adapt_proposal=True needs a proposal accepting "
+                    "a third `scale` argument (e.g. repro.core.RandomWalk)"
+                )
         if self.stepping == "masked" and self.shard is True:
             raise ValueError("masked stepping runs unsharded; use shard='auto' or False")
         if self.fused_kernels == "always" and self.kernel == "exact":
@@ -489,10 +519,10 @@ class ChainEnsemble:
         max_rounds = self._max_rounds
         n_total = self.target.num_sections
         eps_floor = sched.epsilon_floor(self._config) if sched else 0.0
+        adapt_prop = sched is not None and sched.adapt_proposal
 
-        def one_chain(key, theta0, sampler0, ctrl0, num_steps):
-            keys = jax.random.split(key, num_steps)
-
+        def one_chain(keys, theta0, sampler0, ctrl0):
+            # ``keys``: this chain's (num_steps,) per-step key row.
             if sched is None:
 
                 def body(carry, k):
@@ -505,7 +535,10 @@ class ChainEnsemble:
                 def body(carry, k):
                     theta, sstate, ctrl = carry
                     eps, meff = controller_params(ctrl, buckets)
-                    theta, sstate, info = step(k, theta, sstate, eps, meff, max_rounds)
+                    theta, sstate, info = step(
+                        k, theta, sstate, eps, meff, max_rounds,
+                        prop_scale=ctrl.sigma_scale if adapt_prop else None,
+                    )
                     ctrl = controller_update(ctrl, info, sched, buckets, n_total, eps_floor)
                     return (theta, sstate, ctrl), (collect(theta), info)
 
@@ -514,8 +547,9 @@ class ChainEnsemble:
             )
             return theta, sstate, ctrl, samples, infos
 
-        def run_all(keys, theta, sampler, ctrl, num_steps):
-            fn = jax.vmap(lambda k, t, s, c: one_chain(k, t, s, c, num_steps))
+        def run_all(step_keys, theta, sampler, ctrl, num_steps):
+            del num_steps  # static; implied by step_keys' trailing axis
+            fn = jax.vmap(one_chain)
             mesh = self._chain_mesh()
             if mesh is not None:
                 from jax.experimental.shard_map import shard_map
@@ -524,7 +558,7 @@ class ChainEnsemble:
                 spec = P(self.chain_axis)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec, spec, spec, spec),
                                out_specs=(spec,) * 5, check_rep=False)
-            return fn(keys, theta, sampler, ctrl)
+            return fn(step_keys, theta, sampler, ctrl)
 
         return jax.jit(run_all, static_argnames=("num_steps",))
 
@@ -550,11 +584,11 @@ class ChainEnsemble:
             batch_max=max(buckets) if sched else None,
             max_rounds=self._max_rounds,
         )
+        adapt_prop = sched is not None and sched.adapt_proposal
 
-        def run_all(keys, theta, sampler, ctrl, num_steps):
-            step_keys = jnp.swapaxes(
-                jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
-            )  # (num_steps, K)
+        def run_all(step_keys, theta, sampler, ctrl, num_steps):
+            del num_steps
+            step_keys = jnp.swapaxes(step_keys, 0, 1)  # (num_steps, K)
 
             def body(carry, keys_t):
                 theta, sampler, ctrl = carry
@@ -563,7 +597,10 @@ class ChainEnsemble:
                     meff = jnp.full((K,), config.batch_size, jnp.int32)
                 else:
                     eps, meff = jax.vmap(lambda c: controller_params(c, buckets))(ctrl)
-                theta, sampler, info = transition(keys_t, theta, sampler, eps, meff)
+                theta, sampler, info = transition(
+                    keys_t, theta, sampler, eps, meff,
+                    ctrl.sigma_scale if adapt_prop else None,
+                )
                 if sched is not None:
                     ctrl = jax.vmap(
                         lambda c, i: controller_update(c, i, sched, buckets, n_total, eps_floor)
@@ -603,11 +640,9 @@ class ChainEnsemble:
             else:
                 comps.append(("sweep", op.fn, op.has_info))
 
-        def run_all(keys, theta, samplers, ctrl, num_steps):
-            del ctrl  # composite cycles run unscheduled
-            step_keys = jnp.swapaxes(
-                jax.vmap(lambda k: jax.random.split(k, num_steps))(keys), 0, 1
-            )
+        def run_all(step_keys, theta, samplers, ctrl, num_steps):
+            del ctrl, num_steps  # composite cycles run unscheduled
+            step_keys = jnp.swapaxes(step_keys, 0, 1)  # (num_steps, K)
 
             def body(carry, keys_t):
                 theta, samplers = carry
@@ -661,6 +696,7 @@ class ChainEnsemble:
         _, reset_fn, draw_fn = make_sampler(config.sampler, n_total)
         draw_bounded = make_bounded_draw(config.sampler)
         adaptive = sched is not None
+        adapt_prop = adaptive and sched.adapt_proposal
         use_fused = self._use_fused()
         K = self.num_chains
 
@@ -670,8 +706,8 @@ class ChainEnsemble:
                         jnp.full((K,), config.batch_size, jnp.int32))
             return jax.vmap(lambda c: controller_params(c, buckets))(ctrl)
 
-        def run_masked(keys, theta, sampler, ctrl, num_steps):
-            step_keys = jax.vmap(lambda k: jax.random.split(k, num_steps))(keys)
+        def run_masked(step_keys, theta, sampler, ctrl, num_steps):
+            keys = step_keys[:, 0]  # placeholder only; replaced at first start
             eps0, meff0 = knobs(ctrl)
             zero = jnp.zeros((K,), jnp.int32)
             sample_sd = jax.eval_shape(jax.vmap(collect), theta)
@@ -723,9 +759,14 @@ class ChainEnsemble:
                 # entirely instead of computing and discarding it.
                 def start_block(_):
                     k_step = jax.vmap(lambda ks, i: ks[i])(step_keys, pos)
-                    th_p, mu0_n, log_u_n, ktest_n = jax.vmap(
-                        lambda k, t: propose_and_mu0(k, t, target, proposal)
-                    )(k_step, c.theta)
+                    if adapt_prop:
+                        th_p, mu0_n, log_u_n, ktest_n = jax.vmap(
+                            lambda k, t, s: propose_and_mu0(k, t, target, proposal, s)
+                        )(k_step, c.theta, c.controller.sigma_scale)
+                    else:
+                        th_p, mu0_n, log_u_n, ktest_n = jax.vmap(
+                            lambda k, t: propose_and_mu0(k, t, target, proposal)
+                        )(k_step, c.theta)
                     eps_n, meff_n = knobs(c.controller)
                     return (
                         jnp.where(start, ktest_n, c.test_key),
@@ -845,14 +886,65 @@ class ChainEnsemble:
 
     # -- drivers ----------------------------------------------------------
 
-    def run(self, key: jax.Array, state: EnsembleState, num_steps: int):
+    @functools.cached_property
+    def _split_keys_jit(self):
+        """(K,) per-chain keys -> (K, num_steps) step keys, exactly the split
+        the scanned runners historically performed internally."""
+        return jax.jit(
+            lambda keys, num_steps: jax.vmap(
+                lambda k: jax.random.split(k, num_steps)
+            )(keys),
+            static_argnames=("num_steps",),
+        )
+
+    @functools.cached_property
+    def _fold_keys_jit(self):
+        return jax.jit(
+            lambda keys, start, num_steps: jax.vmap(
+                lambda k: jax.vmap(
+                    lambda t: jax.random.fold_in(k, t)
+                )(start + jnp.arange(num_steps, dtype=jnp.uint32))
+            )(keys),
+            static_argnames=("num_steps",),
+        )
+
+    def step_keys(self, key: jax.Array, start: int, num_steps: int) -> jax.Array:
+        """The canonical *resumable* step-key schedule: step ``t`` of chain
+        ``c`` gets ``fold_in(chain_key_c, t)``, independent of how the run is
+        chunked. ``ens.run(None, state, n, step_keys=ens.step_keys(key, o, n))``
+        advanced in any block sizes reproduces one offline
+        ``ens.run(None, state0, total, step_keys=ens.step_keys(key, 0, total))``
+        bit for bit — the contract :class:`repro.serving.ResidentEnsemble`
+        and :meth:`run_timed`'s ``start_step=`` resumption are built on.
+        (The default :meth:`run` schedule splits ``key`` per step instead and
+        is *not* resumable across chunk boundaries.)
+        """
+        keys = self._per_chain_keys(key)
+        return self._fold_keys_jit(keys, jnp.uint32(start), num_steps=num_steps)
+
+    def run(self, key: jax.Array | None, state: EnsembleState, num_steps: int,
+            *, step_keys: jax.Array | None = None):
         """Advance every chain ``num_steps`` transitions in one XLA program.
 
         Returns ``(state, samples, infos)`` with ``samples`` leaves shaped
         (K, num_steps, ...) and ``infos`` leaves (K, num_steps). ``key`` may
         be one key (split per chain) or a (K,) per-chain key array.
+
+        ``step_keys`` (a (K, num_steps) key array, e.g. from
+        :meth:`step_keys`) bypasses the internal per-chain splitting — the
+        hook for resumable serving runs; ``key`` is then ignored and may be
+        ``None``.
         """
-        keys = self._per_chain_keys(key)
+        if step_keys is None:
+            keys = self._per_chain_keys(key)
+            step_keys = self._split_keys_jit(keys, num_steps=num_steps)
+        else:
+            lead = jnp.asarray(step_keys).shape[:2] if hasattr(step_keys, "shape") else None
+            if lead != (self.num_chains, num_steps):
+                raise ValueError(
+                    f"step_keys must be a ({self.num_chains}, {num_steps}) key "
+                    f"array, got leading shape {lead}"
+                )
         if self.transition is not None:
             runner = self._run_composite_jit
         elif self.stepping == "masked":
@@ -867,17 +959,29 @@ class ChainEnsemble:
         else:
             runner = self._run_jit
         theta, sampler, ctrl, samples, infos = runner(
-            keys, state.theta, state.sampler_state, state.controller, num_steps=num_steps
+            step_keys, state.theta, state.sampler_state, state.controller,
+            num_steps=num_steps
         )
         return EnsembleState(theta, sampler, ctrl), samples, infos
 
     def run_timed(self, key: jax.Array, state: EnsembleState, num_steps: int,
-                  block_every: int = 1):
+                  block_every: int = 1, *, start_step: int = 0, on_block=None):
         """Host-chunked loop recording wall clock, the multi-chain analog of
         :func:`repro.core.chain.run_chain_timed`. Compile time is excluded.
 
+        Steps run on the **resumable** :meth:`step_keys` schedule: global
+        step ``start_step + i`` of chain ``c`` is keyed by
+        ``fold_in(chain_key_c, start_step + i)``, so consecutive calls with
+        advancing ``start_step`` (and the returned state) continue one
+        logical run bit for bit — the incremental-refresh contract of
+        :class:`repro.serving.ResidentEnsemble`. ``on_block(state, samples,
+        infos, steps_done)`` (optional) is invoked after every block inside
+        the timed window — the collect hook a serving loop uses to stream
+        draws out while the next block runs.
+
         Returns (state, dict) with ``transitions_per_sec`` aggregated over
-        chains — the number ``benchmarks/multichain_bench.py`` reports.
+        chains — the number ``benchmarks/multichain_bench.py`` reports —
+        plus ``next_step`` (pass it back as ``start_step`` to resume).
 
         Example::
 
@@ -890,38 +994,38 @@ class ChainEnsemble:
             >>> ens = ChainEnsemble(t, RandomWalk(0.1), num_chains=2)
             >>> state, out = ens.run_timed(jax.random.key(1),
             ...                            ens.init(jnp.zeros(())), 4, block_every=2)
-            >>> out["samples"].shape, out["wall"] > 0
-            ((2, 4), True)
+            >>> out["samples"].shape, out["wall"] > 0, out["next_step"]
+            ((2, 4), True, 4)
         """
         import time
 
         import numpy as np
 
-        keys = self._per_chain_keys(key)
-        # Warm up every program the timed loop dispatches: each block size the
-        # loop will request (num_steps is a static jit argument, so a ragged
-        # final block would otherwise compile inside the timed region) and the
-        # per-chain key-advance splitter.
-        split_all = jax.jit(jax.vmap(lambda k: jax.random.split(k)))
-        jax.block_until_ready(split_all(keys))
+        # All step keys for this window, computed (and warmed) up front so
+        # neither key generation nor a ragged final block compiles inside
+        # the timed region (num_steps is a static jit argument).
+        all_keys = self.step_keys(key, start_step, num_steps)
+        jax.block_until_ready(all_keys)
         block_sizes = {min(block_every, num_steps)}
         if num_steps % block_every:
             block_sizes.add(num_steps % block_every)
         for n in block_sizes:
-            warm, _, _ = self.run(keys, state, n)
+            warm, _, _ = self.run(None, state, n, step_keys=all_keys[:, :n])
             jax.block_until_ready(warm.theta)
         samples_blocks, infos_blocks = [], []
         t0 = time.perf_counter()
         done = 0
         while done < num_steps:
             n = min(block_every, num_steps - done)
-            pairs = split_all(keys)
-            keys, subs = pairs[:, 0], pairs[:, 1]
-            state, samples, infos = self.run(subs, state, n)
+            state, samples, infos = self.run(
+                None, state, n, step_keys=all_keys[:, done:done + n]
+            )
             jax.block_until_ready(state.theta)
             samples_blocks.append(samples)
             infos_blocks.append(infos)
             done += n
+            if on_block is not None:
+                on_block(state, samples, infos, start_step + done)
         wall = time.perf_counter() - t0
         cat = lambda xs: jax.tree.map(lambda *ls: np.concatenate([np.asarray(l) for l in ls], axis=1), *xs)
         return state, {
@@ -929,6 +1033,7 @@ class ChainEnsemble:
             "infos": cat(infos_blocks),
             "wall": wall,
             "transitions_per_sec": self.num_chains * num_steps / max(wall, 1e-12),
+            "next_step": start_step + num_steps,
         }
 
 

@@ -40,14 +40,25 @@ class RandomWalk:
 
     sigma: Any = 0.1
 
-    def __call__(self, key: jax.Array, theta: Params):
+    def __call__(self, key: jax.Array, theta: Params, scale=None):
+        """``scale`` (an optional traced scalar) multiplies ``sigma`` — the
+        hook the adaptive-proposal controller of :mod:`repro.core.schedule`
+        uses to drive per-chain step sizes. ``scale=None`` is the static
+        path and is bit-for-bit identical to the pre-scale kernel."""
         xi = _tree_randn_like(key, theta)
-        if isinstance(self.sigma, (int, float)) or (
-            hasattr(self.sigma, "ndim") and getattr(self.sigma, "ndim", 1) == 0
-        ):
-            theta_p = jax.tree.map(lambda t, n: t + self.sigma * n, theta, xi)
+        sigma = self.sigma
+        scalar_sigma = isinstance(sigma, (int, float)) or (
+            hasattr(sigma, "ndim") and getattr(sigma, "ndim", 1) == 0
+        )
+        if scale is not None:
+            if scalar_sigma:
+                sigma = sigma * scale
+            else:
+                sigma = jax.tree.map(lambda s: s * scale, sigma)
+        if scalar_sigma:
+            theta_p = jax.tree.map(lambda t, n: t + sigma * n, theta, xi)
         else:
-            theta_p = jax.tree.map(lambda t, n, s: t + s * n, theta, xi, self.sigma)
+            theta_p = jax.tree.map(lambda t, n, s: t + s * n, theta, xi, sigma)
         return theta_p, jnp.zeros((), jnp.float32)
 
 

@@ -26,6 +26,12 @@ and re-tunes
     fallback is doing O(N) work anyway) relaxes its tolerance multiplicatively
     to stop earlier; easy chains decay back to the floor — the configured
     ``SubsampledMHConfig.epsilon`` — restoring the user's accuracy target.
+  * optionally (``adapt_proposal=True``, default off) the **proposal
+    sigma**: ``sigma_scale`` moves multiplicatively toward the target
+    acceptance rate from the trailing acceptance EMA, clamped to
+    ``[scale_min, scale_max]``, and is threaded into the proposal's
+    ``scale`` argument by the ensemble. With the flag off nothing is
+    threaded and runs are bit-for-bit the unscaled engine.
 
 Everything is a scalar-per-chain pytree (:class:`ControllerState`) threaded
 through :func:`repro.core.subsampled_mh.subsampled_mh_step` by
@@ -55,6 +61,7 @@ class ControllerState(NamedTuple):
     ema_frac: jax.Array  # f32 trailing mean of n_evaluated / N
     ema_accept: jax.Array  # f32 trailing acceptance rate
     t: jax.Array  # int32 transitions folded in so far
+    sigma_scale: jax.Array = None  # f32 proposal-sigma multiplier (1.0 = base)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +96,21 @@ class ScheduleConfig:
     exhaust_frac: float = 0.9  # n_evaluated/N above this -> relax epsilon
     epsilon_grow: float = 1.25
     epsilon_decay: float = 0.97
+    # -- adaptive proposals (ROADMAP item): drive per-chain proposal sigma
+    # from the trailing acceptance rate toward ``accept_target``. Off by
+    # default; with the flag off the controller is bit-for-bit the
+    # pre-adaptive-proposal controller and no scale is threaded into the
+    # proposal (regression-tested in tests/test_schedule.py). Like the
+    # epsilon/batch controllers above, the gain is constant (adaptation
+    # does not diminish over time), so the adapted chain targets the
+    # posterior only approximately — use it for tuning/serving throughput,
+    # keep it off for strict asymptotic exactness; a diminishing-gain
+    # variant is a ROADMAP follow-on.
+    adapt_proposal: bool = False
+    accept_target: float = 0.234  # classic RW-MH optimal acceptance
+    proposal_gain: float = 0.33  # log-scale gain per transition
+    scale_min: float = 0.1  # sigma_scale clamp (multiples of base sigma)
+    scale_max: float = 10.0
 
     def __post_init__(self):
         if self.batch_buckets is not None:
@@ -98,6 +120,10 @@ class ScheduleConfig:
             object.__setattr__(self, "batch_buckets", b)
         if not 0.0 < self.epsilon_decay <= 1.0 or self.epsilon_grow < 1.0:
             raise ValueError("need 0 < epsilon_decay <= 1 <= epsilon_grow")
+        if not 0.0 < self.scale_min <= 1.0 <= self.scale_max:
+            raise ValueError("need 0 < scale_min <= 1 <= scale_max")
+        if not 0.0 < self.accept_target < 1.0:
+            raise ValueError(f"accept_target must be in (0, 1), got {self.accept_target}")
 
     def buckets_for(self, config, num_sections: int | None = None) -> tuple[int, ...]:
         """The sorted static bucket tuple for a given kernel config."""
@@ -135,6 +161,7 @@ def controller_init(
         ema_frac=jnp.asarray(min(config.batch_size / max(num_sections, 1), 1.0), jnp.float32),
         ema_accept=jnp.asarray(0.5, jnp.float32),
         t=jnp.zeros((), jnp.int32),
+        sigma_scale=jnp.ones((), jnp.float32),
     )
     if num_chains is None:
         return st
@@ -191,6 +218,18 @@ def controller_update(
     if not sched.adapt_epsilon:
         eps = state.epsilon
 
+    sigma_scale = state.sigma_scale
+    if sched.adapt_proposal:
+        # Constant-gain multiplicative move of log(sigma) toward the target
+        # acceptance rate, driven by the trailing acceptance EMA (non-
+        # diminishing — see the ScheduleConfig note on asymptotic exactness).
+        sigma_scale = sigma_scale * jnp.exp(
+            jnp.float32(sched.proposal_gain) * (ema_accept - sched.accept_target)
+        )
+        sigma_scale = jnp.clip(
+            sigma_scale, jnp.float32(sched.scale_min), jnp.float32(sched.scale_max)
+        )
+
     return ControllerState(
         bucket=bucket,
         epsilon=eps,
@@ -198,4 +237,5 @@ def controller_update(
         ema_frac=ema_frac,
         ema_accept=ema_accept,
         t=state.t + 1,
+        sigma_scale=sigma_scale,
     )

@@ -230,6 +230,35 @@ def tail_latency_summary(rounds, percentiles=(50, 90, 99)) -> dict:
     return out
 
 
+def slo_summary(latencies_s, deadlines_s=None, percentiles=(50, 95, 99)) -> dict:
+    """Service-level summary of per-request latencies (seconds).
+
+    The serving-layer counterpart of :func:`tail_latency_summary`: request
+    latencies instead of sequential-test rounds. Returns millisecond
+    percentiles (``p50_ms`` etc.), mean/max, the request count, and — when
+    per-request ``deadlines_s`` are given — the fraction of requests that
+    met their deadline (``deadline_hit_rate``), the SLO number
+    ``launch/serve.py`` reports per request class.
+
+    Example::
+
+        >>> s = slo_summary([0.010, 0.020, 0.030], deadlines_s=[0.025] * 3)
+        >>> round(s["p50_ms"], 1), round(s["deadline_hit_rate"], 2)
+        (20.0, 0.67)
+    """
+    lat = np.asarray(latencies_s, np.float64).ravel()
+    if lat.size == 0:
+        raise ValueError("slo_summary needs at least one request")
+    out = {f"p{p}_ms": float(np.percentile(lat, p) * 1e3) for p in percentiles}
+    out["mean_ms"] = float(lat.mean() * 1e3)
+    out["max_ms"] = float(lat.max() * 1e3)
+    out["count"] = int(lat.size)
+    if deadlines_s is not None:
+        dl = np.broadcast_to(np.asarray(deadlines_s, np.float64).ravel(), lat.shape)
+        out["deadline_hit_rate"] = float(np.mean(lat <= dl))
+    return out
+
+
 def jarque_bera(x: np.ndarray) -> tuple[float, float]:
     """Jarque–Bera normality statistic and asymptotic chi2(2) p-value.
 

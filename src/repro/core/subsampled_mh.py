@@ -75,17 +75,25 @@ def _tree_select(pred: jax.Array, on_true: Params, on_false: Params) -> Params:
 
 
 def propose_and_mu0(
-    key: jax.Array, theta: Params, target: PartitionedTarget, proposal
+    key: jax.Array, theta: Params, target: PartitionedTarget, proposal,
+    prop_scale=None,
 ) -> tuple[Params, jax.Array, jax.Array, jax.Array]:
     """Steps 2–6 of Alg. 3: draw u, propose, evaluate the global section.
 
     Returns ``(theta_prime, mu0, log_u, key_test)`` where ``key_test`` seeds
     the sequential test. Factored out so the masked-continuation ensemble
     stepping reproduces the scanned single-chain kernel bit for bit.
+
+    ``prop_scale`` (a traced scalar, or None) is forwarded to the proposal's
+    ``scale`` argument — the adaptive-proposal hook; ``None`` keeps the
+    two-argument call and is bit-for-bit the pre-scale behavior.
     """
     k_u, k_prop, k_test = jax.random.split(key, 3)
     log_u = jnp.log(jax.random.uniform(k_u, (), jnp.float32, 1e-20, 1.0))
-    theta_p, corr = proposal(k_prop, theta)
+    if prop_scale is None:
+        theta_p, corr = proposal(k_prop, theta)
+    else:
+        theta_p, corr = proposal(k_prop, theta, prop_scale)
     g = target.log_global(theta, theta_p) + corr  # Detach&Regen(global)
     mu0 = (log_u - g) / target.num_sections
     return theta_p, mu0, log_u, k_test
@@ -106,6 +114,7 @@ def subsampled_mh_step(
     draw_bounded_fn=None,
     max_rounds: int | None = None,
     batch_max: int | None = None,
+    prop_scale=None,
 ) -> tuple[Params, Any, SubsampledMHInfo]:
     """One approximate MH transition (Alg. 3). Returns (theta', sampler', info).
 
@@ -136,7 +145,7 @@ def subsampled_mh_step(
         >>> theta.shape, int(info.n_evaluated) <= 200
         ((), True)
     """
-    theta_p, mu0, log_u, k_test = propose_and_mu0(key, theta, target, proposal)
+    theta_p, mu0, log_u, k_test = propose_and_mu0(key, theta, target, proposal, prop_scale)
     eps = config.epsilon if epsilon is None else epsilon
 
     res = sequential_test(
@@ -191,8 +200,8 @@ def make_kernel(
     step(key, theta, sampler_state) -> (theta', sampler_state', info)
 
     With ``scheduled=True`` the step instead has signature
-    ``step(key, theta, sampler_state, epsilon, batch_eff, max_rounds=None)``
-    and accepts the adaptive controller's traced per-chain knobs
+    ``step(key, theta, sampler_state, epsilon, batch_eff, max_rounds=None,
+    prop_scale=None)`` and accepts the adaptive controller's traced per-chain knobs
     (:func:`repro.core.schedule.controller_params`); ``batch_max`` sets the
     static per-round draw shape (the scheduler's largest bucket — without it
     buckets above ``config.batch_size`` could never actually be drawn).
@@ -203,11 +212,12 @@ def make_kernel(
     if scheduled:
         draw_bounded = make_bounded_draw(config.sampler)
 
-        def step(key, theta, sampler_state, epsilon, batch_eff, max_rounds=None):
+        def step(key, theta, sampler_state, epsilon, batch_eff, max_rounds=None,
+                 prop_scale=None):
             return subsampled_mh_step(
                 key, theta, sampler_state, target, proposal, config, reset_fn, draw_fn,
                 epsilon=epsilon, batch_eff=batch_eff, draw_bounded_fn=draw_bounded,
-                max_rounds=max_rounds, batch_max=batch_max,
+                max_rounds=max_rounds, batch_max=batch_max, prop_scale=prop_scale,
             )
 
         return state0, step

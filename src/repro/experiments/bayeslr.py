@@ -154,6 +154,68 @@ def run_posterior_ensemble(
     return np.asarray(samples), diagnostics
 
 
+def make_serving_workload(
+    *,
+    smoke: bool = False,
+    num_chains: int = 8,
+    n_train: int | None = None,
+    d: int | None = None,
+    batch_size: int | None = None,
+    epsilon: float = 0.05,
+    sigma: float = 0.05,
+    stepping: str = "lockstep",
+    schedule=None,
+    seed: int = 0,
+):
+    """The BayesLR posterior as a servable workload (see
+    :mod:`repro.serving.workloads`): the ``logit``-family target behind a
+    :class:`~repro.core.ensemble.ChainEnsemble`, with two request classes —
+
+      * ``predictive``: posterior-predictive P(y=+1 | x) for test rows,
+      * ``vote``: the posterior fraction of draws classifying x as +1
+        (a calibration-style uncertainty signal on the same inputs).
+
+    Query inputs are rows of the held-out test set.
+    """
+    from ..core import ChainEnsemble, RandomWalk, SubsampledMHConfig
+    from ..serving.resident import QuerySpec
+    from ..serving.workloads import ServingWorkload, row_sampler
+
+    n_train = n_train if n_train is not None else (2_000 if smoke else 12_000)
+    d = d if d is not None else (4 if smoke else 20)
+    batch_size = batch_size if batch_size is not None else (100 if smoke else 500)
+    data = synth_mnist_like(
+        jax.random.key(seed), n_train=n_train, n_test=max(512, d * 16), d=d
+    )
+    target = make_target(data.x_train, data.y_train)
+    cfg = SubsampledMHConfig(batch_size=batch_size, epsilon=epsilon, sampler="stream")
+    ens = ChainEnsemble(target, RandomWalk(sigma), num_chains, config=cfg,
+                        stepping=stepping, schedule=schedule)
+    make_queries = row_sampler(np.asarray(data.x_test))
+    specs = {
+        "predictive": QuerySpec(
+            fn=lambda w, xs: jax.nn.sigmoid(xs @ w),
+            aggregate="mean",
+            make_queries=make_queries,
+            name="predictive",
+        ),
+        "vote": QuerySpec(
+            fn=lambda w, xs: (xs @ w > 0).astype(jnp.float32),
+            aggregate="mean",
+            make_queries=make_queries,
+            name="vote",
+        ),
+    }
+    return ServingWorkload(
+        name="bayeslr",
+        ensemble=ens,
+        theta0=jnp.zeros(d),
+        query_specs=specs,
+        default_class="predictive",
+        description=f"Bayesian logistic regression, N={n_train}, D={d}",
+    )
+
+
 def predictive_mean_prob(w_samples: np.ndarray, x_test: np.ndarray) -> np.ndarray:
     """Running posterior-predictive mean P(y=+1|x) per test point: (T, Ntest)."""
     w_samples = np.asarray(w_samples)

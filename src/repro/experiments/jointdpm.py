@@ -370,6 +370,92 @@ def run_posterior_ensemble(
     return state, samples, infos, diagnostics
 
 
+def make_serving_workload(
+    *,
+    smoke: bool = False,
+    num_chains: int = 4,
+    n: int | None = None,
+    cfg: JDPMConfig | None = None,
+    batch_size: int = 100,
+    epsilon: float = 0.2,
+    w_moves: int | None = None,
+    gibbs_frac: float = 0.25,
+    seed: int = 0,
+):
+    """The joint DP mixture as a servable workload: the full Sec-4.2 cycle
+    (alpha-MH + Gibbs-z + dynamic-pool subsampled-MH w-moves) kept resident.
+    The collected draws are the *predictive sufficient state* — expert
+    weights, NIW cluster statistics, and alpha — not the O(N) assignment
+    vector, so the posterior window stays small. Request classes:
+
+      * ``cluster_predictive``: p(y=+1 | x*) under the mixture-of-experts
+        posterior predictive — rows are feature points,
+      * ``k_active``: posterior mean number of active clusters (rows are
+        dummies; a scalar functional per draw).
+    """
+    from ..core import ChainEnsemble
+    from ..inference.niw import predictive_all_clusters
+    from ..serving.resident import QuerySpec
+    from ..serving.workloads import ServingWorkload, row_sampler
+
+    n = n if n is not None else (600 if smoke else 5_000)
+    cfg = cfg or JDPMConfig()
+    w_moves = w_moves if w_moves is not None else (2 if smoke else 8)
+    data = synth(jax.random.key(seed), n=n, n_test=max(256, n // 8))
+    cyc = make_inference_cycle(
+        data, cfg, batch_size=min(batch_size, n), epsilon=epsilon,
+        w_moves=w_moves, gibbs_frac=gibbs_frac,
+    )
+
+    def collect_predictive(state: JDPMState):
+        return {"w": state.w, "alpha": state.alpha, "stats": state.stats}
+
+    ens = ChainEnsemble(num_chains=num_chains, transition=cyc,
+                        collect=collect_predictive)
+    prior = cfg.niw_prior()
+    make_points = row_sampler(np.asarray(data.x_test))
+
+    def cluster_predictive(draw, xs):
+        stats, w = draw["stats"], draw["w"]
+        counts = stats.n
+
+        def one(x):
+            feat = predictive_all_clusters(x, stats, prior)
+            logw = jnp.where(
+                counts > 0.5, jnp.log(jnp.maximum(counts, 1e-12)) + feat, -jnp.inf
+            )
+            resp = jax.nn.softmax(logw)
+            x_aug = jnp.concatenate([x, jnp.ones((1,), x.dtype)])
+            return jnp.sum(resp * jax.nn.sigmoid(w @ x_aug))
+
+        return jax.vmap(one)(xs)
+
+    specs = {
+        "cluster_predictive": QuerySpec(
+            fn=cluster_predictive,
+            aggregate="mean",
+            make_queries=make_points,
+            name="cluster_predictive",
+        ),
+        "k_active": QuerySpec(
+            fn=lambda draw, xs: jnp.full(
+                (xs.shape[0],), jnp.sum(draw["stats"].n > 0.5).astype(jnp.float32)
+            ),
+            aggregate="mean",
+            make_queries=make_points,
+            name="k_active",
+        ),
+    }
+    return ServingWorkload(
+        name="jointdpm",
+        ensemble=ens,
+        theta0=init_state(jax.random.fold_in(jax.random.key(seed), 0), data, cfg),
+        query_specs=specs,
+        default_class="cluster_predictive",
+        description=f"joint DP mixture of logistic experts, N={n}",
+    )
+
+
 # ---------------------------------------------------------------------------
 # Posterior predictive classification
 # ---------------------------------------------------------------------------

@@ -318,6 +318,74 @@ def run_posterior_ensemble(
     return state, samples, infos, diagnostics
 
 
+def make_serving_workload(
+    *,
+    smoke: bool = False,
+    num_chains: int = 4,
+    num_series: int | None = None,
+    length: int | None = None,
+    num_particles: int | None = None,
+    batch_size: int = 100,
+    epsilon: float = 0.05,
+    seed: int = 0,
+):
+    """The stochastic-volatility posterior as a servable workload: the full
+    Sec-4.3 composite cycle (particle Gibbs over paths + subsampled-MH
+    phi/sigma2 moves) kept resident, with request classes
+
+      * ``vol_quantile``: posterior quantiles of the stationary log-vol
+        scale ``sigma / sqrt(1 - phi^2)`` — request rows are quantile
+        levels in (0, 1),
+      * ``phi_mean``: the posterior-mean persistence (rows are dummy
+        levels; every row returns the same scalar functional).
+    """
+    from ..core import ChainEnsemble
+    from ..serving.resident import QuerySpec
+    from ..serving.workloads import ServingWorkload
+
+    num_series = num_series if num_series is not None else (40 if smoke else 200)
+    length = length if length is not None else (6 if smoke else 10)
+    num_particles = num_particles if num_particles is not None else (10 if smoke else 25)
+    data = synth(jax.random.key(seed), num_series=num_series, length=length)
+    cyc = make_inference_cycle(
+        data.obs, batch_size=min(batch_size, num_series * length),
+        epsilon=epsilon, num_particles=num_particles,
+    )
+    ens = ChainEnsemble(num_chains=num_chains, transition=cyc,
+                        collect=_collect_params)
+
+    def stationary_vol(theta):
+        s2 = jnp.clip(theta["sigma2"], 1e-12, None)
+        one_minus = jnp.clip(1.0 - theta["phi"] ** 2, 1e-6, None)
+        return jnp.sqrt(s2 / one_minus)
+
+    def make_levels(qkey, rows: int) -> np.ndarray:
+        return np.asarray(jax.random.uniform(qkey, (rows,), minval=0.05, maxval=0.95))
+
+    specs = {
+        "vol_quantile": QuerySpec(
+            fn=lambda theta, xs: jnp.full(xs.shape, stationary_vol(theta)),
+            aggregate="quantile",
+            make_queries=make_levels,
+            name="vol_quantile",
+        ),
+        "phi_mean": QuerySpec(
+            fn=lambda theta, xs: jnp.full(xs.shape, theta["phi"]),
+            aggregate="mean",
+            make_queries=make_levels,
+            name="phi_mean",
+        ),
+    }
+    return ServingWorkload(
+        name="stochvol",
+        ensemble=ens,
+        theta0=init_theta(data.obs),
+        query_specs=specs,
+        default_class="vol_quantile",
+        description=f"stochastic volatility, {num_series} series x {length}",
+    )
+
+
 def exact_state_loglik(obs: jax.Array, h: jax.Array, params: SVParams) -> jax.Array:
     """Full joint log p(x, h | params): used in tests against brute force."""
     s, t_len = h.shape

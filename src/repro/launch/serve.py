@@ -1,35 +1,254 @@
-"""Production serve launcher: batched posterior-predictive decoding.
+"""Posterior query serving front-end.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-350m --reduced \
-        --batch 8 --prompt-len 64 --gen-len 64
+Serves posterior-functional queries from a pool of **resident ensembles**
+(warm multi-chain sampler state, background refresh, request batching,
+SLO-aware freshness — see :mod:`repro.serving` and docs/ARCHITECTURE.md):
+
+    PYTHONPATH=src python -m repro.launch.serve --workload bayeslr --smoke
+    PYTHONPATH=src python -m repro.launch.serve --workload stochvol \
+        --queries 500 --max-batch 32 --deadline-ms 100
+    PYTHONPATH=src python -m repro.launch.serve --workload bayeslr \
+        --ckpt-dir /tmp/pool  # save on exit; restarts warm from the same dir
+
+Per request class it reports p50/p95/p99 latency, deadline hit rate, and
+snapshot staleness, then (always) cross-checks one served predictive
+against the same functional computed offline from the identical snapshot
+draws. ``--workload lm`` keeps the legacy LM decoding demo (batched
+posterior-sample decoding with ``--arch`` / ``--prompt-len`` /
+``--gen-len``; params restored from ``--ckpt-dir``).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import manager as ckpt
-from repro.configs import ARCHS, reduce_config
-from repro.distributed.sharding import logical_axis_rules
-from repro.models import decode_step, init_params, prefill
-from .mesh import make_mesh_for_devices
+from repro.configs import ARCHS
+
+POSTERIOR_WORKLOADS = ("bayeslr", "stochvol", "jointdpm", "ppl")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen-len", type=int, default=64)
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--workload", default="bayeslr",
+                    choices=POSTERIOR_WORKLOADS + ("lm",),
+                    help="posterior workload to serve (or 'lm' for the "
+                         "legacy decoding demo)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: small model, >=100 queries, parity check")
+    ap.add_argument("--queries", type=int, default=None,
+                    help="number of requests to serve (default: 120 smoke, 400 full)")
+    ap.add_argument("--rows-per-query", type=int, default=8,
+                    help="request rows (test points / quantile levels) per query")
+    ap.add_argument("--chains", type=int, default=None,
+                    help="resident chains K (default: 4 smoke, 8 full)")
+    ap.add_argument("--refresh-steps", type=int, default=None,
+                    help="transitions per refresh block (default: 16 smoke, 64 full)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="posterior draws retained per chain (default: 32 smoke, 128 full)")
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help="requests coalesced into one evaluation")
+    ap.add_argument("--micro-batch", type=int, default=64,
+                    help="request rows per compiled evaluation chunk")
+    ap.add_argument("--deadline-ms", type=float, default=250.0,
+                    help="per-request latency SLO")
+    ap.add_argument("--max-staleness-s", type=float, default=30.0,
+                    help="freshness: oldest admissible snapshot age")
+    ap.add_argument("--min-draws", type=int, default=None,
+                    help="freshness: min cross-chain draws before serving "
+                         "(default: chains * window / 2)")
+    ap.add_argument("--background", action="store_true",
+                    help="refresh on a background thread while serving "
+                         "(default: refresh synchronously when stale)")
     ap.add_argument("--ckpt-dir", default=None,
-                    help="restore params (a posterior sample) from here")
-    ap.add_argument("--model-parallel", type=int, default=1)
-    args = ap.parse_args()
+                    help="posterior pool: restore-if-present + save-on-exit; "
+                         "lm: restore params (a posterior sample)")
+    ap.add_argument("--seed", type=int, default=0)
+    # -- legacy LM decoding flags (only read under --workload lm) ----------
+    lm = ap.add_argument_group("lm decoding demo (--workload lm)")
+    lm.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
+    lm.add_argument("--reduced", action="store_true")
+    lm.add_argument("--batch", type=int, default=8)
+    lm.add_argument("--prompt-len", type=int, default=64)
+    lm.add_argument("--gen-len", type=int, default=64)
+    lm.add_argument("--model-parallel", type=int, default=1)
+    return ap
+
+
+# ---------------------------------------------------------------------------
+# Posterior serving path
+# ---------------------------------------------------------------------------
+
+
+def _offline_reference(workload, spec, snap, xs) -> np.ndarray | None:
+    """Recompute the served functional offline (numpy / per-draw loop) from
+    the *same* snapshot draws — the acceptance cross-check. Returns None when
+    the workload has no independent closed form wired up."""
+    if workload.name in ("bayeslr", "ppl") and spec.name == "predictive":
+        from repro.experiments import bayeslr
+
+        w = np.asarray(jax.tree.leaves(snap.draws)[0])
+        w = w.reshape(-1, w.shape[-1])  # (S, D)
+        return bayeslr.predictive_mean_prob(w, np.asarray(xs))[-1]
+    return None
+
+
+def serve_posterior(args) -> int:
+    from repro.serving import (
+        EnsemblePool,
+        FreshnessPolicy,
+        RequestQueue,
+        ServingConfig,
+    )
+
+    smoke = args.smoke
+    dflt = lambda v, d: d if v is None else v
+    chains = dflt(args.chains, 4 if smoke else 8)
+    refresh_steps = dflt(args.refresh_steps, 16 if smoke else 64)
+    window = dflt(args.window, 32 if smoke else 128)
+    num_queries = dflt(args.queries, 120 if smoke else 400)
+    # --min-draws 0 is meaningful (disable the draw-count freshness floor)
+    min_draws = dflt(args.min_draws, max(chains * window // 2, chains))
+    config = ServingConfig(
+        num_chains=chains,
+        refresh_steps=refresh_steps,
+        window=window,
+        micro_batch=args.micro_batch,
+        max_batch=args.max_batch,
+        freshness=FreshnessPolicy(
+            max_staleness_s=args.max_staleness_s, min_draws=min_draws
+        ),
+        default_deadline_s=args.deadline_ms / 1e3,
+        seed=args.seed,
+    )
+    print(f"pool: workload={args.workload} K={chains} refresh={refresh_steps} "
+          f"window={window} min_draws={min_draws} "
+          f"max_staleness={args.max_staleness_s}s")
+    pool = EnsemblePool(config)
+    pool.add_workload(args.workload, smoke=smoke, seed=args.seed)
+    workload = pool.workload(args.workload)
+    print(f"target: {workload.description}; request classes: "
+          f"{sorted(workload.query_specs)}")
+
+    restored = None
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import latest_step
+
+        if latest_step(args.ckpt_dir) is not None:
+            restored = pool.restore(args.ckpt_dir)
+            print(f"restored warm pool from {args.ckpt_dir} (step {restored})")
+
+    t0 = time.perf_counter()
+    pool.warm()
+    warm_s = time.perf_counter() - t0
+    resident = pool.resident(args.workload)
+    print(f"warm in {warm_s:.1f}s: {resident.steps_done} transitions/chain "
+          f"resident ({chains * resident.steps_done} total)")
+    # Compile each request class's evaluator outside the measured window
+    # (a cold query would otherwise charge XLA compile time to its batch).
+    wkey = jax.random.key(args.seed + 2)
+    for cls in sorted(workload.query_specs):
+        wkey, sub = jax.random.split(wkey)
+        pool.query(args.workload, cls,
+                   workload.query_specs[cls].make_queries(sub, args.rows_per_query))
+    if args.background:
+        pool.start()
+
+    queue = RequestQueue(pool, max_batch=args.max_batch,
+                         default_deadline_s=args.deadline_ms / 1e3)
+    classes = sorted(workload.query_specs)
+    qkey = jax.random.key(args.seed + 1)
+    t0 = time.perf_counter()
+    served = 0
+    # Submit in bursts (1..max_batch) so the batcher actually coalesces.
+    burst = max(2, args.max_batch // 2)
+    for i in range(0, num_queries, burst):
+        take = min(burst, num_queries - i)
+        for j in range(take):
+            cls = classes[(i + j) % len(classes)]
+            qkey, sub = jax.random.split(qkey)
+            xs = workload.query_specs[cls].make_queries(sub, args.rows_per_query)
+            queue.submit(args.workload, cls, xs)
+        served += len(queue.drain())
+    wall = time.perf_counter() - t0
+    report = queue.slo_report()
+
+    print(f"\nserved {served} requests "
+          f"({args.rows_per_query} rows each) in {wall:.2f}s "
+          f"({served / max(wall, 1e-9):.0f} req/s)")
+    for cls, entry in report["classes"].items():
+        if not entry.get("count"):
+            print(f"  {cls:28s} ALL {entry['errors']} requests FAILED")
+            continue
+        print(f"  {cls:28s} p50={entry['p50_ms']:7.2f}ms "
+              f"p95={entry['p95_ms']:7.2f}ms p99={entry['p99_ms']:7.2f}ms "
+              f"deadline_hit={entry['deadline_hit_rate']:.1%} "
+              f"batch~{entry['mean_batch_size']:.1f} "
+              f"staleness~{entry.get('staleness_mean_s', float('nan')):.3f}s")
+    if report["errors"]:
+        print(f"  WARNING: {report['errors']} request(s) failed")
+    snap_report = pool.slo_snapshot_report()[args.workload]
+    print(f"  snapshot: staleness={snap_report['staleness_s']:.3f}s "
+          f"draws={snap_report['num_draws']} "
+          f"steps_done={snap_report['steps_done']} fresh={snap_report['fresh']}")
+
+    # -- parity: a served predictive vs the same functional offline --------
+    spec = workload.query_specs[workload.default_class]
+    qkey, sub = jax.random.split(qkey)
+    xs = spec.make_queries(sub, 16)
+    snap = pool.ensure_fresh(args.workload)
+    served_vals, snap = pool.query(
+        args.workload, workload.default_class, xs, snapshot=snap
+    )
+    ref = _offline_reference(workload, spec, snap, xs)
+    parity = "n/a"
+    if ref is not None:
+        err = float(np.max(np.abs(served_vals - ref)))
+        if not np.allclose(served_vals, ref, rtol=1e-4, atol=1e-5):
+            print(f"PARITY FAIL: served vs offline max|delta|={err:.3g}")
+            return 1
+        parity = f"ok(max|delta|={err:.2g})"
+        print(f"  parity: served {workload.default_class} == offline "
+              f"predictive from the same draws ({parity})")
+
+    if args.ckpt_dir:
+        path = pool.save(args.ckpt_dir)
+        print(f"saved warm pool to {path}")
+    if args.background:
+        pool.stop()
+
+    first = next(
+        (e for e in report["classes"].values() if e.get("count")), None
+    )
+    if first is None or report["errors"]:
+        print(f"SERVE_FAIL workload={args.workload} errors={report['errors']}")
+        return 1
+    print(f"SERVE_OK workload={args.workload} queries={served} "
+          f"p50_ms={first['p50_ms']:.2f} p95_ms={first['p95_ms']:.2f} "
+          f"deadline_hit={first['deadline_hit_rate']:.3f} "
+          f"staleness_s={snap_report['staleness_s']:.3f} parity={parity}")
+    if smoke:
+        assert served >= 100, f"smoke must serve >=100 queries, served {served}"
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Legacy LM decoding demo (--workload lm)
+# ---------------------------------------------------------------------------
+
+
+def serve_lm(args) -> int:
+    from repro.checkpoint import manager as ckpt
+    from repro.configs import reduce_config
+    from repro.distributed.sharding import logical_axis_rules
+    from repro.models import decode_step, init_params, prefill
+
+    from .mesh import make_mesh_for_devices
 
     cfg = ARCHS[args.arch]
     if args.reduced:
@@ -69,6 +288,33 @@ def main() -> None:
           f"({args.batch * args.prompt_len / t_pre:.0f} tok/s)")
     print(f"decode {args.gen_len} steps: {t_dec:.2f}s "
           f"({args.batch * args.gen_len / t_dec:.0f} tok/s)")
+    return 0
+
+
+_LM_ONLY_FLAGS = ("arch", "reduced", "batch", "prompt_len", "gen_len",
+                  "model_parallel")
+
+
+def main(argv=None) -> None:
+    parser = build_parser()
+    args = parser.parse_args(argv)
+    if args.workload != "lm":
+        # Guard legacy invocations: the pre-serving CLI was LM-only and had
+        # no --workload flag, so `serve --arch ... --batch 8` must not be
+        # silently rewired onto the bayeslr posterior service.
+        drifted = [f"--{name.replace('_', '-')}" for name in _LM_ONLY_FLAGS
+                   if getattr(args, name) != parser.get_default(name)]
+        if drifted:
+            parser.error(
+                f"{', '.join(drifted)} only apply to the LM decoding demo; "
+                "add --workload lm (posterior serving ignores them)"
+            )
+    if args.workload == "lm":
+        code = serve_lm(args)
+    else:
+        code = serve_posterior(args)
+    if code:
+        sys.exit(code)
 
 
 if __name__ == "__main__":

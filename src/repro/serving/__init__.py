@@ -1,0 +1,37 @@
+"""Posterior query serving: resident ensembles, batching, SLO freshness.
+
+The serving layer over the multi-chain engine (see docs/ARCHITECTURE.md):
+
+    RequestQueue ─▶ EnsemblePool ─▶ ResidentEnsemble ─▶ Snapshot ─▶ values
+     batching       freshness        warm ChainEnsemble   posterior
+     deadlines      checkpoints      background refresh   window
+
+Front-end: ``python -m repro.launch.serve --workload bayeslr|stochvol|...``.
+"""
+from .pool import EnsemblePool, FreshnessPolicy, ServingConfig, snapshot_ess
+from .queue import Request, RequestQueue
+from .resident import QuerySpec, ResidentEnsemble, Snapshot
+from .workloads import (
+    ServingWorkload,
+    build_serving_workload,
+    make_ppl_workload,
+    register_serving_workload,
+    serving_workloads,
+)
+
+__all__ = [
+    "EnsemblePool",
+    "FreshnessPolicy",
+    "QuerySpec",
+    "Request",
+    "RequestQueue",
+    "ResidentEnsemble",
+    "ServingConfig",
+    "ServingWorkload",
+    "Snapshot",
+    "build_serving_workload",
+    "make_ppl_workload",
+    "register_serving_workload",
+    "serving_workloads",
+    "snapshot_ess",
+]

@@ -1,0 +1,254 @@
+"""Request queue: batching, per-request deadlines, and SLO accounting.
+
+The request path is::
+
+    submit() ──▶ pending queue ──▶ batcher ──▶ EnsemblePool.query ──▶ results
+                                   (group by workload × request class,
+                                    pin ONE fresh snapshot per batch,
+                                    concatenate rows, evaluate once,
+                                    split results back per request)
+
+Batching is **result-transparent**: the resident evaluates row-wise
+functionals at a fixed micro-batch shape, so a request served inside a
+batch returns exactly what it would alone (regression-tested). Every
+request carries a deadline; completion records latency, deadline
+hit/miss, the staleness of the snapshot that served it, and the batch it
+rode in — :meth:`RequestQueue.slo_report` aggregates these into the
+per-class :func:`repro.core.stats.slo_summary` tables ``launch/serve.py``
+prints.
+
+``drain()`` serves synchronously (deterministic; what tests and the smoke
+path use); ``start_worker()`` moves the same loop onto a thread for
+always-on serving next to the pool's background refreshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from ..core.stats import slo_summary
+from .pool import EnsemblePool
+
+_REQUEST_IDS = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One posterior query plus its lifecycle/SLO record."""
+
+    workload: str
+    query_class: str
+    xs: np.ndarray
+    deadline_s: float
+    submitted_at: float
+    id: int = dataclasses.field(default_factory=lambda: next(_REQUEST_IDS))
+    # -- filled at completion --
+    values: np.ndarray | None = None
+    error: str | None = None
+    latency_s: float | None = None
+    deadline_met: bool | None = None
+    staleness_s: float | None = None
+    batch_size: int | None = None
+    done: threading.Event = dataclasses.field(default_factory=threading.Event)
+
+    def result(self, timeout_s: float | None = None) -> np.ndarray:
+        if not self.done.wait(timeout=timeout_s):
+            raise TimeoutError(f"request {self.id} not served in {timeout_s}s")
+        if self.error is not None:
+            raise RuntimeError(f"request {self.id} failed: {self.error}")
+        return self.values
+
+
+class RequestQueue:
+    """Coalesce requests into batched posterior evaluations on a pool."""
+
+    def __init__(
+        self,
+        pool: EnsemblePool,
+        *,
+        max_batch: int | None = None,
+        default_deadline_s: float | None = None,
+    ):
+        self.pool = pool
+        self.max_batch = int(max_batch or pool.config.max_batch)
+        self.default_deadline_s = (
+            pool.config.default_deadline_s
+            if default_deadline_s is None
+            else float(default_deadline_s)
+        )
+        self._pending: list[Request] = []
+        self._completed: list[Request] = []
+        self._lock = threading.Lock()
+        self._arrived = threading.Condition(self._lock)
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(
+        self,
+        workload: str,
+        query_class: str,
+        xs,
+        deadline_s: float | None = None,
+    ) -> Request:
+        req = Request(
+            workload=workload,
+            query_class=query_class,
+            xs=np.asarray(xs),
+            deadline_s=self.default_deadline_s if deadline_s is None else deadline_s,
+            submitted_at=time.monotonic(),
+        )
+        with self._arrived:
+            self._pending.append(req)
+            self._arrived.notify()
+        return req
+
+    @property
+    def pending_count(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    @property
+    def completed(self) -> list[Request]:
+        with self._lock:
+            return list(self._completed)
+
+    # -- batched serving ---------------------------------------------------
+
+    def _take_batch(self) -> list[Request]:
+        """Pop up to ``max_batch`` same-(workload, class) requests, oldest
+        group head first."""
+        with self._lock:
+            if not self._pending:
+                return []
+            head = self._pending[0]
+            group_key = (head.workload, head.query_class)
+            batch, rest = [], []
+            for req in self._pending:
+                if (req.workload, req.query_class) == group_key and len(batch) < self.max_batch:
+                    batch.append(req)
+                else:
+                    rest.append(req)
+            self._pending = rest
+            return batch
+
+    def _serve_batch(self, batch: list[Request]) -> None:
+        name, qclass = batch[0].workload, batch[0].query_class
+        try:
+            # The concatenate is inside the try: one malformed request (e.g.
+            # mismatched row width) must fail its batch, not the serve loop.
+            sizes = [req.xs.shape[0] if req.xs.ndim else 1 for req in batch]
+            xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
+            # One fresh snapshot serves the whole batch (consistent draws).
+            snap = self.pool.ensure_fresh(name)
+            values, snap = self.pool.query(name, qclass, xs, snapshot=snap)
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the server
+            now = time.monotonic()
+            for req in batch:
+                req.error = f"{type(e).__name__}: {e}"
+                req.latency_s = now - req.submitted_at
+                req.deadline_met = False
+                req.batch_size = len(batch)
+                req.done.set()
+            with self._lock:
+                self._completed.extend(batch)
+            return
+        now = time.monotonic()
+        offset = 0
+        for req, size in zip(batch, sizes):
+            req.values = values[offset:offset + size]
+            offset += size
+            req.latency_s = now - req.submitted_at
+            req.deadline_met = req.latency_s <= req.deadline_s
+            req.staleness_s = snap.staleness_s
+            req.batch_size = len(batch)
+            req.done.set()
+        with self._lock:
+            self._completed.extend(batch)
+
+    def drain(self) -> list[Request]:
+        """Serve every pending request (batched) on the calling thread;
+        returns the requests completed by this call, in completion order."""
+        served: list[Request] = []
+        while True:
+            batch = self._take_batch()
+            if not batch:
+                return served
+            self._serve_batch(batch)
+            served.extend(batch)
+
+    # -- background worker -------------------------------------------------
+
+    def start_worker(self, max_wait_s: float = 0.005) -> None:
+        """Serve continuously on a daemon thread. ``max_wait_s`` is how long
+        the batcher lingers for more arrivals once the queue is non-empty —
+        the latency/batching trade."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                with self._arrived:
+                    if not self._pending:
+                        self._arrived.wait(timeout=0.05)
+                        continue
+                if max_wait_s:
+                    time.sleep(max_wait_s)  # let a batch accumulate
+                self.drain()
+
+        self._thread = threading.Thread(target=loop, name="serve-queue", daemon=True)
+        self._thread.start()
+
+    def stop_worker(self, timeout_s: float = 30.0) -> None:
+        thread = self._thread
+        if thread is None:
+            return
+        self._stop.set()
+        with self._arrived:
+            self._arrived.notify_all()
+        thread.join(timeout=timeout_s)
+        self._thread = None
+
+    # -- SLO accounting ----------------------------------------------------
+
+    def slo_report(self) -> dict:
+        """Per-(workload, request-class) latency/deadline/staleness tables
+        over everything completed so far."""
+        with self._lock:
+            done = [r for r in self._completed if r.latency_s is not None]
+        by_class: dict[tuple[str, str], list[Request]] = defaultdict(list)
+        for req in done:
+            by_class[(req.workload, req.query_class)].append(req)
+        report: dict = {"total_requests": len(done), "classes": {}}
+        errors = sum(1 for r in done if r.error is not None)
+        report["errors"] = errors
+        for (wl, qc), reqs in sorted(by_class.items()):
+            # Latency percentiles over *successful* requests only — a batch
+            # that failed fast must not read as low latency — while the
+            # deadline hit rate covers every request via its recorded
+            # deadline_met (failures count as misses).
+            ok = [r for r in reqs if r.error is None]
+            if ok:
+                entry = slo_summary([r.latency_s for r in ok])
+            else:
+                entry = {"count": 0}
+            entry["deadline_hit_rate"] = float(
+                np.mean([bool(r.deadline_met) for r in reqs])
+            )
+            entry["errors"] = len(reqs) - len(ok)
+            staleness = [r.staleness_s for r in ok if r.staleness_s is not None]
+            if staleness:
+                entry["staleness_mean_s"] = float(np.mean(staleness))
+                entry["staleness_max_s"] = float(np.max(staleness))
+            entry["mean_batch_size"] = float(
+                np.mean([r.batch_size or 1 for r in reqs])
+            )
+            report["classes"][f"{wl}.{qc}"] = entry
+        return report

@@ -1,0 +1,394 @@
+"""Resident posterior ensembles: warm sampler state behind a query API.
+
+The paper's pitch is that sublinear per-transition cost makes posterior
+inference cheap enough to sit inside an application loop. This module is
+the serving half of that claim: a :class:`ResidentEnsemble` keeps a
+:class:`repro.core.ensemble.ChainEnsemble` *alive* across requests —
+compiled step functions, per-chain sampler states, and (when scheduled)
+controller state all stay warm — and interleaves
+
+  * **refresh**: advance every chain a block of transitions on the
+    ensemble's resumable :meth:`~repro.core.ensemble.ChainEnsemble.step_keys`
+    schedule, appending the collected draws to a rolling per-chain window.
+    Chunked refreshes reproduce one offline ``run`` of the same ensemble
+    bit for bit (regression-tested in ``tests/test_serving.py``);
+  * **snapshot**: the current cross-chain posterior window plus
+    :func:`repro.core.stats.ensemble_summary` diagnostics and a staleness
+    clock — the unit the freshness policy in :mod:`repro.serving.pool`
+    admits or refuses to serve;
+  * **query**: evaluate a posterior functional (a :class:`QuerySpec`) over
+    the snapshot draws — vmapped over chains × window draws in one jitted
+    program, micro-batched over request rows so arbitrarily large request
+    batches run at a fixed compiled shape.
+
+Background refresh runs on a daemon thread (`start_background`), so
+queries always see *some* recent snapshot instead of waiting on MCMC.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.manager import _flatten_names
+from ..core.ensemble import ChainEnsemble, EnsembleState
+from ..core.stats import ensemble_summary
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class QuerySpec:
+    """One posterior-functional request class.
+
+    ``fn(theta_draw, xs) -> (B,)`` scores a *single* posterior draw on B
+    request rows; the resident vmaps it over every draw in the snapshot and
+    aggregates:
+
+      * ``aggregate="mean"``: the posterior mean of ``fn`` per row — e.g.
+        BayesLR predictive probabilities ``E[sigmoid(x·w)]``;
+      * ``aggregate="quantile"``: per-row posterior quantiles, where
+        ``xs[b]`` is the quantile level for row ``b`` — e.g. stochvol
+        stationary-volatility quantiles (``fn`` then typically broadcasts a
+        scalar per-draw statistic to ``xs.shape``).
+
+    ``make_queries(key, rows) -> xs`` generates representative request
+    inputs (used by the serve front-end, benches, and smoke tests).
+    """
+
+    fn: Callable[[Params, jax.Array], jax.Array]
+    aggregate: str = "mean"  # "mean" | "quantile"
+    make_queries: Callable[[jax.Array, int], np.ndarray] | None = None
+    name: str = ""
+
+    def __post_init__(self):
+        if self.aggregate not in ("mean", "quantile"):
+            raise ValueError(f"unknown aggregate {self.aggregate!r}")
+
+
+class Snapshot(NamedTuple):
+    """An immutable view of a resident ensemble's posterior window."""
+
+    draws: Params  # pytree, leaves (K, W, ...) host arrays
+    num_draws: int  # K * W
+    steps_done: int  # transitions committed per chain since init/restore
+    staleness_s: float  # age of the newest draw at snapshot time
+    summary: dict  # ensemble_summary of the last refresh's infos
+    created_at: float  # time.monotonic() at construction
+
+
+def _summarize_infos(infos) -> dict:
+    """ensemble_summary over plain or composite (dict-keyed) infos."""
+    if infos is None:
+        return {}
+    if hasattr(infos, "accepted"):
+        return ensemble_summary(infos)
+    if isinstance(infos, dict):
+        return {
+            name: ensemble_summary(v)
+            for name, v in infos.items()
+            if hasattr(v, "accepted")
+        }
+    return {}
+
+
+def _window_append(window, block, limit: int):
+    """Append a (K, n, ...) block to the (K, W, ...) host window, keep last
+    ``limit`` draws per chain."""
+    block = jax.tree.map(np.asarray, block)
+    if window is None:
+        merged = block
+    else:
+        merged = jax.tree.map(
+            lambda a, b: np.concatenate([a, b], axis=1), window, block
+        )
+    return jax.tree.map(lambda a: a[:, -limit:], merged)
+
+
+class ResidentEnsemble:
+    """A warm :class:`~repro.core.ensemble.ChainEnsemble` serving queries.
+
+    Thread-safe: refresh (foreground or background) and query/snapshot may
+    interleave; state mutation happens under a lock and snapshots are
+    immutable once taken.
+    """
+
+    def __init__(
+        self,
+        ensemble: ChainEnsemble,
+        theta0: Params,
+        *,
+        key: jax.Array,
+        window: int = 64,
+        refresh_steps: int = 32,
+        micro_batch: int = 64,
+        name: str = "resident",
+        batched_theta0: bool = False,
+    ):
+        if window < 1 or refresh_steps < 1 or micro_batch < 1:
+            raise ValueError("window, refresh_steps, micro_batch must be >= 1")
+        self.ensemble = ensemble
+        self.name = name
+        self.window = int(window)
+        self.refresh_steps = int(refresh_steps)
+        self.micro_batch = int(micro_batch)
+        self._base_key = key
+        self._state: EnsembleState = ensemble.init(theta0, batched=batched_theta0)
+        self._steps_done = 0
+        self._draws = None  # pytree of np arrays, leaves (K, W<=window, ...)
+        self._last_infos = None
+        self._last_refresh: float | None = None
+        # _lock guards the committed state (snapshot/query reads, commits);
+        # _refresh_lock serializes the *mutators* (refresh, load_flat) so the
+        # long MCMC run happens outside _lock and never blocks snapshots.
+        self._lock = threading.RLock()
+        self._refresh_lock = threading.RLock()
+        self._eval_cache: dict[Any, Any] = {}
+        self._flat_cache: tuple[Any, Any] | None = None
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- refresh -----------------------------------------------------------
+
+    @property
+    def steps_done(self) -> int:
+        return self._steps_done
+
+    @property
+    def state(self) -> EnsembleState:
+        return self._state
+
+    def refresh(self, num_steps: int | None = None) -> int:
+        """Advance every chain ``num_steps`` (default ``refresh_steps``)
+        transitions and fold the collected draws into the window.
+
+        Runs on the resumable step-key schedule, so any sequence of refresh
+        calls equals one offline ``ensemble.run`` over the same total steps
+        (same base key) bit for bit.
+        """
+        n = self.refresh_steps if num_steps is None else int(num_steps)
+        if n < 1:
+            raise ValueError(f"refresh needs num_steps >= 1, got {n}")
+        with self._refresh_lock:
+            # Only mutators hold _refresh_lock, so these reads are stable;
+            # the expensive run happens with _lock released and snapshots
+            # keep serving the previous window meanwhile.
+            with self._lock:
+                state, steps_done = self._state, self._steps_done
+            sk = self.ensemble.step_keys(self._base_key, steps_done, n)
+            state, samples, infos = self.ensemble.run(None, state, n, step_keys=sk)
+            jax.block_until_ready(state.theta)
+            draws = _window_append(self._draws, samples, self.window)
+            last_infos = jax.tree.map(np.asarray, infos)
+            with self._lock:
+                self._draws = draws
+                self._last_infos = last_infos
+                self._state = state
+                self._steps_done = steps_done + n
+                self._last_refresh = time.monotonic()
+        return n
+
+    # -- snapshots ---------------------------------------------------------
+
+    def snapshot(self) -> Snapshot:
+        """The current posterior window (empty draws before any refresh)."""
+        with self._lock:
+            # Clock read under the lock: a concurrent background refresh
+            # advancing _last_refresh must not yield negative staleness.
+            now = time.monotonic()
+            draws = self._draws  # host arrays, replaced (never mutated) by refresh
+            staleness = (
+                float("inf") if self._last_refresh is None else now - self._last_refresh
+            )
+            num = 0
+            if draws is not None:
+                lead = jax.tree.leaves(draws)[0].shape
+                num = int(lead[0] * lead[1])
+            return Snapshot(
+                draws=draws,
+                num_draws=num,
+                steps_done=self._steps_done,
+                staleness_s=staleness,
+                summary=_summarize_infos(self._last_infos),
+                created_at=now,
+            )
+
+    # -- queries -----------------------------------------------------------
+
+    def _evaluator(self, spec: QuerySpec):
+        fn = self._eval_cache.get(spec.fn)
+        if fn is None:
+            fn = jax.jit(
+                lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(draws, xs)
+            )
+            self._eval_cache[spec.fn] = fn
+        return fn
+
+    def query(
+        self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
+    ) -> tuple[np.ndarray, Snapshot]:
+        """Evaluate ``spec`` on request rows ``xs`` against a snapshot.
+
+        Returns ``(values (B,), snapshot_used)``. Rows are processed in
+        fixed ``micro_batch``-row chunks (the last chunk padded), so the
+        compiled evaluation shape never depends on the request batch — the
+        property that makes queue batching result-transparent.
+        """
+        snap = snapshot if snapshot is not None else self.snapshot()
+        if snap.draws is None:
+            raise RuntimeError(
+                f"resident {self.name!r} has no draws yet; refresh() first "
+                "(or serve through EnsemblePool, which enforces freshness)"
+            )
+        xs = np.asarray(xs)
+        if xs.ndim == 0:
+            xs = xs[None]
+        if xs.shape[0] == 0:
+            return np.zeros((0,), np.float64), snap
+        # Device-resident flattened draws, cached per snapshot generation so
+        # a batch of queries against one snapshot uploads the window once.
+        gen = (snap.steps_done, snap.num_draws)
+        cached = self._flat_cache
+        if cached is not None and cached[0] == gen:
+            flat = cached[1]
+        else:
+            flat = jax.tree.map(
+                lambda a: jnp.asarray(a.reshape((-1,) + a.shape[2:])), snap.draws
+            )  # (S, ...) with S = K * W
+            self._flat_cache = (gen, flat)
+        evaluator = self._evaluator(spec)
+        b, mb = xs.shape[0], self.micro_batch
+        vals = []
+        for start in range(0, b, mb):
+            chunk = xs[start:start + mb]
+            pad = mb - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate([chunk, np.repeat(chunk[-1:], pad, axis=0)])
+            v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (S, mb)
+            vals.append(v[:, : mb - pad] if pad else v)
+        per_draw = np.concatenate(vals, axis=1)  # (S, B)
+        if spec.aggregate == "mean":
+            out = per_draw.mean(axis=0)
+        else:  # quantile: xs[b] is the level for row b
+            levels = np.clip(np.asarray(xs, np.float64).reshape(b, -1)[:, 0], 0.0, 1.0)
+            out = np.array(
+                [np.quantile(per_draw[:, i], levels[i]) for i in range(b)]
+            )
+        return out, snap
+
+    # -- background refresh ------------------------------------------------
+
+    def start_background(self, interval_s: float = 0.0) -> None:
+        """Refresh continuously (or every ``interval_s``) on a daemon thread."""
+        with self._lock:
+            if self._thread is not None:
+                return
+            self._stop.clear()
+
+            def loop():
+                while not self._stop.is_set():
+                    self.refresh()
+                    if interval_s:
+                        self._stop.wait(interval_s)
+
+            self._thread = threading.Thread(
+                target=loop, name=f"refresh-{self.name}", daemon=True
+            )
+            self._thread.start()
+
+    def stop_background(self, timeout_s: float = 30.0) -> None:
+        thread = self._thread
+        if thread is None:
+            return
+        self._stop.set()
+        thread.join(timeout=timeout_s)
+        self._thread = None
+
+    # -- persistence -------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Host pytree for :mod:`repro.checkpoint.manager` (pure arrays)."""
+        with self._lock:
+            out = {
+                "key_data": np.asarray(jax.random.key_data(self._base_key)),
+                "steps_done": np.asarray(self._steps_done, np.int64),
+                "theta": jax.tree.map(np.asarray, self._state.theta),
+                "sampler": jax.tree.map(np.asarray, self._state.sampler_state),
+            }
+            if self._state.controller is not None:
+                out["controller"] = jax.tree.map(np.asarray, self._state.controller)
+            if self._draws is not None:
+                out["draws"] = self._draws
+            return out
+
+    def load_flat(self, flat: dict) -> None:
+        """Restore from the flattened-leaf dict a checkpoint ``restore``
+        (without target) yields for this resident's subtree. Rebuilds the
+        pytree structure from this resident's own (freshly-initialized)
+        state, so only a pool with the same configuration can restore."""
+        with self._refresh_lock, self._lock:
+            # 0 placeholders keep key_data/steps_done as pytree *leaves*
+            # (None would vanish from jax.tree.flatten and desync the names).
+            core = {
+                "key_data": 0,
+                "steps_done": 0,
+                "theta": self._state.theta,
+                "sampler": self._state.sampler_state,
+            }
+            if self._state.controller is not None:
+                core["controller"] = self._state.controller
+            names = _flatten_names(core)
+            missing = [n for n in names if n not in flat]
+            if missing:
+                raise KeyError(
+                    f"checkpoint is missing leaves for resident "
+                    f"{self.name!r}: {missing[:5]}"
+                )
+            leaves = [flat[n] for n in names]
+            _, treedef = jax.tree.flatten(core)
+            core = jax.tree.unflatten(treedef, leaves)
+            self._base_key = jax.random.wrap_key_data(
+                jnp.asarray(core["key_data"])
+            )
+            self._steps_done = int(core["steps_done"])
+            def put_leaf(a, like):
+                a = np.asarray(a)
+                want = getattr(like, "shape", None)
+                if want is not None and a.shape != tuple(want):
+                    raise ValueError(
+                        f"checkpoint leaf shape {a.shape} != resident shape "
+                        f"{tuple(want)} for {self.name!r} — the pool must be "
+                        "configured (num_chains, workload sizes, schedule) "
+                        "exactly as when it was saved"
+                    )
+                return jnp.asarray(a, getattr(like, "dtype", None))
+
+            put = lambda tree, like: jax.tree.map(put_leaf, tree, like)
+            self._state = EnsembleState(
+                put(core["theta"], self._state.theta),
+                put(core["sampler"], self._state.sampler_state),
+                None
+                if self._state.controller is None
+                else put(core["controller"], self._state.controller),
+            )
+            draw_keys = [k for k in flat if k == "draws" or k.startswith("draws__")]
+            if draw_keys:
+                tmpl = jax.eval_shape(
+                    jax.vmap(self.ensemble.collect or (lambda t: t)),
+                    self._state.theta,
+                )
+                dnames = _flatten_names({"draws": tmpl})
+                leaves = [np.asarray(flat[n]) for n in dnames]
+                _, dtreedef = jax.tree.flatten({"draws": tmpl})
+                self._draws = jax.tree.unflatten(dtreedef, leaves)["draws"]
+            self._last_infos = None
+            self._last_refresh = None  # unknown age: freshness forces a refresh
+            # The restored window replaces whatever was resident; a stale
+            # device-side cache could otherwise collide on the
+            # (steps_done, num_draws) generation key and serve old draws.
+            self._flat_cache = None

@@ -311,3 +311,112 @@ def test_tail_latency_summary_shapes():
     assert t["edges"][0] == 1 and len(t["edges"]) == len(t["hist"])
     with pytest.raises(ValueError):
         tail_latency_summary(np.empty((0,)))
+
+
+# ---------------------------------------------------------------------------
+# Adaptive proposals (ScheduleConfig.adapt_proposal)
+# ---------------------------------------------------------------------------
+
+
+def test_adapt_proposal_flag_off_is_inert_and_bit_for_bit(gaussian_target_factory):
+    """Regression for the satellite contract: with adapt_proposal=False
+    (default) the new proposal knobs must not leak into the run — samples,
+    infos, and controller trajectories are bitwise identical whatever the
+    proposal-adaptation hyperparameters are set to."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    K, T = 3, 60
+    keys = jax.random.split(jax.random.key(11), K)
+    base = ScheduleConfig()
+    weird = ScheduleConfig(accept_target=0.9, proposal_gain=7.0, scale_max=5.0)
+    assert not base.adapt_proposal and not weird.adapt_proposal
+    runs = []
+    for sched in (base, weird):
+        for stepping in ("lockstep", "masked"):
+            ens = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG,
+                                stepping=stepping, schedule=sched)
+            st, s, i = ens.run(keys, ens.init(jnp.zeros(())), T)
+            runs.append((stepping, st, s, i))
+    by_step = {}
+    for stepping, st, s, i in runs:
+        if stepping in by_step:
+            st0, s0, i0 = by_step[stepping]
+            np.testing.assert_array_equal(np.asarray(s0), np.asarray(s))
+            np.testing.assert_array_equal(np.asarray(i0.accepted),
+                                          np.asarray(i.accepted))
+            np.testing.assert_array_equal(np.asarray(st0.controller.sigma_scale),
+                                          np.asarray(st.controller.sigma_scale))
+        else:
+            by_step[stepping] = (st, s, i)
+    # and the scale itself never moves off 1.0 with the flag off
+    for stepping, st, _, _ in runs:
+        np.testing.assert_array_equal(
+            np.asarray(st.controller.sigma_scale), np.ones(K, np.float32)
+        )
+
+
+def test_adapt_proposal_gain_zero_matches_flag_off(gaussian_target_factory):
+    """gain=0 keeps sigma_scale pinned at 1.0; threading a unit scale through
+    the proposal must reproduce the unscaled run (allclose: the extra
+    multiply can change XLA fusion, so last-ulp only)."""
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+    K, T = 3, 50
+    keys = jax.random.split(jax.random.key(5), K)
+    off = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG,
+                        stepping="masked", schedule=ScheduleConfig())
+    on0 = ChainEnsemble(target, RandomWalk(0.05), K, config=CFG,
+                        stepping="masked",
+                        schedule=ScheduleConfig(adapt_proposal=True,
+                                                proposal_gain=0.0))
+    _, s_off, i_off = off.run(keys, off.init(jnp.zeros(())), T)
+    st_on, s_on, i_on = on0.run(keys, on0.init(jnp.zeros(())), T)
+    np.testing.assert_allclose(np.asarray(s_off), np.asarray(s_on),
+                               rtol=2e-6, atol=1e-7)
+    np.testing.assert_array_equal(
+        np.asarray(st_on.controller.sigma_scale), np.ones(K, np.float32)
+    )
+
+
+def test_adapt_proposal_grows_scale_under_high_acceptance(gaussian_target_factory):
+    """A too-small sigma accepts nearly everything; the controller must push
+    sigma_scale up (and clamp it at scale_max)."""
+    target, pm, _ = gaussian_target_factory(n=600, seed=1)
+    sched = ScheduleConfig(adapt_proposal=True, proposal_gain=1.0, scale_max=4.0)
+    ens = ChainEnsemble(target, RandomWalk(1e-4), 3, config=CFG,
+                        stepping="masked", schedule=sched)
+    state, _, infos = ens.run(jax.random.key(9), ens.init(jnp.zeros(()) + pm), 120)
+    scale = np.asarray(state.controller.sigma_scale)
+    assert np.all(scale > 1.5), scale
+    assert np.all(scale <= 4.0 + 1e-6), scale
+    assert np.asarray(infos.accepted, np.float64).mean() > 0.5
+
+
+def test_adapt_proposal_shrinks_scale_under_rejection(gaussian_target_factory):
+    """A huge sigma rejects nearly everything; the scale must decay toward
+    scale_min in every stepping mode that threads the controller."""
+    target, pm, _ = gaussian_target_factory(n=600, seed=1)
+    sched = ScheduleConfig(adapt_proposal=True, proposal_gain=1.0, scale_min=0.25)
+    for stepping in ("lockstep", "masked"):
+        ens = ChainEnsemble(target, RandomWalk(50.0), 2, config=CFG,
+                            stepping=stepping, schedule=sched)
+        state, _, _ = ens.run(jax.random.key(4), ens.init(jnp.zeros(()) + pm), 150)
+        scale = np.asarray(state.controller.sigma_scale)
+        assert np.all(scale < 0.9), (stepping, scale)
+        assert np.all(scale >= 0.25 - 1e-6), (stepping, scale)
+
+
+def test_adapt_proposal_requires_scale_aware_proposal(gaussian_target_factory):
+    target, _, _ = gaussian_target_factory(n=600, seed=1)
+
+    def rigid_proposal(key, theta):
+        return theta, jnp.zeros((), jnp.float32)
+
+    with pytest.raises(ValueError, match="scale"):
+        ChainEnsemble(target, rigid_proposal, 2, config=CFG,
+                      schedule=ScheduleConfig(adapt_proposal=True))
+
+
+def test_adapt_proposal_schedule_config_validation():
+    with pytest.raises(ValueError, match="scale_min"):
+        ScheduleConfig(scale_min=0.0)
+    with pytest.raises(ValueError, match="accept_target"):
+        ScheduleConfig(accept_target=1.5)

@@ -1,0 +1,383 @@
+"""Serving subsystem: resident refresh semantics, batching transparency,
+freshness enforcement, and warm checkpoint round-trips."""
+import dataclasses
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ChainEnsemble,
+    RandomWalk,
+    ScheduleConfig,
+    SubsampledMHConfig,
+)
+from repro.serving import (
+    EnsemblePool,
+    FreshnessPolicy,
+    QuerySpec,
+    RequestQueue,
+    ResidentEnsemble,
+    ServingConfig,
+    ServingWorkload,
+    build_serving_workload,
+    serving_workloads,
+)
+
+
+def _tiny_pool(max_batch=4, min_draws=16, max_staleness_s=60.0, window=16,
+               refresh_steps=8, num_chains=2, **freshness_kw):
+    cfg = ServingConfig(
+        num_chains=num_chains,
+        refresh_steps=refresh_steps,
+        window=window,
+        micro_batch=8,
+        max_batch=max_batch,
+        freshness=FreshnessPolicy(
+            max_staleness_s=max_staleness_s, min_draws=min_draws, **freshness_kw
+        ),
+        seed=0,
+    )
+    pool = EnsemblePool(cfg)
+    pool.add_workload("bayeslr", smoke=True, n_train=400, d=3, batch_size=50)
+    return pool
+
+
+@pytest.fixture(scope="module")
+def warm_pool():
+    pool = _tiny_pool()
+    pool.warm()
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# Resident refresh == offline run (the resumable step-key contract)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"stepping": "masked"},
+    {"stepping": "masked", "schedule": ScheduleConfig()},
+])
+def test_resident_refresh_matches_offline_run(kw):
+    x = 0.5 + jax.random.normal(jax.random.key(0), (200,))
+    from repro.core import from_iid_loglik
+
+    target = from_iid_loglik(lambda th: -0.5 * th**2,
+                             lambda th, idx: -0.5 * (x[idx] - th) ** 2, None, 200)
+    ens = ChainEnsemble(target, RandomWalk(0.1), 3,
+                        config=SubsampledMHConfig(batch_size=50, epsilon=0.05), **kw)
+    key = jax.random.key(7)
+    resident = ResidentEnsemble(ens, jnp.zeros(()), key=key, window=32,
+                                refresh_steps=5)
+    resident.refresh()       # 5
+    resident.refresh(4)      # 9
+    resident.refresh(3)      # 12
+    offline_state, offline_samples, _ = ens.run(
+        None, ens.init(jnp.zeros(())), 12, step_keys=ens.step_keys(key, 0, 12)
+    )
+    snap = resident.snapshot()
+    np.testing.assert_array_equal(np.asarray(snap.draws),
+                                  np.asarray(offline_samples))
+    np.testing.assert_array_equal(np.asarray(resident.state.theta),
+                                  np.asarray(offline_state.theta))
+    assert snap.steps_done == 12 and snap.num_draws == 36
+
+
+def test_run_timed_resumption_matches_one_shot():
+    x = jax.random.normal(jax.random.key(1), (150,))
+    from repro.core import from_iid_loglik
+
+    target = from_iid_loglik(lambda th: -0.5 * th**2,
+                             lambda th, idx: -0.5 * (x[idx] - th) ** 2, None, 150)
+    ens = ChainEnsemble(target, RandomWalk(0.1), 2,
+                        config=SubsampledMHConfig(batch_size=30, epsilon=0.05))
+    key = jax.random.key(3)
+    s0 = ens.init(jnp.zeros(()))
+    _, one_shot, _ = ens.run(None, s0, 10, step_keys=ens.step_keys(key, 0, 10))
+    state, out1 = ens.run_timed(key, s0, 6, block_every=4)
+    assert out1["next_step"] == 6
+    _, out2 = ens.run_timed(key, state, 4, block_every=4,
+                            start_step=out1["next_step"])
+    np.testing.assert_array_equal(
+        np.concatenate([out1["samples"], out2["samples"]], axis=1),
+        np.asarray(one_shot),
+    )
+
+
+def test_run_timed_on_block_hook_streams_every_block():
+    x = jax.random.normal(jax.random.key(2), (100,))
+    from repro.core import from_iid_loglik
+
+    target = from_iid_loglik(lambda th: -0.5 * th**2,
+                             lambda th, idx: -0.5 * (x[idx] - th) ** 2, None, 100)
+    ens = ChainEnsemble(target, RandomWalk(0.1), 2,
+                        config=SubsampledMHConfig(batch_size=25, epsilon=0.05))
+    seen = []
+    ens.run_timed(jax.random.key(4), ens.init(jnp.zeros(())), 7, block_every=3,
+                  on_block=lambda state, samples, infos, done: seen.append(
+                      (done, np.asarray(samples).shape[1])))
+    assert seen == [(3, 3), (6, 3), (7, 1)]
+
+
+# ---------------------------------------------------------------------------
+# Queue batching is result-transparent
+# ---------------------------------------------------------------------------
+
+
+def test_queue_batching_preserves_per_request_results(warm_pool):
+    wl = warm_pool.workload("bayeslr")
+    spec = wl.query_specs["predictive"]
+    requests_xs = [spec.make_queries(jax.random.key(i), 3 + i) for i in range(5)]
+
+    queue = RequestQueue(warm_pool, max_batch=5)
+    reqs = [queue.submit("bayeslr", "predictive", xs) for xs in requests_xs]
+    queue.drain()
+    assert all(r.batch_size == 5 for r in reqs)
+
+    snap = warm_pool.resident("bayeslr").snapshot()
+    for req, xs in zip(reqs, requests_xs):
+        solo, _ = warm_pool.query("bayeslr", "predictive", xs, snapshot=snap)
+        np.testing.assert_allclose(req.values, solo, rtol=0, atol=0)
+        assert req.deadline_met is not None and req.latency_s >= 0.0
+
+
+def test_queue_groups_by_request_class(warm_pool):
+    queue = RequestQueue(warm_pool, max_batch=8)
+    wl = warm_pool.workload("bayeslr")
+    for i in range(4):
+        cls = "predictive" if i % 2 == 0 else "vote"
+        queue.submit("bayeslr", cls,
+                     wl.query_specs[cls].make_queries(jax.random.key(i), 2))
+    served = queue.drain()
+    assert len(served) == 4
+    # same-class requests rode together; classes were not mixed in a batch
+    assert all(r.batch_size == 2 for r in served)
+    report = queue.slo_report()
+    assert set(report["classes"]) == {"bayeslr.predictive", "bayeslr.vote"}
+    for entry in report["classes"].values():
+        assert {"p50_ms", "p95_ms", "p99_ms", "deadline_hit_rate"} <= set(entry)
+
+
+def test_queue_worker_thread_serves(warm_pool):
+    queue = RequestQueue(warm_pool, max_batch=4)
+    queue.start_worker(max_wait_s=0.0)
+    try:
+        wl = warm_pool.workload("bayeslr")
+        req = queue.submit(
+            "bayeslr", "predictive",
+            wl.query_specs["predictive"].make_queries(jax.random.key(0), 4),
+        )
+        values = req.result(timeout_s=30.0)
+        assert values.shape == (4,)
+    finally:
+        queue.stop_worker()
+
+
+# ---------------------------------------------------------------------------
+# Freshness policy
+# ---------------------------------------------------------------------------
+
+
+def test_freshness_min_draws_forces_initial_refreshes():
+    pool = _tiny_pool(min_draws=32, refresh_steps=4, window=16)
+    resident = pool.resident("bayeslr")
+    assert resident.steps_done == 0
+    snap = pool.ensure_fresh("bayeslr")
+    # 2 chains * 16-draw window: needs >= 16 steps of 4-step refreshes
+    assert snap.num_draws >= 32 and resident.steps_done >= 16
+
+
+def test_freshness_staleness_triggers_refresh():
+    pool = _tiny_pool(min_draws=8, max_staleness_s=0.2)
+    pool.resident("bayeslr").refresh()
+    before = pool.resident("bayeslr").steps_done
+    time.sleep(0.5)  # let the snapshot age past the staleness bound
+    pool.query("bayeslr", "predictive",
+               pool.workload("bayeslr").query_specs["predictive"].make_queries(
+                   jax.random.key(0), 2))
+    assert pool.resident("bayeslr").steps_done > before
+
+
+def test_freshness_unreachable_raises():
+    pool = _tiny_pool(min_draws=10**9)
+    # tiny refresh bound so the test is fast
+    pool.config = dataclasses.replace(pool.config, max_refreshes_per_query=2)
+    with pytest.raises(RuntimeError, match="freshness unreachable"):
+        pool.ensure_fresh("bayeslr")
+
+
+def test_stale_reason_reporting():
+    policy = FreshnessPolicy(max_staleness_s=10.0, min_draws=4)
+    pool = _tiny_pool(min_draws=4)
+    resident = pool.resident("bayeslr")
+    assert policy.stale_reason(resident.snapshot()) == "no draws yet"
+    resident.refresh()
+    assert policy.stale_reason(resident.snapshot()) is None
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip restores a warm pool
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_restores_warm_pool(tmp_path):
+    pool = _tiny_pool()
+    pool.warm()
+    r1 = pool.resident("bayeslr")
+    pool.save(str(tmp_path))
+
+    pool2 = _tiny_pool()
+    step = pool2.restore(str(tmp_path))
+    r2 = pool2.resident("bayeslr")
+    assert step == r1.steps_done == r2.steps_done
+    np.testing.assert_array_equal(np.asarray(r1.state.theta),
+                                  np.asarray(r2.state.theta))
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        r1.state.sampler_state, r2.state.sampler_state,
+    )
+    np.testing.assert_array_equal(np.asarray(r1.snapshot().draws),
+                                  np.asarray(r2.snapshot().draws))
+    # restored pool is *warm*: its next refresh continues the original
+    # key schedule bit for bit
+    r1.refresh(4)
+    r2.refresh(4)
+    np.testing.assert_array_equal(np.asarray(r1.state.theta),
+                                  np.asarray(r2.state.theta))
+    np.testing.assert_array_equal(np.asarray(r1.snapshot().draws),
+                                  np.asarray(r2.snapshot().draws))
+
+
+def test_restore_rejects_missing_resident(tmp_path):
+    pool = _tiny_pool()
+    pool.warm()
+    pool.save(str(tmp_path))
+    other = EnsemblePool(ServingConfig(num_chains=2, refresh_steps=4, window=8))
+    other.add_workload("ppl", smoke=True, n=100)
+    with pytest.raises(KeyError, match="no state for resident"):
+        other.restore(str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# Workload registry + the other paper workloads
+# ---------------------------------------------------------------------------
+
+
+def test_registry_lists_all_workloads():
+    assert {"bayeslr", "stochvol", "jointdpm", "ppl"} <= set(serving_workloads())
+    with pytest.raises(KeyError, match="unknown serving workload"):
+        build_serving_workload("nope")
+
+
+def test_ppl_workload_serves_predictives():
+    wl = build_serving_workload("ppl", smoke=True, num_chains=2, n=120)
+    resident = ResidentEnsemble(wl.ensemble, wl.theta0, key=jax.random.key(0),
+                                window=8, refresh_steps=8, micro_batch=4)
+    resident.refresh()
+    xs = wl.query_specs["predictive"].make_queries(jax.random.key(1), 6)
+    values, snap = resident.query(wl.query_specs["predictive"], xs)
+    assert values.shape == (6,)
+    assert np.all((values > 0.0) & (values < 1.0))
+    assert snap.num_draws == 16
+
+
+@pytest.mark.slow
+def test_stochvol_workload_quantile_queries():
+    wl = build_serving_workload("stochvol", smoke=True, num_chains=2,
+                                num_series=20, length=4, num_particles=5)
+    resident = ResidentEnsemble(wl.ensemble, wl.theta0, key=jax.random.key(0),
+                                window=8, refresh_steps=8, micro_batch=4)
+    resident.refresh()
+    levels = np.asarray([0.25, 0.5, 0.75])
+    values, _ = resident.query(wl.query_specs["vol_quantile"], levels)
+    assert values.shape == (3,)
+    assert values[0] <= values[1] <= values[2]  # quantiles are monotone
+    assert np.all(values > 0)
+
+
+@pytest.mark.slow
+def test_jointdpm_workload_cluster_predictives():
+    wl = build_serving_workload("jointdpm", smoke=True, num_chains=2, n=200)
+    resident = ResidentEnsemble(wl.ensemble, wl.theta0, key=jax.random.key(0),
+                                window=4, refresh_steps=4, micro_batch=4)
+    resident.refresh()
+    xs = wl.query_specs["cluster_predictive"].make_queries(jax.random.key(1), 5)
+    values, _ = resident.query(wl.query_specs["cluster_predictive"], xs)
+    assert values.shape == (5,)
+    assert np.all((values >= 0.0) & (values <= 1.0))
+    k_active, _ = resident.query(wl.query_specs["k_active"], xs)
+    assert np.all(k_active >= 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Resident background refresh + micro-batching
+# ---------------------------------------------------------------------------
+
+
+def test_background_refresh_advances_and_stops(warm_pool):
+    # dedicated pool: don't mutate the shared fixture's refresh cadence
+    pool = _tiny_pool(refresh_steps=4, window=8, min_draws=4)
+    resident = pool.resident("bayeslr")
+    resident.start_background(interval_s=0.001)
+    deadline = time.monotonic() + 30.0
+    while resident.steps_done < 8 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    resident.stop_background()
+    assert resident.steps_done >= 8
+    after = resident.steps_done
+    time.sleep(0.05)
+    assert resident.steps_done == after  # actually stopped
+
+
+def test_micro_batching_is_invisible_to_results(warm_pool):
+    wl = warm_pool.workload("bayeslr")
+    spec = wl.query_specs["predictive"]
+    xs = spec.make_queries(jax.random.key(5), 13)  # not a micro_batch multiple
+    snap = warm_pool.resident("bayeslr").snapshot()
+    whole, _ = warm_pool.query("bayeslr", "predictive", xs, snapshot=snap)
+    parts = [
+        warm_pool.query("bayeslr", "predictive", xs[i:i + 4], snapshot=snap)[0]
+        for i in range(0, 13, 4)
+    ]
+    np.testing.assert_allclose(whole, np.concatenate(parts), rtol=0, atol=0)
+
+
+def test_zero_row_request_is_harmless_in_a_batch(warm_pool):
+    """An empty request must return an empty result without failing the
+    healthy requests coalesced into the same batch."""
+    wl = warm_pool.workload("bayeslr")
+    spec = wl.query_specs["predictive"]
+    queue = RequestQueue(warm_pool, max_batch=3)
+    healthy1 = queue.submit("bayeslr", "predictive",
+                            spec.make_queries(jax.random.key(0), 3))
+    empty = queue.submit("bayeslr", "predictive", np.empty((0, 3)))
+    healthy2 = queue.submit("bayeslr", "predictive",
+                            spec.make_queries(jax.random.key(1), 2))
+    queue.drain()
+    assert empty.error is None and empty.values.shape == (0,)
+    assert healthy1.error is None and healthy1.values.shape == (3,)
+    assert healthy2.error is None and healthy2.values.shape == (2,)
+
+
+def test_malformed_request_fails_its_batch_not_the_server(warm_pool):
+    queue = RequestQueue(warm_pool, max_batch=4)
+    bad = queue.submit("bayeslr", "predictive", np.zeros((2, 99)))  # wrong width
+    queue.drain()  # must not raise out of the serve loop
+    assert bad.error is not None and bad.deadline_met is False
+    report = queue.slo_report()
+    entry = report["classes"]["bayeslr.predictive"]
+    assert entry["errors"] == 1 and entry["deadline_hit_rate"] == 0.0
+    assert "p50_ms" not in entry  # failures don't fabricate latency stats
+
+
+def test_query_before_refresh_raises():
+    wl = build_serving_workload("bayeslr", smoke=True, n_train=200, d=3,
+                                num_chains=2)
+    resident = ResidentEnsemble(wl.ensemble, wl.theta0, key=jax.random.key(0))
+    with pytest.raises(RuntimeError, match="no draws yet"):
+        resident.query(wl.query_specs["predictive"], np.zeros((2, 3)))
