@@ -15,12 +15,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,fig6,fig9,kernels,roofline,"
-                         "multichain,serving")
+                         "multichain,serving,fleet")
     args = ap.parse_args()
     fast = not args.full
 
     from . import fig4_bayeslr, fig5_sublinear, fig6_jointdpm, fig9_sv
-    from . import kernels_bench, multichain_bench, roofline, serving_bench
+    from . import fleet_bench, kernels_bench, multichain_bench, roofline
+    from . import serving_bench
 
     benches = {
         "fig5": fig5_sublinear,
@@ -31,6 +32,7 @@ def main() -> None:
         "roofline": roofline,
         "multichain": multichain_bench,
         "serving": serving_bench,
+        "fleet": fleet_bench,
     }
     selected = args.only.split(",") if args.only else list(benches)
 

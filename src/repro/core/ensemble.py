@@ -14,8 +14,12 @@ lifts the single-chain kernels in this package over a leading chain axis:
     seeded with key k, produces the same trajectory as a sequential
     :func:`repro.core.chain.run_chain` call with that key,
   * an optional ``shard_map`` fan-out over a chain mesh axis spreads the
-    ensemble across devices (see :mod:`repro.distributed.sharding` for the
-    data-axis counterpart); on one device it is skipped entirely.
+    ensemble across devices; a 2-d ``shard=("chains", "data")`` mesh
+    additionally shards each sequential-test round's (K, m) mini-batch over
+    the data axis through the logical-axis rules of
+    :mod:`repro.distributed.sharding` (the per-round deltas are computed on
+    device slices, then re-replicated before the test statistics reduce, so
+    sharded runs stay bit-for-bit). On one device both are skipped entirely.
 
 Two stepping modes control how the K sequential tests share the vmapped row:
 
@@ -68,11 +72,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from ..distributed.sharding import lc, logical_axis_rules
 from .composite import CycleOp, SubsampledMHOp, SweepOp, init_cycle_samplers
 from .mh import mh_step
 from .schedule import ScheduleConfig, controller_init, controller_params, controller_update
@@ -131,6 +137,28 @@ def _scatter_at(buf: jax.Array, pos: jax.Array, val: jax.Array, do: jax.Array) -
     cur = jax.lax.dynamic_index_in_dim(buf, pos, axis=0, keepdims=False)
     new = jnp.where(do, val, cur)
     return jax.lax.dynamic_update_index_in_dim(buf, new, pos, 0)
+
+
+def _lc_chains(tree: Params) -> Params:
+    """Constrain every (K, ...) leaf to the mesh chain axis (no-op without an
+    active :func:`repro.distributed.sharding.logical_axis_rules` context)."""
+    return jax.tree.map(
+        lambda l: lc(l, ("ensemble_chains",) + (None,) * (l.ndim - 1)), tree
+    )
+
+
+def _lc_round(idx: jax.Array) -> jax.Array:
+    """Shard a round's (K, m) index block chains x data."""
+    return lc(idx, ("ensemble_chains", "subsample"))
+
+
+def _lc_replicate_round(l: jax.Array) -> jax.Array:
+    """Re-replicate a round's (K, m) deltas along m. The sharded gather +
+    delta evaluation is elementwise per section, so each element's bits match
+    the unsharded run; all-gathering *before* the Welford merge keeps the
+    test-statistic reduction order identical too — the bit-for-bit contract
+    of the 2-d mesh."""
+    return lc(l, ("ensemble_chains", None))
 
 
 def _make_batched_transition(
@@ -201,10 +229,12 @@ def _make_batched_transition(
                 )(sub, smp, batch_eff)
             else:
                 smp2, idx, valid = jax.vmap(lambda k, s: draw_fn(k, s, m_max))(sub, smp)
+            idx = _lc_round(idx)
             if use_fused:
                 l = target.log_local_ensemble(theta, th_p, idx)
             else:
                 l = jax.vmap(target.log_local)(theta, th_p, idx)
+            l = _lc_replicate_round(l)
             w2 = jax.vmap(Welford.merge_batch)(w, l, valid)
             dec, pv, test_ok, exhausted = jax.vmap(
                 lambda w_, m_, e: test_round_decision(w_, m_, n_total, e)
@@ -285,7 +315,15 @@ class ChainEnsemble:
     With multiple devices visible (and ``shard="auto"`` or ``True``), the
     lock-step vmapped step is wrapped in ``shard_map`` over a 1-d chain
     mesh, so each device advances ``K / n_devices`` chains with zero
-    cross-device traffic (the masked mode currently runs unsharded).
+    cross-device traffic. ``shard=("chains", "data")`` (or
+    ``{"chains": c, "data": d}`` with explicit sizes) instead builds a 2-d
+    mesh: chains spread over the first axis while each sequential-test
+    round's (K, m) mini-batch — the gather plus the per-section delta
+    evaluation, fused or vmapped — shards its m rows over the second, via
+    the logical-axis rules in :mod:`repro.distributed.sharding`. The deltas
+    are re-replicated before the test statistics reduce, so a 2-d-sharded
+    run is bit-for-bit the unsharded run (regression-tested at 4 forced
+    host devices); the 2-d form also covers the masked superstep.
 
     Doctest — four subsampled chains, then the masked + adaptive form::
 
@@ -317,8 +355,11 @@ class ChainEnsemble:
     config: SubsampledMHConfig | None = None
     chunk_size: int | None = None  # exact kernel: lax.map chunking
     collect: Callable[[Params], Any] | None = None
-    shard: Any = "auto"  # "auto" | True | False — shard_map over chains
+    # "auto" | True | False — shard_map over a 1-d chain mesh; or a 2-d
+    # chains x data request: ("chains", "data") / {"chains": c, "data": d}
+    shard: Any = "auto"
     chain_axis: str = "chains"
+    data_axis: str = "data"
     stepping: str = "lockstep"  # "lockstep" | "masked" (subsampled only)
     schedule: ScheduleConfig | None = None  # adaptive per-chain controller
     fused_kernels: str = "auto"  # "auto" | "always" | "never" — (K, m) Pallas path
@@ -333,6 +374,19 @@ class ChainEnsemble:
             raise ValueError(f"unknown fused_kernels {self.fused_kernels!r}")
         if self.num_chains < 1:
             raise ValueError(f"num_chains must be >= 1, got {self.num_chains}")
+        if self._shard_2d_request is not None:
+            if self.transition is not None:
+                raise ValueError(
+                    "composite transitions run unsharded; the 2-d "
+                    "shard=(chains, data) mesh supports single-kernel "
+                    "ensembles only"
+                )
+            if self.kernel != "subsampled":
+                raise ValueError(
+                    "the 2-d shard=(chains, data) mesh requires the "
+                    "subsampled kernel — only its sequential-test rounds "
+                    "have a data axis to shard"
+                )
         if self.transition is not None:
             if self.target is not None or self.proposal is not None:
                 raise ValueError(
@@ -413,6 +467,76 @@ class ChainEnsemble:
             )
 
     # -- derived static config -------------------------------------------
+
+    @functools.cached_property
+    def _shard_2d_request(self):
+        """Normalized 2-d mesh request: ``(chains_size | None, data_size |
+        None)`` when ``shard`` asks for a chains x data mesh, else None."""
+        s = self.shard
+        if isinstance(s, (tuple, list)):
+            if tuple(s) != (self.chain_axis, self.data_axis):
+                raise ValueError(
+                    f"tuple shard= must name the mesh axes "
+                    f"({self.chain_axis!r}, {self.data_axis!r}), got {tuple(s)!r}"
+                )
+            return (None, None)
+        if isinstance(s, dict):
+            extra = set(s) - {self.chain_axis, self.data_axis}
+            if extra:
+                raise ValueError(
+                    f"dict shard= keys must be a subset of "
+                    f"{{{self.chain_axis!r}, {self.data_axis!r}}}, got extra {sorted(extra)}"
+                )
+            return (s.get(self.chain_axis), s.get(self.data_axis))
+        if s not in ("auto", True, False):
+            raise ValueError(
+                f"shard must be 'auto', True, False, a "
+                f"({self.chain_axis!r}, {self.data_axis!r}) tuple, or a dict "
+                f"of axis sizes; got {s!r}"
+            )
+        return None
+
+    @functools.cached_property
+    def _mesh_2d(self):
+        """The chains x data mesh for a 2-d ``shard=`` request (None on a
+        single device — the unsharded program is identical there)."""
+        req = self._shard_2d_request
+        if req is None:
+            return None
+        devices = jax.devices()
+        n = len(devices)
+        if n <= 1:
+            return None
+        c, d = req
+        if c is None and d is not None:
+            if n % d:
+                raise ValueError(f"data axis size {d} must divide device count {n}")
+            c = n // d
+        if c is not None:
+            d = d if d is not None else n // c
+            if c * d != n:
+                raise ValueError(
+                    f"mesh {self.chain_axis}={c} x {self.data_axis}={d} != "
+                    f"device count {n}"
+                )
+        else:
+            # Balanced default: the divisor of n nearest sqrt(n) that also
+            # divides num_chains (c=1, a pure data mesh, always qualifies).
+            cands = [k for k in range(1, n + 1)
+                     if n % k == 0 and self.num_chains % k == 0]
+            c = min(cands, key=lambda k: (abs(k - math.sqrt(n)), -k))
+            d = n // c
+        if self.num_chains % c:
+            raise ValueError(
+                f"num_chains ({self.num_chains}) must be divisible by the "
+                f"{self.chain_axis!r} mesh axis size ({c})"
+            )
+        from jax.sharding import Mesh
+
+        import numpy as np
+
+        return Mesh(np.asarray(devices).reshape(c, d),
+                    (self.chain_axis, self.data_axis))
 
     @property
     def _config(self) -> SubsampledMHConfig:
@@ -562,15 +686,16 @@ class ChainEnsemble:
 
         return jax.jit(run_all, static_argnames=("num_steps",))
 
-    # -- fused lock-step scan ---------------------------------------------
+    # -- batched-transition lock-step scan --------------------------------
 
-    @functools.cached_property
-    def _run_lockstep_fused_jit(self):
-        """Lock-step scan whose sequential-test rounds are (K, m) blocks
-        through ``target.log_local_ensemble`` — the fused-kernel route of the
-        plain (non-masked) engine. Chain semantics match the vmapped scan
-        round for round; only the block evaluation's float order differs
-        (parity-tested against ``fused_kernels="never"``)."""
+    def _make_run_batched(self, use_fused: bool):
+        """Lock-step scan whose sequential-test rounds are (K, m) blocks —
+        through ``target.log_local_ensemble`` when ``use_fused`` (the
+        fused-kernel route; only the block evaluation's float order differs,
+        parity-tested against ``fused_kernels="never"``), through
+        ``vmap(target.log_local)`` otherwise (round-for-round AND bit-for-bit
+        the vmapped scan — the route the 2-d chains x data mesh runs on).
+        Chain semantics match the vmapped scan round for round."""
         config = self._config
         sched = self.schedule
         buckets = self._buckets
@@ -579,7 +704,7 @@ class ChainEnsemble:
         n_total = self.target.num_sections
         eps_floor = sched.epsilon_floor(config) if sched else 0.0
         transition = _make_batched_transition(
-            self.target, self.proposal, config, K, True,
+            self.target, self.proposal, config, K, use_fused,
             adaptive=sched is not None,
             batch_max=max(buckets) if sched else None,
             max_rounds=self._max_rounds,
@@ -592,6 +717,8 @@ class ChainEnsemble:
 
             def body(carry, keys_t):
                 theta, sampler, ctrl = carry
+                theta = _lc_chains(theta)
+                sampler = _lc_chains(sampler)
                 if sched is None:
                     eps = jnp.full((K,), config.epsilon, jnp.float32)
                     meff = jnp.full((K,), config.batch_size, jnp.int32)
@@ -614,6 +741,14 @@ class ChainEnsemble:
             return theta, sampler, ctrl, swap(samples), swap(infos)
 
         return jax.jit(run_all, static_argnames=("num_steps",))
+
+    @functools.cached_property
+    def _run_lockstep_fused_jit(self):
+        return self._make_run_batched(True)
+
+    @functools.cached_property
+    def _run_lockstep_batched_jit(self):
+        return self._make_run_batched(False)
 
     # -- composite cycle --------------------------------------------------
 
@@ -792,6 +927,8 @@ class ChainEnsemble:
                  sampler, rounds) = jax.lax.cond(jnp.any(start), start_block, no_start, None)
 
                 # --- one sequential-test round for every active chain
+                theta_cur = _lc_chains(c.theta)
+                theta_prop = _lc_chains(theta_prop)
                 pairs = jax.vmap(jax.random.split)(test_key)
                 tkey, sub = pairs[:, 0], pairs[:, 1]
                 if adaptive:
@@ -802,10 +939,12 @@ class ChainEnsemble:
                     sampler2, idx, valid = jax.vmap(
                         lambda k, s: draw_fn(k, s, m_max)
                     )(sub, sampler)
+                idx = _lc_round(idx)
                 if use_fused:
-                    l = target.log_local_ensemble(c.theta, theta_prop, idx)
+                    l = target.log_local_ensemble(theta_cur, theta_prop, idx)
                 else:
-                    l = jax.vmap(target.log_local)(c.theta, theta_prop, idx)
+                    l = jax.vmap(target.log_local)(theta_cur, theta_prop, idx)
+                l = _lc_replicate_round(l)
                 w2 = jax.vmap(Welford.merge_batch)(welford, l, valid)
                 decision, pval, test_ok, exhausted = jax.vmap(
                     lambda w, m, e: test_round_decision(w, m, n_total, e)
@@ -868,6 +1007,8 @@ class ChainEnsemble:
     def _chain_mesh(self):
         if self.shard is False or self.stepping == "masked" or self.transition is not None:
             return None
+        if self._shard_2d_request is not None:
+            return None  # 2-d requests route through the batched runners
         devices = jax.devices()
         if len(devices) <= 1:
             return None  # single device: the plain vmap path is identical
@@ -945,10 +1086,18 @@ class ChainEnsemble:
                     f"step_keys must be a ({self.num_chains}, {num_steps}) key "
                     f"array, got leading shape {lead}"
                 )
+        mesh2 = self._mesh_2d
         if self.transition is not None:
             runner = self._run_composite_jit
         elif self.stepping == "masked":
             runner = self._run_masked_jit
+        elif self._shard_2d_request is not None:
+            # 2-d chains x data requests run the batched-transition scan (the
+            # only lock-step form whose rounds expose a shardable data axis);
+            # on a single device the same runner executes unsharded —
+            # bit-for-bit the vmapped scan when unfused.
+            runner = (self._run_lockstep_fused_jit if self._use_fused()
+                      else self._run_lockstep_batched_jit)
         elif (self.kernel == "subsampled" and self._use_fused()
               and (self.fused_kernels == "always" or self._chain_mesh() is None)):
             # The fused lock-step scan runs unsharded. An explicit "always"
@@ -958,10 +1107,20 @@ class ChainEnsemble:
             runner = self._run_lockstep_fused_jit
         else:
             runner = self._run_jit
-        theta, sampler, ctrl, samples, infos = runner(
-            step_keys, state.theta, state.sampler_state, state.controller,
-            num_steps=num_steps
-        )
+        if mesh2 is not None:
+            # Activate the logical-axis rules while tracing/running so the
+            # lc constraints in the round loop (and in the kernel-family
+            # registry's gathers) bind to this mesh.
+            with logical_axis_rules(mesh2):
+                theta, sampler, ctrl, samples, infos = runner(
+                    step_keys, state.theta, state.sampler_state, state.controller,
+                    num_steps=num_steps
+                )
+        else:
+            theta, sampler, ctrl, samples, infos = runner(
+                step_keys, state.theta, state.sampler_state, state.controller,
+                num_steps=num_steps
+            )
         return EnsembleState(theta, sampler, ctrl), samples, infos
 
     def run_timed(self, key: jax.Array, state: EnsembleState, num_steps: int,

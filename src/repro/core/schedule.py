@@ -100,17 +100,22 @@ class ScheduleConfig:
     # from the trailing acceptance rate toward ``accept_target``. Off by
     # default; with the flag off the controller is bit-for-bit the
     # pre-adaptive-proposal controller and no scale is threaded into the
-    # proposal (regression-tested in tests/test_schedule.py). Like the
-    # epsilon/batch controllers above, the gain is constant (adaptation
-    # does not diminish over time), so the adapted chain targets the
-    # posterior only approximately — use it for tuning/serving throughput,
-    # keep it off for strict asymptotic exactness; a diminishing-gain
-    # variant is a ROADMAP follow-on.
+    # proposal (regression-tested in tests/test_schedule.py).
     adapt_proposal: bool = False
     accept_target: float = 0.234  # classic RW-MH optimal acceptance
     proposal_gain: float = 0.33  # log-scale gain per transition
     scale_min: float = 0.1  # sigma_scale clamp (multiples of base sigma)
     scale_max: float = 10.0
+    # ``adapt_gain_decay`` puts the sigma adaptation on a Robbins–Monro
+    # diminishing-gain schedule: transition t uses an effective gain of
+    # ``proposal_gain * (1 + t) ** -adapt_gain_decay``. At the default 0.0
+    # the gain is constant and the update is bit-for-bit the constant-gain
+    # controller (adaptation then never stops, so the flag-on chain targets
+    # the posterior only approximately). Any value in (0.5, 1.0] satisfies
+    # the Robbins–Monro conditions (sum of gains diverges, sum of squared
+    # gains converges), so adaptation vanishes asymptotically and the
+    # flag-on chain recovers the correct stationary target.
+    adapt_gain_decay: float = 0.0
 
     def __post_init__(self):
         if self.batch_buckets is not None:
@@ -124,6 +129,10 @@ class ScheduleConfig:
             raise ValueError("need 0 < scale_min <= 1 <= scale_max")
         if not 0.0 < self.accept_target < 1.0:
             raise ValueError(f"accept_target must be in (0, 1), got {self.accept_target}")
+        if not 0.0 <= self.adapt_gain_decay <= 1.0:
+            raise ValueError(
+                f"adapt_gain_decay must be in [0, 1], got {self.adapt_gain_decay}"
+            )
 
     def buckets_for(self, config, num_sections: int | None = None) -> tuple[int, ...]:
         """The sorted static bucket tuple for a given kernel config."""
@@ -220,11 +229,19 @@ def controller_update(
 
     sigma_scale = state.sigma_scale
     if sched.adapt_proposal:
-        # Constant-gain multiplicative move of log(sigma) toward the target
-        # acceptance rate, driven by the trailing acceptance EMA (non-
-        # diminishing — see the ScheduleConfig note on asymptotic exactness).
+        # Multiplicative move of log(sigma) toward the target acceptance
+        # rate, driven by the trailing acceptance EMA. The Python branch on
+        # adapt_gain_decay keeps the default bit-for-bit the constant-gain
+        # controller; with decay > 0 the gain follows the Robbins–Monro
+        # schedule gain * (1 + t)^-decay, so adaptation dies out and the
+        # chain's stationary target is asymptotically exact.
+        gain = jnp.float32(sched.proposal_gain)
+        if sched.adapt_gain_decay:
+            gain = gain * (1.0 + state.t.astype(jnp.float32)) ** jnp.float32(
+                -sched.adapt_gain_decay
+            )
         sigma_scale = sigma_scale * jnp.exp(
-            jnp.float32(sched.proposal_gain) * (ema_accept - sched.accept_target)
+            gain * (ema_accept - sched.accept_target)
         )
         sigma_scale = jnp.clip(
             sigma_scale, jnp.float32(sched.scale_min), jnp.float32(sched.scale_max)

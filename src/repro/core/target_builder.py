@@ -40,6 +40,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from ..distributed.sharding import lc
 from .target import PartitionedTarget
 
 Params = Any
@@ -53,6 +54,28 @@ def _gather(arr: jax.Array, idx: jax.Array, section_ndim: int) -> jax.Array:
     if arr.ndim == section_ndim + 1:
         return arr[idx]
     return jax.vmap(lambda a, i: a[i])(arr, idx)
+
+
+def _gather_sharded(arr: jax.Array, idx: jax.Array, section_ndim: int) -> jax.Array:
+    """Ensemble-round gather with the chains x data sharding constraint: the
+    (K, m, ...) block is split over the mesh data axis (when a 2-d ensemble
+    mesh is active — see :mod:`repro.distributed.sharding`; a no-op
+    otherwise), so each device materializes and scores only its slice of the
+    drawn sections."""
+    out = _gather(arr, idx, section_ndim)
+    logical = ("ensemble_chains", "subsample") + (None,) * (out.ndim - 2)
+    return lc(out, logical)
+
+
+def _shard_round_idx(idx: jax.Array) -> jax.Array:
+    return lc(idx, ("ensemble_chains", "subsample"))
+
+
+def _replicate_round(out: jax.Array) -> jax.Array:
+    # Re-replicate the (K, m) deltas along m before they reach the Welford
+    # reduction — keeps sharded and unsharded reduction order identical
+    # (the bit-for-bit contract of the 2-d ensemble mesh).
+    return lc(out, ("ensemble_chains", None))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +139,10 @@ def _logit_ensemble_delta(data, w, w_p, idx):
     from ..kernels import ops
 
     x, y = data
-    return ops.batched_logit_delta(_gather(x, idx, 1), _gather(y, idx, 0), w, w_p)
+    idx = _shard_round_idx(idx)
+    return _replicate_round(ops.batched_logit_delta(
+        _gather_sharded(x, idx, 1), _gather_sharded(y, idx, 0), w, w_p
+    ))
 
 
 def _ar1_loglik(data, params, idx):
@@ -137,8 +163,9 @@ def _ar1_delta(data, params, params_p, idx):
 def _ar1_ensemble_delta(data, params, params_p, idx):
     from ..kernels import ops
 
-    xt, xp = (_gather(a, idx, 0) for a in data)
-    return ops.batched_gaussian_ar1_delta(xt, xp, *params, *params_p)
+    idx = _shard_round_idx(idx)
+    xt, xp = (_gather_sharded(a, idx, 0) for a in data)
+    return _replicate_round(ops.batched_gaussian_ar1_delta(xt, xp, *params, *params_p))
 
 
 def _ce_loglik(data, table, idx):
@@ -162,8 +189,11 @@ def _ce_ensemble_delta(data, table, table_p, idx):
     from ..kernels import ops
 
     h, targets = data
-    hg, tg = _gather(h, idx, 1), _gather(targets, idx, 0)
-    return ops.batched_fused_ce(hg, table_p, tg) - ops.batched_fused_ce(hg, table, tg)
+    idx = _shard_round_idx(idx)
+    hg, tg = _gather_sharded(h, idx, 1), _gather_sharded(targets, idx, 0)
+    return _replicate_round(
+        ops.batched_fused_ce(hg, table_p, tg) - ops.batched_fused_ce(hg, table, tg)
+    )
 
 
 register_family(KernelFamily("logit", _logit_loglik, _logit_delta, _logit_ensemble_delta))

@@ -42,6 +42,14 @@ DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
     "layers": (),
     "conv": (),
     "state": (),
+    # -- MCMC-ensemble axes (repro.core.ensemble 2-d chains x data meshes).
+    # The (K,) chain axis spreads whole chains; "subsample" is the m axis of
+    # a sequential-test round's (K, m) mini-batch, sharded over the data
+    # axis so each device gathers+scores its slice of the drawn sections.
+    # Both are no-ops on model-training meshes (no "chains" axis there) and
+    # fall through to replicated when the dim isn't divisible.
+    "ensemble_chains": (("chains",),),
+    "subsample": (("data",),),
 }
 
 

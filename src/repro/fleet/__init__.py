@@ -1,0 +1,33 @@
+"""Sharded serving fleet: writers, delta-streamed replicas, admission control.
+
+The scale-out layer over :mod:`repro.serving` (see docs/ARCHITECTURE.md):
+
+    FleetRouter ─▶ replica lanes ─▶ ReplicaEnsemble/-Process ─▶ values
+     priorities     least-loaded      local window copy
+     admission      per workload        ▲ SnapshotDelta stream
+     shed/admit       shard             │ (new draws only)
+                                   ResidentEnsemble writers
+                                   (EnsemblePool: freshness,
+                                    checkpoints, 2-d mesh runs)
+
+Front-end: ``python -m repro.launch.serve --fleet --workload bayeslr``.
+"""
+from .delta import SnapshotDelta, apply_delta, make_delta, payload_nbytes, wire_bytes
+from .replica import ReplicaEnsemble, ReplicaProcess
+from .router import AdmissionConfig, FleetRouter
+from .topology import Fleet, FleetConfig, FleetShard
+
+__all__ = [
+    "AdmissionConfig",
+    "Fleet",
+    "FleetConfig",
+    "FleetRouter",
+    "FleetShard",
+    "ReplicaEnsemble",
+    "ReplicaProcess",
+    "SnapshotDelta",
+    "apply_delta",
+    "make_delta",
+    "payload_nbytes",
+    "wire_bytes",
+]

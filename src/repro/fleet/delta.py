@@ -1,0 +1,100 @@
+"""Snapshot-delta streaming: what a writer sends its read replicas.
+
+A fleet writer's rolling posterior window advances by ``refresh_steps``
+draws per refresh while the window itself holds up to ``window`` draws per
+chain — so between two syncs only the *tail* of the window is new. A
+:class:`SnapshotDelta` carries exactly that tail (plus the refreshed
+diagnostics and a staleness stamp) keyed by the writer's monotonically
+increasing version (``steps_done``); a replica at ``base_version`` appends
+it and trims, reconstructing the writer's window bit for bit. When the gap
+exceeds the window depth (cold replica, restore, missed syncs) the delta
+degrades to a full-window resync — correctness never depends on the
+replica's history, only payload size does.
+
+Payload accounting lives here too: :func:`payload_nbytes` (raw array
+bytes) and :func:`wire_bytes` (pickled size — what actually crosses the
+process-group pipe in :class:`repro.fleet.replica.ReplicaProcess`), the
+numbers ``benchmarks/fleet_bench.py`` reports against the full-snapshot
+baseline.
+"""
+from __future__ import annotations
+
+import pickle
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+from ..serving.resident import Snapshot
+
+Params = Any
+
+
+class SnapshotDelta(NamedTuple):
+    """One writer->replica update (all leaves host numpy arrays, picklable)."""
+
+    name: str  # shard name the delta belongs to
+    base_version: int  # replica steps_done this applies on top of (0 = full)
+    version: int  # writer steps_done after applying
+    draws: Params | None  # (K, n_new, ...) new tail of the window; None = empty
+    window: int  # rolling-window limit to trim to after appending
+    summary: dict  # writer-side ensemble_summary of the last refresh
+    staleness_s: float  # age of the newest draw at emission time
+    full: bool  # True when draws is the whole window (resync)
+
+
+def payload_nbytes(tree: Params | None) -> int:
+    """Raw bytes of the array payload (0 for an empty delta)."""
+    if tree is None:
+        return 0
+    return int(sum(np.asarray(leaf).nbytes for leaf in jax.tree.leaves(tree)))
+
+
+def wire_bytes(obj: Any) -> int:
+    """Serialized size — the bytes a process-group pipe actually carries."""
+    return len(pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL))
+
+
+def make_delta(
+    snap: Snapshot, base_version: int, window: int, name: str = ""
+) -> SnapshotDelta:
+    """The delta that brings a replica at ``base_version`` up to ``snap``.
+
+    New draws are the last ``snap.steps_done - base_version`` window columns
+    (capped at the window depth); when that cap bites — or the replica is
+    ahead of the writer, which only happens after a writer restore to an
+    older checkpoint — the delta is a full-window resync.
+    """
+    if snap.draws is None:
+        return SnapshotDelta(name, int(base_version), snap.steps_done, None,
+                             int(window), snap.summary, snap.staleness_s, False)
+    width = int(jax.tree.leaves(snap.draws)[0].shape[1])
+    gap = snap.steps_done - base_version
+    if gap < 0 or gap >= width or base_version == 0:
+        draws = jax.tree.map(np.asarray, snap.draws)
+        return SnapshotDelta(name, 0, snap.steps_done, draws, int(window),
+                             snap.summary, snap.staleness_s, True)
+    if gap == 0:
+        return SnapshotDelta(name, int(base_version), snap.steps_done, None,
+                             int(window), snap.summary, snap.staleness_s, False)
+    draws = jax.tree.map(lambda a: np.asarray(a[:, width - gap:]), snap.draws)
+    return SnapshotDelta(name, int(base_version), snap.steps_done, draws,
+                         int(window), snap.summary, snap.staleness_s, False)
+
+
+def apply_delta(window_draws: Params | None, delta: SnapshotDelta) -> Params | None:
+    """Fold a delta into a replica's local window; returns the new window.
+
+    Incremental deltas require the replica to sit exactly at
+    ``delta.base_version`` — the caller checks that and raises/resyncs —
+    this function only performs the append-and-trim (or the full replace).
+    """
+    if delta.draws is None:
+        return window_draws
+    if delta.full or window_draws is None:
+        return jax.tree.map(lambda a: np.asarray(a)[:, -delta.window:], delta.draws)
+    merged = jax.tree.map(
+        lambda a, b: np.concatenate([a, np.asarray(b)], axis=1),
+        window_draws, delta.draws,
+    )
+    return jax.tree.map(lambda a: a[:, -delta.window:], merged)

@@ -1,0 +1,313 @@
+"""Read replicas: local posterior windows answering queries.
+
+A :class:`ReplicaEnsemble` is the read-side half of a fleet shard: it holds
+a delta-streamed copy of its writer's rolling window and serves posterior
+functionals from that copy through the same
+:class:`repro.serving.resident.SnapshotEvaluator` the writer uses — no
+forked query path, so a replica's answers are bit-for-bit what the writer
+would serve from the same version (regression-tested).
+
+:class:`ReplicaProcess` hosts one ReplicaEnsemble in its own OS process —
+the fleet's "process group" transport. Deltas and query batches travel
+over a pipe (pickled; :func:`repro.fleet.delta.wire_bytes` is literally
+what crosses), and because each replica process owns a private Python
+interpreter and XLA client, replicas serve genuinely in parallel on
+multi-core hosts — the replica-scaling axis ``benchmarks/fleet_bench.py``
+measures. The worker rebuilds its workload's query specs from the serving
+registry by name (specs hold closures, which don't pickle across a spawn).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import pickle
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+from ..serving.resident import QuerySpec, Snapshot, SnapshotEvaluator
+from .delta import SnapshotDelta, apply_delta, wire_bytes
+
+Params = Any
+
+
+class ReplicaEnsemble:
+    """An in-process read replica: local window copy + shared evaluator.
+
+    Thread-safe like the resident: ``apply_delta`` replaces (never mutates)
+    the window under a lock; snapshots are immutable once taken.
+    """
+
+    def __init__(self, name: str, *, micro_batch: int = 64):
+        self.name = name
+        self.version = 0  # writer steps_done our window mirrors
+        self._draws = None
+        self._summary: dict = {}
+        self._base_staleness = 0.0  # writer-side staleness at last sync
+        self._last_update: float | None = None
+        self._evaluator = SnapshotEvaluator(micro_batch)
+        self._lock = threading.RLock()
+        self.deltas_applied = 0
+        self.full_syncs = 0
+        self.bytes_received = 0
+
+    def apply_delta(self, delta: SnapshotDelta, *, nbytes: int | None = None) -> int:
+        """Fold a writer delta into the local window; returns the version.
+
+        An incremental delta whose ``base_version`` doesn't match raises —
+        the caller (the fleet sync loop) then re-emits a full resync.
+        """
+        with self._lock:
+            if not delta.full and delta.draws is not None \
+                    and delta.base_version != self.version:
+                raise ValueError(
+                    f"replica {self.name!r} at version {self.version} cannot "
+                    f"apply incremental delta from base {delta.base_version}; "
+                    "full resync required"
+                )
+            self._draws = apply_delta(self._draws, delta)
+            self.version = delta.version
+            self._summary = delta.summary
+            self._base_staleness = delta.staleness_s
+            self._last_update = time.monotonic()
+            self.deltas_applied += 1
+            self.full_syncs += int(delta.full)
+            self.bytes_received += int(
+                nbytes if nbytes is not None else wire_bytes(delta)
+            )
+            if delta.draws is not None:
+                # The window changed under the same (steps_done, num_draws)
+                # key only on resync-after-restore; invalidating is cheap
+                # and always safe.
+                self._evaluator.invalidate()
+            return self.version
+
+    def reset(self) -> None:
+        """Forget the local copy (forces the next sync to be full)."""
+        with self._lock:
+            self._draws = None
+            self.version = 0
+            self._summary = {}
+            self._base_staleness = 0.0
+            self._last_update = None
+            self._evaluator.invalidate()
+
+    def snapshot(self) -> Snapshot:
+        """The replica's local view. Staleness compounds the writer-side
+        staleness at emission with the time since the delta arrived — a
+        replica never under-reports how old its draws are."""
+        with self._lock:
+            now = time.monotonic()
+            staleness = (
+                float("inf") if self._last_update is None
+                else self._base_staleness + (now - self._last_update)
+            )
+            num = 0
+            if self._draws is not None:
+                lead = jax.tree.leaves(self._draws)[0].shape
+                num = int(lead[0] * lead[1])
+            return Snapshot(
+                draws=self._draws,
+                num_draws=num,
+                steps_done=self.version,
+                staleness_s=staleness,
+                summary=self._summary,
+                created_at=now,
+            )
+
+    def query(
+        self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
+    ) -> tuple[np.ndarray, Snapshot]:
+        snap = snapshot if snapshot is not None else self.snapshot()
+        if snap.draws is None:
+            raise RuntimeError(
+                f"replica {self.name!r} has no window yet; sync a delta first"
+            )
+        return self._evaluator.evaluate(spec, snap, xs), snap
+
+    def serve(self, spec: QuerySpec, query_class: str, xs) -> tuple[np.ndarray, float]:
+        """The router-facing entry: returns ``(values, staleness_s)``.
+        ``query_class`` is unused in-process (the spec is passed directly);
+        the process transport resolves it registry-side instead."""
+        del query_class
+        values, snap = self.query(spec, xs)
+        return values, snap.staleness_s
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "name": self.name,
+                "version": self.version,
+                "deltas_applied": self.deltas_applied,
+                "full_syncs": self.full_syncs,
+                "bytes_received": self.bytes_received,
+            }
+
+    def close(self) -> None:  # interface parity with ReplicaProcess
+        pass
+
+
+# ---------------------------------------------------------------------------
+# Process-group transport
+# ---------------------------------------------------------------------------
+
+
+def _replica_worker(conn, name: str, workload_name: str, build_kw: dict,
+                    micro_batch: int, threads: int | None) -> None:
+    """Replica process main loop: build the workload's query specs from the
+    registry, then answer pickled (cmd, ...) frames until ``stop``."""
+    import os
+
+    if threads:
+        # Cap this replica's XLA intra-op pool BEFORE the backend
+        # initializes (module import is fine; the first op is not). One
+        # compute thread per replica is what makes N replicas scale on an
+        # M-core host instead of thrashing one shared pool.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "intra_op_parallelism_threads" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_cpu_multi_thread_eigen=false "
+                f"intra_op_parallelism_threads={threads}"
+            ).strip()
+    from ..serving.workloads import build_serving_workload
+
+    try:
+        workload = build_serving_workload(workload_name, **build_kw)
+        replica = ReplicaEnsemble(name, micro_batch=micro_batch)
+        conn.send_bytes(pickle.dumps(("ready", name)))
+    except Exception as e:  # noqa: BLE001 — report the failure, then exit
+        conn.send_bytes(pickle.dumps(("err", f"{type(e).__name__}: {e}")))
+        return
+    while True:
+        try:
+            msg = pickle.loads(conn.recv_bytes())
+        except EOFError:
+            return
+        cmd = msg[0]
+        if cmd == "stop":
+            conn.send_bytes(pickle.dumps(("ok",)))
+            return
+        try:
+            if cmd == "delta":
+                version = replica.apply_delta(msg[1], nbytes=msg[2])
+                out = ("ok", version)
+            elif cmd == "query":
+                _, query_class, xs = msg
+                spec = workload.query_specs[query_class]
+                values, snap = replica.query(spec, xs)
+                out = ("ok", values, snap.staleness_s, replica.version)
+            elif cmd == "reset":
+                replica.reset()
+                out = ("ok", replica.version)
+            elif cmd == "stats":
+                out = ("ok", replica.stats())
+            elif cmd == "ping":
+                out = ("ok",)
+            else:
+                out = ("err", f"unknown command {cmd!r}")
+        except Exception as e:  # noqa: BLE001 — fail the request, not the loop
+            out = ("err", f"{type(e).__name__}: {e}")
+        conn.send_bytes(pickle.dumps(out))
+
+
+class ReplicaProcess:
+    """A read replica hosted in its own OS process.
+
+    Same duck-typed surface as :class:`ReplicaEnsemble` (``apply_delta`` /
+    ``serve`` / ``stats`` / ``version``), but every call is an RPC over a
+    spawn-context pipe, and ``bytes_sent`` counts the real serialized
+    payload. One RPC runs at a time per replica (the pipe is the queue);
+    parallelism comes from running several replicas.
+
+    Spawn-context caveat: scripts that create ReplicaProcess (directly or
+    via ``FleetConfig(transport="proc")``) must do so under an
+    ``if __name__ == "__main__":`` guard — the standard multiprocessing
+    requirement, since the child re-imports the main module.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        workload_name: str,
+        build_kw: dict | None = None,
+        *,
+        micro_batch: int = 64,
+        threads: int | None = 1,
+        start_timeout_s: float = 120.0,
+    ):
+        self.name = name
+        self.version = 0
+        self.bytes_sent = 0
+        self._lock = threading.Lock()
+        ctx = mp.get_context("spawn")
+        self._conn, child = ctx.Pipe()
+        self._proc = ctx.Process(
+            target=_replica_worker,
+            args=(child, name, workload_name, dict(build_kw or {}), micro_batch,
+                  threads),
+            name=f"replica-{name}",
+            daemon=True,
+        )
+        self._proc.start()
+        child.close()
+        if not self._conn.poll(start_timeout_s):
+            self.close()
+            raise TimeoutError(f"replica process {name!r} did not start")
+        first = pickle.loads(self._conn.recv_bytes())
+        if first[0] != "ready":
+            self.close()
+            raise RuntimeError(f"replica process {name!r} failed: {first[1]}")
+
+    def _rpc(self, *msg):
+        payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
+        with self._lock:
+            self.bytes_sent += len(payload)
+            self._conn.send_bytes(payload)
+            out = pickle.loads(self._conn.recv_bytes())
+        if out[0] == "err":
+            raise RuntimeError(f"replica {self.name!r}: {out[1]}")
+        return out
+
+    def apply_delta(self, delta: SnapshotDelta, *, nbytes: int | None = None) -> int:
+        nb = nbytes if nbytes is not None else wire_bytes(delta)
+        out = self._rpc("delta", delta, nb)
+        self.version = out[1]
+        return self.version
+
+    def reset(self) -> None:
+        out = self._rpc("reset")
+        self.version = out[1]
+
+    def serve(self, spec, query_class: str, xs) -> tuple[np.ndarray, float]:
+        del spec  # resolved registry-side in the worker
+        out = self._rpc("query", query_class, np.asarray(xs))
+        self.version = out[3]
+        return out[1], out[2]
+
+    def stats(self) -> dict:
+        stats = self._rpc("stats")[1]
+        stats["bytes_sent"] = self.bytes_sent
+        return stats
+
+    def close(self, timeout_s: float = 10.0) -> None:
+        proc, conn = self._proc, self._conn
+        if proc is None:
+            return
+        try:
+            if proc.is_alive():
+                try:
+                    with self._lock:
+                        conn.send_bytes(pickle.dumps(("stop",)))
+                        if conn.poll(timeout_s):
+                            conn.recv_bytes()
+                except (BrokenPipeError, OSError):
+                    pass
+            proc.join(timeout=timeout_s)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=timeout_s)
+        finally:
+            conn.close()
+            self._proc = None

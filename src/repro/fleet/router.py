@@ -1,0 +1,373 @@
+"""Request routing with per-class priority and overload admission control.
+
+The fleet-side counterpart of :class:`repro.serving.queue.RequestQueue`:
+requests enter through :meth:`FleetRouter.submit`, are admitted or shed by
+the overload policy, land on the least-loaded replica lane of their
+workload's shards, and are served in priority order as same-class batches
+against one pinned replica snapshot (the queue's result-transparency
+carries over — the evaluator is identical).
+
+Admission control (:class:`AdmissionConfig`) sheds the *lowest* priority
+class first: when total queue depth crosses ``max_depth`` — or the
+deadline-miss rate predicted from the trailing completions crosses
+``max_miss_rate`` — the shed floor rises one priority level per multiple
+of ``max_depth``, so progressively more classes are refused while the top
+class is always admitted. Shed requests fail fast (``error="shed: ..."``)
+instead of queuing toward certain deadline misses, and
+:meth:`FleetRouter.slo_report` extends the queue's per-class SLO tables
+with ``admitted``/``shed`` counters plus the live admission state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import defaultdict, deque
+
+import numpy as np
+
+from ..core.stats import slo_summary
+from ..serving.queue import Request
+from .topology import Fleet, FleetShard
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Overload thresholds.
+
+    ``max_depth``: pending requests across the router before the shed floor
+    rises (then one more level per additional multiple);
+    ``max_miss_rate``: predicted deadline-miss rate (trailing
+    ``miss_window`` completions) that raises the floor one level;
+    ``min_observations``: completions required before the miss predictor is
+    trusted at all.
+    """
+
+    max_depth: int = 256
+    max_miss_rate: float = 0.5
+    miss_window: int = 64
+    min_observations: int = 16
+
+    def __post_init__(self):
+        if self.max_depth < 1:
+            raise ValueError("max_depth must be >= 1")
+        if not 0.0 < self.max_miss_rate <= 1.0:
+            raise ValueError("max_miss_rate must be in (0, 1]")
+
+
+class _Lane:
+    """One replica's pending queue."""
+
+    __slots__ = ("shard", "replica", "pending", "served")
+
+    def __init__(self, shard: FleetShard, replica):
+        self.shard = shard
+        self.replica = replica
+        self.pending: list[Request] = []
+        self.served = 0
+
+
+class FleetRouter:
+    """Route requests across a fleet's replicas; shed under overload."""
+
+    def __init__(
+        self,
+        fleet: Fleet,
+        *,
+        priorities: dict[str, int] | None = None,
+        admission: AdmissionConfig | None = None,
+        max_batch: int | None = None,
+        default_deadline_s: float | None = None,
+        lanes_per_shard: int | None = None,
+    ):
+        self.fleet = fleet
+        self.priorities = dict(priorities or {})
+        self.admission = admission or AdmissionConfig()
+        cfg = fleet.config.serving
+        self.max_batch = int(max_batch or cfg.max_batch)
+        self.default_deadline_s = (
+            cfg.default_deadline_s if default_deadline_s is None
+            else float(default_deadline_s)
+        )
+        # lanes_per_shard restricts serving to each shard's first N replicas
+        # (None = all) — how the fleet bench sweeps replica counts over one
+        # warmed fleet instead of rebuilding it per point.
+        self._lanes: dict[str, list[_Lane]] = {
+            workload: [
+                _Lane(shard, replica)
+                for shard in fleet.shards(workload)
+                for replica in shard.replicas[:lanes_per_shard]
+            ]
+            for workload in fleet.workloads()
+        }
+        self._lock = threading.Lock()
+        self._arrived = threading.Condition(self._lock)
+        self._completed: list[Request] = []
+        self._miss_trail: deque[bool] = deque(maxlen=self.admission.miss_window)
+        self._counters: dict[tuple[str, str], dict] = defaultdict(
+            lambda: {"admitted": 0, "shed": 0}
+        )
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+    # -- admission ---------------------------------------------------------
+
+    def _priority(self, query_class: str) -> int:
+        return self.priorities.get(query_class, 0)
+
+    def _depth_locked(self) -> int:
+        return sum(len(l.pending) for lanes in self._lanes.values() for l in lanes)
+
+    def _miss_rate_locked(self) -> float:
+        """Deadline-miss rate over the trailing completions (0 until
+        ``min_observations`` have been seen). Caller holds ``_lock``."""
+        if len(self._miss_trail) < self.admission.min_observations:
+            return 0.0
+        return float(np.mean(self._miss_trail))
+
+    def predicted_miss_rate(self) -> float:
+        with self._lock:
+            return self._miss_rate_locked()
+
+    def _shed_floor_locked(self) -> int | None:
+        """The priority strictly below which submissions are shed right
+        now, or None when everything is admitted."""
+        levels = sorted({self._priority(c) for c in self._known_classes()})
+        if len(levels) < 2:
+            return None  # one class: nothing lower-priority to shed first
+        adm = self.admission
+        depth = self._depth_locked()
+        miss = self._miss_rate_locked()
+        cut = 0
+        if miss > adm.max_miss_rate:
+            cut = 1
+        if depth >= adm.max_depth:
+            cut = max(cut, int(depth // adm.max_depth))
+        cut = min(cut, len(levels) - 1)  # the top class is always admitted
+        return None if cut == 0 else levels[cut]
+
+    def _known_classes(self) -> set[str]:
+        classes = set(self.priorities)
+        for workload in self.fleet.workloads():
+            classes.update(self.fleet.workload(workload).query_specs)
+        return classes
+
+    # -- intake ------------------------------------------------------------
+
+    def submit(
+        self, workload: str, query_class: str, xs, deadline_s: float | None = None
+    ) -> Request:
+        """Admit (routing to the least-loaded replica lane) or shed."""
+        req = Request(
+            workload=workload,
+            query_class=query_class,
+            xs=np.asarray(xs),
+            deadline_s=self.default_deadline_s if deadline_s is None else deadline_s,
+            submitted_at=time.monotonic(),
+        )
+        with self._arrived:
+            counters = self._counters[(workload, query_class)]
+            floor = self._shed_floor_locked()
+            if floor is not None and self._priority(query_class) < floor:
+                req.error = (
+                    f"shed: admission floor at priority {floor} "
+                    f"(depth={self._depth_locked()}, "
+                    f"predicted_miss={np.mean(self._miss_trail) if self._miss_trail else 0.0:.2f})"
+                )
+                req.latency_s = 0.0
+                req.deadline_met = False
+                req.batch_size = 0
+                counters["shed"] += 1
+                self._completed.append(req)
+                req.done.set()
+                return req
+            counters["admitted"] += 1
+            lanes = self._lanes[workload]
+            lane = min(lanes, key=lambda l: (len(l.pending), l.served))
+            lane.pending.append(req)
+            self._arrived.notify_all()
+        return req
+
+    @property
+    def pending_count(self) -> int:
+        with self._lock:
+            return self._depth_locked()
+
+    @property
+    def completed(self) -> list[Request]:
+        with self._lock:
+            return list(self._completed)
+
+    # -- serving -----------------------------------------------------------
+
+    def _take_batch(self, lane: _Lane) -> list[Request]:
+        """Pop up to ``max_batch`` same-class requests, highest priority
+        class first (FIFO within the class). An idle lane steals from the
+        deepest backlog of the same workload — replicas of one workload are
+        interchangeable, and stealing keeps the tail from being set by the
+        slowest replica's private queue."""
+        with self._lock:
+            source = lane
+            if not source.pending:
+                peers = self._lanes[lane.shard.workload]
+                source = max(peers, key=lambda l: len(l.pending))
+                if not source.pending:
+                    return []
+            head = max(source.pending,
+                       key=lambda r: (self._priority(r.query_class), -r.id))
+            key = head.query_class
+            batch, rest = [], []
+            for req in source.pending:
+                if req.query_class == key and len(batch) < self.max_batch:
+                    batch.append(req)
+                else:
+                    rest.append(req)
+            source.pending = rest
+            return batch
+
+    def _serve_batch(self, lane: _Lane, batch: list[Request]) -> None:
+        workload, qclass = batch[0].workload, batch[0].query_class
+        try:
+            sizes = [req.xs.shape[0] if req.xs.ndim else 1 for req in batch]
+            xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
+            spec = self.fleet.spec(workload, qclass)
+            values, staleness = lane.replica.serve(spec, qclass, xs)
+        except Exception as e:  # noqa: BLE001 — fail the requests, not the server
+            now = time.monotonic()
+            with self._lock:
+                for req in batch:
+                    req.error = f"{type(e).__name__}: {e}"
+                    req.latency_s = now - req.submitted_at
+                    req.deadline_met = False
+                    req.batch_size = len(batch)
+                    self._miss_trail.append(True)
+                    req.done.set()
+                self._completed.extend(batch)
+            return
+        now = time.monotonic()
+        offset = 0
+        with self._lock:
+            for req, size in zip(batch, sizes):
+                req.values = values[offset:offset + size]
+                offset += size
+                req.latency_s = now - req.submitted_at
+                req.deadline_met = req.latency_s <= req.deadline_s
+                req.staleness_s = staleness
+                req.batch_size = len(batch)
+                self._miss_trail.append(not req.deadline_met)
+                req.done.set()
+            lane.served += len(batch)
+            self._completed.extend(batch)
+
+    def drain(self) -> list[Request]:
+        """Serve everything pending on the calling thread (deterministic;
+        what tests and the smoke path use), round-robin over lanes."""
+        served: list[Request] = []
+        while True:
+            any_served = False
+            for lanes in self._lanes.values():
+                for lane in lanes:
+                    batch = self._take_batch(lane)
+                    if batch:
+                        self._serve_batch(lane, batch)
+                        served.extend(batch)
+                        any_served = True
+            if not any_served:
+                return served
+
+    # -- background workers ------------------------------------------------
+
+    def start_workers(self, max_wait_s: float = 0.002) -> None:
+        """One serving thread per replica lane — with process-transport
+        replicas each lane's RPC blocks GIL-free, so lanes genuinely serve
+        in parallel."""
+        if self._threads:
+            return
+        self._stop.clear()
+
+        def loop(lane: _Lane):
+            while not self._stop.is_set():
+                with self._arrived:
+                    if not lane.pending:
+                        self._arrived.wait(timeout=0.02)
+                if max_wait_s:
+                    time.sleep(max_wait_s)  # let a batch accumulate first
+                # One take AFTER the linger: _take_batch already caps at
+                # max_batch and keeps the batch single-class (a second take
+                # could return a different class, and truncating a merged
+                # batch would orphan popped requests).
+                batch = self._take_batch(lane)
+                if batch:
+                    self._serve_batch(lane, batch)
+
+        for lanes in self._lanes.values():
+            for lane in lanes:
+                t = threading.Thread(
+                    target=loop, args=(lane,),
+                    name=f"route-{lane.replica.name}", daemon=True,
+                )
+                t.start()
+                self._threads.append(t)
+
+    def stop_workers(self, timeout_s: float = 30.0) -> None:
+        self._stop.set()
+        with self._arrived:
+            self._arrived.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout_s)
+        self._threads = []
+
+    # -- SLO accounting ----------------------------------------------------
+
+    def slo_report(self) -> dict:
+        """The queue's per-class SLO tables extended with admission-control
+        counters: per class ``admitted``/``shed``, plus the router-wide
+        admission state."""
+        with self._lock:
+            done = [r for r in self._completed if r.latency_s is not None]
+            counters = {k: dict(v) for k, v in self._counters.items()}
+            depth = self._depth_locked()
+            floor = self._shed_floor_locked()
+        by_class: dict[tuple[str, str], list[Request]] = defaultdict(list)
+        for req in done:
+            by_class[(req.workload, req.query_class)].append(req)
+        shed_total = sum(c["shed"] for c in counters.values())
+        report: dict = {
+            "total_requests": len(done),
+            "errors": sum(
+                1 for r in done if r.error is not None and not r.error.startswith("shed")
+            ),
+            "shed": shed_total,
+            "admission": {
+                "depth": depth,
+                "predicted_miss_rate": self.predicted_miss_rate(),
+                "shed_floor": floor,
+            },
+        }
+        classes: dict = {}
+        for (wl, qc), reqs in sorted(by_class.items()):
+            # Shed requests are accounted in their own counter; folding them
+            # into the deadline hit rate would double-punish the class the
+            # admission policy already sacrificed.
+            attempted = [r for r in reqs
+                         if not (r.error or "").startswith("shed")]
+            ok = [r for r in attempted if r.error is None]
+            entry = slo_summary([r.latency_s for r in ok]) if ok else {"count": 0}
+            entry["deadline_hit_rate"] = float(
+                np.mean([bool(r.deadline_met) for r in attempted])
+            ) if attempted else 0.0
+            entry["errors"] = len(attempted) - len(ok)
+            cnt = counters.get((wl, qc), {"admitted": 0, "shed": 0})
+            entry["admitted"] = cnt["admitted"]
+            entry["shed"] = cnt["shed"]
+            entry["priority"] = self._priority(qc)
+            staleness = [r.staleness_s for r in ok if r.staleness_s is not None]
+            if staleness:
+                entry["staleness_mean_s"] = float(np.mean(staleness))
+                entry["staleness_max_s"] = float(np.max(staleness))
+            entry["mean_batch_size"] = float(
+                np.mean([r.batch_size or 1 for r in ok])
+            ) if ok else 0.0
+            classes[f"{wl}.{qc}"] = entry
+        report["classes"] = classes
+        return report

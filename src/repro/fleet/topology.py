@@ -1,0 +1,304 @@
+"""Fleet topology: workload shards, writers, replica pools, and sync.
+
+The sharded serving fleet splits the two halves of posterior serving that
+PR 4's single pool fused (the parallel-transition vs replicated-serving
+split of Angelino et al., *Patterns of Scalable Bayesian Inference*):
+
+    Fleet
+      └─ shard "bayeslr@0"   writer ResidentEnsemble  (advances chains,
+      │                       optionally on a 2-d chains x data mesh)
+      │     ├─ replica #r0   ReplicaEnsemble | ReplicaProcess
+      │     └─ replica #r1     (serve queries from a delta-streamed
+      │                          copy of the writer's window)
+      └─ shard "bayeslr@1"   ...
+
+Each registered workload gets ``shards`` independent writers — same data,
+independent chain keys (``fold_in(seed_key, shard)``), so the fleet's
+aggregate posterior capacity scales with shard count — and each writer
+broadcasts :mod:`repro.fleet.delta` snapshot deltas to ``replicas`` read
+replicas. Writers live in one :class:`repro.serving.EnsemblePool`, so the
+freshness policy, warm checkpointing, and background refresh of the
+serving layer apply unchanged; replicas resync (a full-window delta) after
+a restore and then ride incremental deltas again.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, NamedTuple
+
+import jax
+
+from ..serving.pool import EnsemblePool, ServingConfig
+from ..serving.resident import QuerySpec, ResidentEnsemble
+from ..serving.workloads import ServingWorkload, build_serving_workload
+from .delta import make_delta, payload_nbytes, wire_bytes
+from .replica import ReplicaEnsemble, ReplicaProcess
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Static fleet shape.
+
+    ``replicas``: read replicas per shard; ``shards``: independent writers
+    per workload; ``mesh``: forwarded to every writer's
+    ``ChainEnsemble(shard=...)`` (e.g. ``("chains", "data")`` for the 2-d
+    fan-out — a no-op on one device); ``transport``: ``"inproc"`` replicas
+    share the process (deterministic, cheap — tests/smoke), ``"proc"``
+    replicas each get an OS process (the scaling configuration);
+    ``sync_interval_s``: pause between background refresh+broadcast rounds.
+    """
+
+    replicas: int = 2
+    shards: int = 1
+    serving: ServingConfig = ServingConfig()
+    mesh: Any = "auto"
+    transport: str = "inproc"  # "inproc" | "proc"
+    sync_interval_s: float = 0.0
+    # Per-replica XLA intra-op thread cap for the "proc" transport (None =
+    # backend default). One thread per replica is what lets N replicas scale
+    # across an M-core host instead of contending for one shared pool.
+    replica_threads: int | None = 1
+
+    def __post_init__(self):
+        if self.replicas < 1 or self.shards < 1:
+            raise ValueError("replicas and shards must be >= 1")
+        if self.transport not in ("inproc", "proc"):
+            raise ValueError(f"unknown transport {self.transport!r}")
+
+
+class FleetShard(NamedTuple):
+    """One workload shard: a writer and its read replicas."""
+
+    name: str  # "<workload>@<index>"
+    workload: str
+    writer: ResidentEnsemble
+    replicas: tuple
+
+
+class Fleet:
+    """Writers + replicas + delta streams behind one management surface."""
+
+    def __init__(self, config: FleetConfig | None = None):
+        self.config = config or FleetConfig()
+        self.pool = EnsemblePool(self.config.serving)
+        self._workloads: dict[str, ServingWorkload] = {}
+        self._shards: dict[str, list[FleetShard]] = {}
+        self._sync_lock = threading.Lock()
+        self.sync_stats = {
+            "syncs": 0,
+            "delta_wire_bytes": 0,
+            "full_wire_bytes": 0,  # what full-snapshot streaming would cost
+            "delta_payload_bytes": 0,
+            "full_payload_bytes": 0,
+        }
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        # Last background refresh+broadcast error per shard (cleared on the
+        # next success) — surfaced in report() so a dying replica shows up
+        # instead of silently freezing the shard's delta stream.
+        self._shard_errors: dict[str, str] = {}
+
+    # -- registration ------------------------------------------------------
+
+    def add_workload(self, name: str, **build_kw) -> list[FleetShard]:
+        """Register ``shards`` writers + ``replicas`` replicas for a
+        registry workload. ``build_kw`` reaches the workload builder
+        (every shard gets the same data; chain keys differ per shard)."""
+        if name in self._shards:
+            raise ValueError(f"workload {name!r} already in this fleet")
+        cfg = self.config
+        scfg = cfg.serving
+        build_kw.setdefault("num_chains", scfg.num_chains)
+        build_kw.setdefault("seed", scfg.seed)
+        base = build_serving_workload(name, **build_kw)
+        self._workloads[name] = base
+        shards: list[FleetShard] = []
+        for i in range(cfg.shards):
+            shard_name = f"{name}@{i}"  # "@": shard names double as checkpoint file stems
+            ensemble = base.ensemble
+            if cfg.mesh != "auto":
+                ensemble = dataclasses.replace(ensemble, shard=cfg.mesh)
+            shard_wl = dataclasses.replace(
+                base, name=shard_name, ensemble=ensemble
+            )
+            writer = self.pool.add_workload(
+                shard_wl, key=jax.random.fold_in(jax.random.key(scfg.seed), i)
+            )
+            replicas = tuple(
+                self._make_replica(f"{shard_name}#r{j}", name, build_kw)
+                for j in range(cfg.replicas)
+            )
+            shards.append(FleetShard(shard_name, name, writer, replicas))
+        self._shards[name] = shards
+        return shards
+
+    def _make_replica(self, replica_name: str, workload: str, build_kw: dict):
+        if self.config.transport == "proc":
+            return ReplicaProcess(
+                replica_name, workload, build_kw,
+                micro_batch=self.config.serving.micro_batch,
+                threads=self.config.replica_threads,
+            )
+        return ReplicaEnsemble(
+            replica_name, micro_batch=self.config.serving.micro_batch
+        )
+
+    # -- lookups -----------------------------------------------------------
+
+    def workloads(self) -> tuple[str, ...]:
+        return tuple(sorted(self._shards))
+
+    def shards(self, workload: str) -> list[FleetShard]:
+        return self._shards[workload]
+
+    def workload(self, name: str) -> ServingWorkload:
+        return self._workloads[name]
+
+    def spec(self, workload: str, query_class: str) -> QuerySpec:
+        return self._workloads[workload].query_specs[query_class]
+
+    # -- delta streaming ---------------------------------------------------
+
+    def sync_shard(self, shard: FleetShard) -> int:
+        """Broadcast the writer's snapshot to every replica as deltas;
+        returns total wire bytes sent. Also accounts what streaming the full
+        window instead would have cost (the bench's comparison)."""
+        snap = shard.writer.snapshot()
+        window = shard.writer.window
+        sent = 0
+        with self._sync_lock:
+            for replica in shard.replicas:
+                delta = make_delta(snap, replica.version, window, shard.name)
+                nbytes = wire_bytes(delta)
+                try:
+                    replica.apply_delta(delta, nbytes=nbytes)
+                except (ValueError, RuntimeError):
+                    # Version drift (e.g. a replica reset raced the
+                    # snapshot): fall back to a full resync. ReplicaProcess
+                    # surfaces the worker's ValueError as RuntimeError, so
+                    # both are resync triggers; a genuinely broken replica
+                    # raises again below and propagates.
+                    delta = make_delta(snap, 0, window, shard.name)
+                    nbytes = wire_bytes(delta)
+                    replica.apply_delta(delta, nbytes=nbytes)
+                delta_payload = payload_nbytes(delta.draws)
+                if delta.full:
+                    full_wire, full_payload = nbytes, delta_payload
+                else:
+                    # The full-snapshot baseline without serializing the
+                    # whole window every sync just for accounting: the
+                    # pickle frame (name, summary, ints) is shared between
+                    # the delta and its full-window counterpart, so the
+                    # full wire cost is the delta's plus the payload
+                    # difference. Exact for the raw-array part, which is
+                    # what dominates.
+                    full_payload = payload_nbytes(snap.draws)
+                    full_wire = nbytes + (full_payload - delta_payload)
+                self.sync_stats["syncs"] += 1
+                self.sync_stats["delta_wire_bytes"] += nbytes
+                self.sync_stats["delta_payload_bytes"] += delta_payload
+                self.sync_stats["full_wire_bytes"] += full_wire
+                self.sync_stats["full_payload_bytes"] += full_payload
+                sent += nbytes
+        return sent
+
+    def sync_all(self) -> int:
+        return sum(
+            self.sync_shard(s) for shards in self._shards.values() for s in shards
+        )
+
+    def pump(self, workload: str | None = None) -> None:
+        """One refresh+broadcast round (synchronous — what tests and the
+        smoke path drive; ``start`` moves the same loop onto threads)."""
+        names = [workload] if workload else list(self._shards)
+        for name in names:
+            for shard in self._shards[name]:
+                shard.writer.refresh()
+                self.sync_shard(shard)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def warm(self) -> None:
+        """Bring every writer to a servable snapshot, then seed every
+        replica with its first (full) delta."""
+        self.pool.warm()
+        self.sync_all()
+
+    def start(self) -> None:
+        """Background refresh+broadcast, one thread per shard."""
+        if self._threads:
+            return
+        self._stop.clear()
+        for shards in self._shards.values():
+            for shard in shards:
+                def loop(shard=shard):
+                    while not self._stop.is_set():
+                        try:
+                            shard.writer.refresh()
+                            self.sync_shard(shard)
+                            self._shard_errors.pop(shard.name, None)
+                        except Exception as e:  # noqa: BLE001 — a dead
+                            # replica must not silently kill the shard's
+                            # refresh loop; record, back off, retry (the
+                            # error stays visible in report() until a sync
+                            # succeeds).
+                            self._shard_errors[shard.name] = (
+                                f"{type(e).__name__}: {e}"
+                            )
+                            self._stop.wait(0.5)
+                            continue
+                        if self.config.sync_interval_s:
+                            self._stop.wait(self.config.sync_interval_s)
+
+                t = threading.Thread(
+                    target=loop, name=f"fleet-{shard.name}", daemon=True
+                )
+                t.start()
+                self._threads.append(t)
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=timeout_s)
+        self._threads = []
+
+    def close(self) -> None:
+        """Stop background sync and tear down replica processes."""
+        self.stop()
+        for shards in self._shards.values():
+            for shard in shards:
+                for replica in shard.replicas:
+                    replica.close()
+
+    # -- persistence -------------------------------------------------------
+
+    def save(self, ckpt_dir: str, keep: int = 3) -> str:
+        """Persist every writer (replicas are derived state: they resync)."""
+        return self.pool.save(ckpt_dir, keep=keep)
+
+    def restore(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Restore writers warm, then full-resync every replica — the
+        restored key schedule continues exactly (writer contract), and the
+        replicas mirror the restored windows."""
+        step = self.pool.restore(ckpt_dir, step=step)
+        for shards in self._shards.values():
+            for shard in shards:
+                for replica in shard.replicas:
+                    replica.reset()
+                self.sync_shard(shard)
+        return step
+
+    # -- reporting ---------------------------------------------------------
+
+    def report(self) -> dict:
+        out = {"sync": dict(self.sync_stats), "shards": {},
+               "errors": dict(self._shard_errors)}
+        for name, shards in sorted(self._shards.items()):
+            for shard in shards:
+                out["shards"][shard.name] = {
+                    "writer_steps": shard.writer.steps_done,
+                    "replica_versions": [r.version for r in shard.replicas],
+                    "replicas": [r.stats() for r in shard.replicas],
+                }
+        return out

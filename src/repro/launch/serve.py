@@ -16,10 +16,24 @@ against the same functional computed offline from the identical snapshot
 draws. ``--workload lm`` keeps the legacy LM decoding demo (batched
 posterior-sample decoding with ``--arch`` / ``--prompt-len`` /
 ``--gen-len``; params restored from ``--ckpt-dir``).
+
+``--fleet`` serves through the sharded fleet instead (:mod:`repro.fleet`):
+writer resident ensembles per workload shard stream snapshot deltas to
+``--replicas`` read replicas, and a priority-aware router with admission
+control spreads requests across the replica lanes:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        python -m repro.launch.serve --fleet --workload bayeslr --smoke --mesh 2d
+    python -m repro.launch.serve --fleet --devices 4 --replicas 3 \
+        --replica-transport proc --workload bayeslr
+
+(``--devices N`` forces N virtual host devices before JAX initializes —
+one process group hosting the writer mesh and the replicas.)
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
@@ -69,6 +83,29 @@ def build_parser() -> argparse.ArgumentParser:
                     help="posterior pool: restore-if-present + save-on-exit; "
                          "lm: restore params (a posterior sample)")
     ap.add_argument("--seed", type=int, default=0)
+    # -- sharded serving fleet (--fleet) -----------------------------------
+    fl = ap.add_argument_group("sharded serving fleet (--fleet)")
+    fl.add_argument("--fleet", action="store_true",
+                    help="serve through the writer/replica fleet "
+                         "(repro.fleet) instead of the single pool")
+    fl.add_argument("--replicas", type=int, default=2,
+                    help="read replicas per workload shard")
+    fl.add_argument("--fleet-shards", type=int, default=1,
+                    help="independent writer shards per workload")
+    fl.add_argument("--replica-transport", default="inproc",
+                    choices=("inproc", "proc"),
+                    help="replica hosting: in-process objects or one OS "
+                         "process per replica (the scaling configuration)")
+    fl.add_argument("--mesh", default="auto", choices=("auto", "2d", "off"),
+                    help="writer ensemble sharding: 'auto' (1-d chain mesh "
+                         "when devices allow), '2d' (chains x data), 'off'")
+    fl.add_argument("--devices", type=int, default=None,
+                    help="force N virtual host devices (XLA_FLAGS) before "
+                         "JAX initializes — the fleet's process group size")
+    fl.add_argument("--max-depth", type=int, default=256,
+                    help="admission: queue depth before shedding starts")
+    fl.add_argument("--max-miss-rate", type=float, default=0.5,
+                    help="admission: predicted deadline-miss rate threshold")
     # -- legacy LM decoding flags (only read under --workload lm) ----------
     lm = ap.add_argument_group("lm decoding demo (--workload lm)")
     lm.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
@@ -238,6 +275,193 @@ def serve_posterior(args) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Sharded serving fleet (--fleet)
+# ---------------------------------------------------------------------------
+
+
+def serve_fleet(args) -> int:
+    from repro.fleet import AdmissionConfig, Fleet, FleetConfig, FleetRouter
+    from repro.serving import FreshnessPolicy, ServingConfig
+
+    smoke = args.smoke
+    dflt = lambda v, d: d if v is None else v
+    chains = dflt(args.chains, 4 if smoke else 8)
+    refresh_steps = dflt(args.refresh_steps, 16 if smoke else 64)
+    window = dflt(args.window, 32 if smoke else 128)
+    num_queries = dflt(args.queries, 120 if smoke else 400)
+    min_draws = dflt(args.min_draws, max(chains * window // 2, chains))
+    mesh = {"auto": "auto", "2d": ("chains", "data"), "off": False}[args.mesh]
+    config = FleetConfig(
+        replicas=args.replicas,
+        shards=args.fleet_shards,
+        transport=args.replica_transport,
+        mesh=mesh,
+        serving=ServingConfig(
+            num_chains=chains,
+            refresh_steps=refresh_steps,
+            window=window,
+            micro_batch=args.micro_batch,
+            max_batch=args.max_batch,
+            freshness=FreshnessPolicy(
+                max_staleness_s=args.max_staleness_s, min_draws=min_draws
+            ),
+            default_deadline_s=args.deadline_ms / 1e3,
+            seed=args.seed,
+        ),
+    )
+    print(f"fleet: workload={args.workload} shards={args.fleet_shards} "
+          f"replicas={args.replicas}/shard transport={args.replica_transport} "
+          f"mesh={args.mesh} devices={len(jax.devices())} K={chains} "
+          f"refresh={refresh_steps} window={window}")
+    fleet = Fleet(config)
+    fleet.add_workload(args.workload, smoke=smoke, seed=args.seed)
+    workload = fleet.workload(args.workload)
+    classes = sorted(workload.query_specs)
+    print(f"target: {workload.description}; request classes: {classes}")
+
+    restored = None
+    if args.ckpt_dir:
+        from repro.checkpoint.manager import latest_step
+
+        if latest_step(args.ckpt_dir) is not None:
+            restored = fleet.restore(args.ckpt_dir)
+            print(f"restored warm fleet from {args.ckpt_dir} (step {restored})")
+
+    t0 = time.perf_counter()
+    fleet.warm()
+    warm_s = time.perf_counter() - t0
+    shard0 = fleet.shards(args.workload)[0]
+    print(f"warm in {warm_s:.1f}s: writers at "
+          f"{[s.writer.steps_done for s in fleet.shards(args.workload)]} "
+          f"transitions/chain, replicas synced to "
+          f"{[r.version for r in shard0.replicas]}")
+
+    # The default class outranks the rest — under overload the admission
+    # policy sheds the low classes first.
+    priorities = {cls: 0 for cls in classes}
+    priorities[workload.default_class] = 1
+    router = FleetRouter(
+        fleet,
+        priorities=priorities,
+        admission=AdmissionConfig(
+            max_depth=args.max_depth, max_miss_rate=args.max_miss_rate
+        ),
+        max_batch=args.max_batch,
+        default_deadline_s=args.deadline_ms / 1e3,
+    )
+    # Compile every replica lane's evaluators outside the measured window.
+    wkey = jax.random.key(args.seed + 2)
+    for shard in fleet.shards(args.workload):
+        for replica in shard.replicas:
+            for cls in classes:
+                wkey, sub = jax.random.split(wkey)
+                spec = workload.query_specs[cls]
+                replica.serve(spec, cls, spec.make_queries(sub, args.rows_per_query))
+    if args.background:
+        fleet.start()
+        router.start_workers()
+
+    qkey = jax.random.key(args.seed + 1)
+    burst = max(2, args.max_batch // 2)
+    t0 = time.perf_counter()
+    served = 0
+    pending = []
+    for i in range(0, num_queries, burst):
+        take = min(burst, num_queries - i)
+        for j in range(take):
+            cls = classes[(i + j) % len(classes)]
+            qkey, sub = jax.random.split(qkey)
+            xs = workload.query_specs[cls].make_queries(sub, args.rows_per_query)
+            pending.append(router.submit(args.workload, cls, xs))
+        if args.background:
+            # done.wait, not result(): a shed/errored request must pace the
+            # burst loop, not crash it (shedding is the feature under test).
+            pending[-1].done.wait(timeout=60.0)
+        else:
+            served += len(router.drain())
+            if (i // burst) % 8 == 7:
+                fleet.pump(args.workload)  # stream fresh deltas mid-serve
+    if args.background:
+        for req in pending:
+            req.done.wait(timeout=60.0)
+        # Shed requests complete instantly with error="shed: ..." — they
+        # must not inflate the served count (the sync path's drain() never
+        # sees them, so both modes now agree).
+        served = len([
+            r for r in pending
+            if r.done.is_set() and not (r.error or "").startswith("shed")
+        ])
+    wall = time.perf_counter() - t0
+    report = router.slo_report()
+
+    print(f"\nserved {served} requests ({args.rows_per_query} rows each) in "
+          f"{wall:.2f}s ({served / max(wall, 1e-9):.0f} req/s) across "
+          f"{args.fleet_shards * args.replicas} replica lane(s)")
+    for cls, entry in report["classes"].items():
+        if not entry.get("count"):
+            print(f"  {cls:28s} admitted={entry.get('admitted', 0)} "
+                  f"shed={entry.get('shed', 0)} (nothing served)")
+            continue
+        print(f"  {cls:28s} p50={entry['p50_ms']:7.2f}ms "
+              f"p95={entry['p95_ms']:7.2f}ms p99={entry['p99_ms']:7.2f}ms "
+              f"deadline_hit={entry['deadline_hit_rate']:.1%} "
+              f"prio={entry['priority']} admitted={entry['admitted']} "
+              f"shed={entry['shed']} "
+              f"staleness~{entry.get('staleness_mean_s', float('nan')):.3f}s")
+    adm = report["admission"]
+    print(f"  admission: depth={adm['depth']} "
+          f"predicted_miss={adm['predicted_miss_rate']:.3f} "
+          f"shed_floor={adm['shed_floor']} total_shed={report['shed']}")
+    sync = fleet.sync_stats
+    ratio = sync["delta_wire_bytes"] / max(sync["full_wire_bytes"], 1)
+    print(f"  delta stream: {sync['syncs']} syncs, "
+          f"{sync['delta_wire_bytes']} delta bytes vs "
+          f"{sync['full_wire_bytes']} full-snapshot bytes "
+          f"({ratio:.2f}x)")
+
+    if args.background:
+        router.stop_workers()
+        fleet.stop()
+
+    # -- parity: a replica's answer vs the writer's from the same version --
+    fleet.sync_all()  # replicas now mirror the writers exactly
+    spec = workload.query_specs[workload.default_class]
+    qkey, sub = jax.random.split(qkey)
+    xs = spec.make_queries(sub, 16)
+    w_vals, w_snap = shard0.writer.query(spec, xs)
+    r_vals, _ = shard0.replicas[0].serve(spec, workload.default_class, xs)
+    err = float(np.max(np.abs(np.asarray(w_vals) - np.asarray(r_vals)))) if len(xs) else 0.0
+    if not np.array_equal(np.asarray(w_vals), np.asarray(r_vals)):
+        print(f"PARITY FAIL: replica vs writer max|delta|={err:.3g} "
+              f"(writer v{w_snap.steps_done}, replica v{shard0.replicas[0].version})")
+        fleet.close()
+        return 1
+    parity = "ok(bitexact)"
+    print(f"  parity: replica {workload.default_class} == writer from the "
+          f"same delta-streamed window ({parity})")
+
+    if args.ckpt_dir:
+        path = fleet.save(args.ckpt_dir)
+        print(f"saved warm fleet to {path}")
+    fleet.close()
+
+    first = next((e for e in report["classes"].values() if e.get("count")), None)
+    if first is None or report["errors"] or (smoke and served < 100):
+        # The smoke floor gates BEFORE SERVE_OK: CI greps the log, so a
+        # failed smoke must never have printed the success line.
+        print(f"SERVE_FAIL workload={args.workload} fleet=1 "
+              f"errors={report['errors']} served={served}")
+        return 1
+    print(f"SERVE_OK workload={args.workload} fleet=1 "
+          f"shards={args.fleet_shards} replicas={args.replicas} "
+          f"queries={served} p50_ms={first['p50_ms']:.2f} "
+          f"p95_ms={first['p95_ms']:.2f} "
+          f"deadline_hit={first['deadline_hit_rate']:.3f} "
+          f"shed={report['shed']} delta_ratio={ratio:.2f} parity={parity}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
 # Legacy LM decoding demo (--workload lm)
 # ---------------------------------------------------------------------------
 
@@ -298,6 +522,17 @@ _LM_ONLY_FLAGS = ("arch", "reduced", "batch", "prompt_len", "gen_len",
 def main(argv=None) -> None:
     parser = build_parser()
     args = parser.parse_args(argv)
+    if args.fleet and args.workload == "lm":
+        parser.error("--fleet serves posterior workloads, not the lm demo")
+    if args.fleet and args.devices:
+        # Must land before JAX initializes its backends (importing jax is
+        # fine; creating the first array is not) — hence a fresh
+        # `python -m repro.launch.serve` process, not a long-lived session.
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={args.devices}".strip()
+            )
     if args.workload != "lm":
         # Guard legacy invocations: the pre-serving CLI was LM-only and had
         # no --workload flag, so `serve --arch ... --batch 8` must not be
@@ -311,6 +546,8 @@ def main(argv=None) -> None:
             )
     if args.workload == "lm":
         code = serve_lm(args)
+    elif args.fleet:
+        code = serve_fleet(args)
     else:
         code = serve_posterior(args)
     if code:

@@ -7,12 +7,18 @@ sections — stored structure-of-arrays inside a ``Plate`` — are scored by one
 vectorized log-density evaluation per mini-batch (DESIGN.md §3).
 
 Emission goes through :func:`repro.core.target_builder.build_target`: when
-the plate's local score matches a registered kernel family (currently the
-``logit`` observation factor — a ``BernoulliLogits`` node fed by an inner
-product of a plate-constant feature matrix with the target variable), the
-compiled target carries the family's fused ``log_local_ensemble``, so the
-program gets the multi-chain Pallas path for free; otherwise the generic
-graph-evaluated target is emitted unchanged.
+the plate's local score matches a registered kernel family — the ``logit``
+observation factor (a ``BernoulliLogits`` node fed by an inner product of a
+plate-constant feature matrix with the target variable) or the
+``gaussian_ar1`` state-space plate (Normal transition factors
+``x_t ~ N(phi * x_{t-1}, sigma)`` with the target variable as the AR
+coefficient) — the compiled target carries the family's fused
+``log_local_ensemble``, so the program gets the multi-chain Pallas path for
+free; otherwise the generic graph-evaluated target is emitted unchanged.
+Every match is double-gated: a structural check on the scaffold plus a
+numeric probe of the opaque deterministic node, so a near-miss (e.g. a
+clipped inner product or saturating AR mean) compiles to the generic path
+instead of silently changing the model.
 
 Restrictions enforced here mirror the paper's Sec. 3.1 assumptions:
 T(rho, v) = ∅ and all local sections attach through a single border node.
@@ -147,6 +153,76 @@ def _match_logit_family(ev: _Evaluator, v: Node):
     return None
 
 
+def _match_gaussian_ar1_family(ev: _Evaluator, v: Node):
+    """Does the plate's local score match the ``gaussian_ar1`` state-space
+    family?  The target shape is an AR(1) transition plate
+
+        x_t ~ Normal(phi * x_{t-1}, sigma),   t in plate,
+
+    with v the (scalar) AR coefficient phi: exactly one local scoring node
+    with a ``Normal`` distribution whose scale is a plate-less positive
+    constant, fed by exactly one plate-local deterministic node whose parents
+    are a plate-constant lag series and v. As with the logit gate, the
+    deterministic function is opaque, so its ``phi * x_prev`` form is
+    verified numerically on random probe coefficients (including a
+    large-magnitude probe that rules out saturating/clipped means).
+
+    Returns ``(data, params_fn)`` for
+    :func:`repro.core.target_builder.build_target` — ``data = (x_t, x_prev)``
+    and ``params_fn`` mapping theta to the family's ``(phi, sigma^2)`` — or
+    None.
+    """
+    if len(ev.score_local) != 1 or len(ev.det_local) != 1 or ev.det_global:
+        return None
+    x_node = ev.score_local[0]
+    if not isinstance(x_node.dist, dists.Normal):
+        return None
+    if len(x_node.parents) != 2 or x_node.parents[0] is not ev.det_local[0]:
+        return None
+    scale_node = x_node.parents[1]
+    if scale_node.kind != "constant" or scale_node.plate is not None:
+        return None
+    sigma = np.asarray(scale_node.value)
+    if sigma.ndim != 0 or not sigma > 0:
+        return None
+    z = ev.det_local[0]
+    if len(z.parents) != 2:
+        return None
+    pa, pb = z.parents
+    candidates = []
+    if pa.kind == "constant" and pa.plate is not None and pb is v:
+        candidates.append((pa, lambda xx, ph: z.fn(xx, ph)))
+    if pb.kind == "constant" and pb.plate is not None and pa is v:
+        candidates.append((pb, lambda xx, ph: z.fn(ph, xx)))
+    for xp_node, apply_fn in candidates:
+        xp = jnp.asarray(xp_node.value)
+        xt = jnp.asarray(x_node.value)
+        phi0 = jnp.asarray(v.value)
+        if xp.ndim != 1 or xt.shape != xp.shape or phi0.shape != ():
+            continue
+        probe_rows = xp[: min(32, xp.shape[0])]
+        ok = True
+        for seed, scale in ((0, 1.0), (1, 1.0), (2, 1e3)):
+            phi_probe = scale * jax.random.normal(jax.random.key(seed), (), phi0.dtype)
+            got = np.asarray(apply_fn(probe_rows, phi_probe))
+            want = np.asarray(probe_rows * phi_probe)
+            if got.shape != want.shape or not np.allclose(got, want, rtol=1e-5,
+                                                          atol=1e-6 * max(scale, 1.0)):
+                ok = False
+                break
+        if ok:
+            s2 = jnp.asarray(float(sigma) ** 2, jnp.float32)
+
+            def params_fn(theta):
+                # The fused kernels take per-chain (phi, s2) of matching
+                # shape: broadcast the constant variance to theta's (possibly
+                # (K,)-batched) shape.
+                return theta, jnp.broadcast_to(s2, jnp.shape(theta))
+
+            return (xt, xp), params_fn
+    return None
+
+
 def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
     """Scaffold → border-node partition → kernel-family detection →
     :func:`repro.core.target_builder.build_target`."""
@@ -172,9 +248,16 @@ def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
         idx = jnp.arange(n_sections, dtype=jnp.int32)
         return ev.global_score(theta) + ev.local_score(theta, idx).sum()
 
-    family_data = _match_logit_family(ev, v)
+    family, family_data, params_fn = None, None, None
+    logit_data = _match_logit_family(ev, v)
+    if logit_data is not None:
+        family, family_data = "logit", logit_data
+    else:
+        ar1 = _match_gaussian_ar1_family(ev, v)
+        if ar1 is not None:
+            family, (family_data, params_fn) = "gaussian_ar1", ar1
     return build_target(
-        "logit" if family_data is not None else None,
+        family,
         family_data,
         n_sections,
         log_global=log_global,
@@ -183,4 +266,5 @@ def compile_partitioned_target(trace: Trace, v: Node) -> PartitionedTarget:
         # family contributes the fused (K, m) log_local_ensemble route.
         log_local=log_local,
         log_density=log_density,
+        params_fn=params_fn,
     )

@@ -8,7 +8,13 @@ The serving layer over the multi-chain engine (see docs/ARCHITECTURE.md):
 
 Front-end: ``python -m repro.launch.serve --workload bayeslr|stochvol|...``.
 """
-from .pool import EnsemblePool, FreshnessPolicy, ServingConfig, snapshot_ess
+from .pool import (
+    EnsemblePool,
+    FreshnessPolicy,
+    ServingConfig,
+    snapshot_ess,
+    snapshot_rhat,
+)
 from .queue import Request, RequestQueue
 from .resident import QuerySpec, ResidentEnsemble, Snapshot
 from .workloads import (
@@ -34,4 +40,5 @@ __all__ = [
     "register_serving_workload",
     "serving_workloads",
     "snapshot_ess",
+    "snapshot_rhat",
 ]

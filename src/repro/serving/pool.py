@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 from ..checkpoint import manager as ckpt
-from ..core.stats import multichain_ess
+from ..core.stats import multichain_ess, split_rhat
 from .resident import QuerySpec, ResidentEnsemble, Snapshot
 from .workloads import ServingWorkload, build_serving_workload
 
@@ -39,12 +39,19 @@ class FreshnessPolicy:
     draws (K × window depth);
     ``min_ess``: optional floor on the window's total effective sample
     size, computed on a scalar functional of the draws (the first
-    component of the first leaf).
+    component of the first leaf);
+    ``max_rhat``: optional online-convergence gate — the rolling window's
+    cross-chain split-R̂ (:func:`repro.core.stats.split_rhat` on the same
+    scalar functional) must sit at or below this before the snapshot
+    serves. A window too short to split (fewer than 4 draws per chain)
+    counts as stale, so the gate forces refreshes until the resident has
+    both depth and mixing.
     """
 
     max_staleness_s: float = 30.0
     min_draws: int = 64
     min_ess: float | None = None
+    max_rhat: float | None = None
 
     def stale_reason(self, snap: Snapshot) -> str | None:
         """None if servable, else a human-readable refusal."""
@@ -58,6 +65,12 @@ class FreshnessPolicy:
             ess = snapshot_ess(snap)
             if ess < self.min_ess:
                 return f"window ESS {ess:.1f} < {self.min_ess}"
+        if self.max_rhat is not None:
+            rhat = snapshot_rhat(snap)
+            if rhat is None:
+                return "window too short for split-R-hat (need >= 4 draws/chain)"
+            if not rhat <= self.max_rhat:  # NaN R-hat must read as stale
+                return f"window R-hat {rhat:.4f} > {self.max_rhat}"
         return None
 
     def is_fresh(self, snap: Snapshot) -> bool:
@@ -71,6 +84,19 @@ def snapshot_ess(snap: Snapshot) -> float:
     if w < 4:
         return 0.0
     return multichain_ess(leaf.reshape(k, w, -1)[:, :, 0])
+
+
+def snapshot_rhat(snap: Snapshot) -> float | None:
+    """Rolling-window split-R̂ of the same scalar trace ``snapshot_ess``
+    uses (the first component of the first draws leaf), or None when the
+    window is too short to split into half-chains."""
+    if snap.draws is None:
+        return None
+    leaf = np.asarray(jax.tree.leaves(snap.draws)[0], np.float64)
+    k, w = leaf.shape[:2]
+    if w < 4:
+        return None
+    return float(split_rhat(leaf.reshape(k, w, -1)[:, :, 0]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,9 +127,15 @@ class EnsemblePool:
     # -- registration ------------------------------------------------------
 
     def add_workload(
-        self, workload: str | ServingWorkload, **build_kw
+        self, workload: str | ServingWorkload, *, key=None, **build_kw
     ) -> ResidentEnsemble:
-        """Build (or adopt) a workload and give it a resident ensemble."""
+        """Build (or adopt) a workload and give it a resident ensemble.
+
+        ``key`` overrides the resident's base chain key (default
+        ``jax.random.key(config.seed)``) — the hook the fleet layer uses to
+        give each shard of one workload an independent chain trajectory
+        over the same data.
+        """
         cfg = self.config
         if isinstance(workload, str):
             build_kw.setdefault("num_chains", cfg.num_chains)
@@ -115,7 +147,7 @@ class EnsemblePool:
         resident = ResidentEnsemble(
             workload.ensemble,
             workload.theta0,
-            key=jax.random.key(cfg.seed),
+            key=jax.random.key(cfg.seed) if key is None else key,
             window=cfg.window,
             refresh_steps=cfg.refresh_steps,
             micro_batch=cfg.micro_batch,

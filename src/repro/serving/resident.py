@@ -110,6 +110,98 @@ def _window_append(window, block, limit: int):
     return jax.tree.map(lambda a: a[:, -limit:], merged)
 
 
+class SnapshotEvaluator:
+    """Micro-batched posterior-functional evaluation against snapshots.
+
+    Owns the two caches the query path lives on: per-:class:`QuerySpec`
+    jitted evaluators, and a per-snapshot-generation device copy of the
+    flattened (S, ...) window so a batch of queries against one snapshot
+    uploads the draws once. Rows are processed in fixed ``micro_batch``-row
+    chunks (the last chunk padded), so the compiled evaluation shape never
+    depends on the request batch — the property that makes queue batching
+    result-transparent.
+
+    Shared by :class:`ResidentEnsemble` (writer-side queries) and the
+    fleet's read replicas (:mod:`repro.fleet.replica`), which answer from a
+    delta-streamed copy of the same window.
+    """
+
+    def __init__(self, micro_batch: int = 64):
+        if micro_batch < 1:
+            raise ValueError(f"micro_batch must be >= 1, got {micro_batch}")
+        self.micro_batch = int(micro_batch)
+        self._eval_cache: dict[Any, Any] = {}
+        self._flat_cache: tuple[Any, Any] | None = None
+
+    def invalidate(self) -> None:
+        """Drop the device-side window cache (call when the window is
+        replaced out-of-band, e.g. on checkpoint restore or replica resync —
+        a stale cache could otherwise collide on the generation key)."""
+        self._flat_cache = None
+
+    def _evaluator(self, spec: QuerySpec):
+        # "mean" reduces over the draw axis on device: only (mb,) per chunk
+        # crosses to the host instead of the (S, mb) per-draw matrix — the
+        # matrix is memory-bound numpy work that would otherwise dominate a
+        # replica's serve path. Per-row results are unchanged by padding or
+        # chunking (the compiled reduction shape is fixed at (S, mb)), so
+        # the exact-equality batching contracts hold as before.
+        reduce_mean = spec.aggregate == "mean"
+        cache_key = (spec.fn, reduce_mean)
+        fn = self._eval_cache.get(cache_key)
+        if fn is None:
+            if reduce_mean:
+                fn = jax.jit(
+                    lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(
+                        draws, xs
+                    ).mean(axis=0)
+                )
+            else:
+                fn = jax.jit(
+                    lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(draws, xs)
+                )
+            self._eval_cache[cache_key] = fn
+        return fn
+
+    def evaluate(self, spec: QuerySpec, snap: Snapshot, xs) -> np.ndarray:
+        """Evaluate ``spec`` over every draw of ``snap`` on request rows
+        ``xs``; returns the aggregated (B,) values."""
+        xs = np.asarray(xs)
+        if xs.ndim == 0:
+            xs = xs[None]
+        if xs.shape[0] == 0:
+            return np.zeros((0,), np.float64)
+        gen = (snap.steps_done, snap.num_draws)
+        cached = self._flat_cache
+        if cached is not None and cached[0] == gen:
+            flat = cached[1]
+        else:
+            flat = jax.tree.map(
+                lambda a: jnp.asarray(a.reshape((-1,) + a.shape[2:])), snap.draws
+            )  # (S, ...) with S = K * W
+            self._flat_cache = (gen, flat)
+        evaluator = self._evaluator(spec)
+        b, mb = xs.shape[0], self.micro_batch
+        mean_path = spec.aggregate == "mean"
+        vals = []
+        for start in range(0, b, mb):
+            chunk = xs[start:start + mb]
+            pad = mb - chunk.shape[0]
+            if pad:
+                chunk = np.concatenate([chunk, np.repeat(chunk[-1:], pad, axis=0)])
+            v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (S, mb) | (mb,)
+            keep = slice(None, mb - pad) if pad else slice(None)
+            vals.append(v[keep] if mean_path else v[:, keep])
+        if mean_path:
+            return np.concatenate(vals, axis=0).astype(np.float64)
+        per_draw = np.concatenate(vals, axis=1)  # (S, B)
+        # quantile: xs[b] is the level for row b
+        levels = np.clip(np.asarray(xs, np.float64).reshape(b, -1)[:, 0], 0.0, 1.0)
+        return np.array(
+            [np.quantile(per_draw[:, i], levels[i]) for i in range(b)]
+        )
+
+
 class ResidentEnsemble:
     """A warm :class:`~repro.core.ensemble.ChainEnsemble` serving queries.
 
@@ -148,8 +240,7 @@ class ResidentEnsemble:
         # long MCMC run happens outside _lock and never blocks snapshots.
         self._lock = threading.RLock()
         self._refresh_lock = threading.RLock()
-        self._eval_cache: dict[Any, Any] = {}
-        self._flat_cache: tuple[Any, Any] | None = None
+        self._evaluator = SnapshotEvaluator(micro_batch)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
@@ -220,24 +311,14 @@ class ResidentEnsemble:
 
     # -- queries -----------------------------------------------------------
 
-    def _evaluator(self, spec: QuerySpec):
-        fn = self._eval_cache.get(spec.fn)
-        if fn is None:
-            fn = jax.jit(
-                lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(draws, xs)
-            )
-            self._eval_cache[spec.fn] = fn
-        return fn
-
     def query(
         self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
     ) -> tuple[np.ndarray, Snapshot]:
         """Evaluate ``spec`` on request rows ``xs`` against a snapshot.
 
-        Returns ``(values (B,), snapshot_used)``. Rows are processed in
-        fixed ``micro_batch``-row chunks (the last chunk padded), so the
-        compiled evaluation shape never depends on the request batch — the
-        property that makes queue batching result-transparent.
+        Returns ``(values (B,), snapshot_used)``; the evaluation itself is
+        the shared :class:`SnapshotEvaluator` (fixed-shape micro-batching,
+        per-snapshot device cache).
         """
         snap = snapshot if snapshot is not None else self.snapshot()
         if snap.draws is None:
@@ -245,41 +326,7 @@ class ResidentEnsemble:
                 f"resident {self.name!r} has no draws yet; refresh() first "
                 "(or serve through EnsemblePool, which enforces freshness)"
             )
-        xs = np.asarray(xs)
-        if xs.ndim == 0:
-            xs = xs[None]
-        if xs.shape[0] == 0:
-            return np.zeros((0,), np.float64), snap
-        # Device-resident flattened draws, cached per snapshot generation so
-        # a batch of queries against one snapshot uploads the window once.
-        gen = (snap.steps_done, snap.num_draws)
-        cached = self._flat_cache
-        if cached is not None and cached[0] == gen:
-            flat = cached[1]
-        else:
-            flat = jax.tree.map(
-                lambda a: jnp.asarray(a.reshape((-1,) + a.shape[2:])), snap.draws
-            )  # (S, ...) with S = K * W
-            self._flat_cache = (gen, flat)
-        evaluator = self._evaluator(spec)
-        b, mb = xs.shape[0], self.micro_batch
-        vals = []
-        for start in range(0, b, mb):
-            chunk = xs[start:start + mb]
-            pad = mb - chunk.shape[0]
-            if pad:
-                chunk = np.concatenate([chunk, np.repeat(chunk[-1:], pad, axis=0)])
-            v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (S, mb)
-            vals.append(v[:, : mb - pad] if pad else v)
-        per_draw = np.concatenate(vals, axis=1)  # (S, B)
-        if spec.aggregate == "mean":
-            out = per_draw.mean(axis=0)
-        else:  # quantile: xs[b] is the level for row b
-            levels = np.clip(np.asarray(xs, np.float64).reshape(b, -1)[:, 0], 0.0, 1.0)
-            out = np.array(
-                [np.quantile(per_draw[:, i], levels[i]) for i in range(b)]
-            )
-        return out, snap
+        return self._evaluator.evaluate(spec, snap, xs), snap
 
     # -- background refresh ------------------------------------------------
 
@@ -391,4 +438,4 @@ class ResidentEnsemble:
             # The restored window replaces whatever was resident; a stale
             # device-side cache could otherwise collide on the
             # (steps_done, num_draws) generation key and serve old draws.
-            self._flat_cache = None
+            self._evaluator.invalidate()

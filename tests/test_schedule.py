@@ -420,3 +420,74 @@ def test_adapt_proposal_schedule_config_validation():
         ScheduleConfig(scale_min=0.0)
     with pytest.raises(ValueError, match="accept_target"):
         ScheduleConfig(accept_target=1.5)
+
+
+def test_adapt_gain_decay_inert_without_proposal_adaptation():
+    """The Robbins–Monro knob must not leak when proposal adaptation is off:
+    whatever decay is set, the controller (including sigma_scale) is
+    bit-for-bit the default controller."""
+    base = ScheduleConfig()
+    decayed = ScheduleConfig(adapt_gain_decay=0.7)
+    assert not base.adapt_proposal and not decayed.adapt_proposal
+    info = _info(accepted=True, rounds=4, n_evaluated=950)
+    st_a, _ = _drive(base, info, 40, n=1000)
+    st_b, _ = _drive(decayed, info, 40, n=1000)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        st_a, st_b,
+    )
+
+
+def test_adapt_gain_decay_shrinks_late_updates():
+    """With decay on, per-transition log-scale moves must shrink as t grows
+    (Robbins–Monro: the t-th gain is proposal_gain * (1+t)^-decay)."""
+    sched = ScheduleConfig(adapt_proposal=True, proposal_gain=0.5,
+                           adapt_gain_decay=1.0, scale_max=1e6)
+    cfg = CFG
+    n = 1000
+    buckets = sched.buckets_for(cfg, n)
+    floor = sched.epsilon_floor(cfg)
+    info = _info(accepted=True)  # constant acceptance pressure upward
+    st = controller_init(sched, cfg, n)
+    moves = []
+    for _ in range(30):
+        prev = float(st.sigma_scale)
+        st = controller_update(st, info, sched, buckets, n, floor)
+        moves.append(abs(np.log(float(st.sigma_scale)) - np.log(prev)))
+    # early moves strictly dominate late moves once the acceptance EMA has
+    # saturated (first few steps mix EMA warm-up with the decay)
+    assert np.mean(moves[5:10]) > np.mean(moves[25:30]) > 0.0
+    # and the t-th gain itself matches the Robbins–Monro schedule
+    sched_fast = ScheduleConfig(adapt_proposal=True, proposal_gain=0.5,
+                                adapt_gain_decay=0.0, scale_max=1e6)
+    st_const, _ = _drive(sched_fast, info, 30)
+    assert float(st.sigma_scale) < float(st_const.sigma_scale)
+
+
+def test_adapt_gain_decay_run_stops_adapting(gaussian_target_factory):
+    """Flag-on end-to-end: with decay=1 the sigma_scale trajectory converges
+    (late-window drift well below early-window drift)."""
+    target, pm, _ = gaussian_target_factory(n=600, seed=1)
+    # scale_max far above where the run lands: the clamp must not mask the
+    # decay (a clamped scale has zero drift whatever the gain does)
+    sched = ScheduleConfig(adapt_proposal=True, proposal_gain=0.5,
+                           adapt_gain_decay=1.0, scale_max=50.0)
+    ens = ChainEnsemble(target, RandomWalk(1e-3), 2, config=CFG,
+                        stepping="masked", schedule=sched)
+    state = ens.init(jnp.zeros(()) + pm)
+    scales = []
+    key = jax.random.key(13)
+    for i in range(6):
+        key, sub = jax.random.split(key)
+        state, _, _ = ens.run(sub, state, 30)
+        scales.append(np.asarray(state.controller.sigma_scale).copy())
+    early_drift = np.abs(np.log(scales[1]) - np.log(scales[0])).max()
+    late_drift = np.abs(np.log(scales[-1]) - np.log(scales[-2])).max()
+    assert late_drift < early_drift
+
+
+def test_adapt_gain_decay_validation():
+    with pytest.raises(ValueError, match="adapt_gain_decay"):
+        ScheduleConfig(adapt_gain_decay=1.5)
+    with pytest.raises(ValueError, match="adapt_gain_decay"):
+        ScheduleConfig(adapt_gain_decay=-0.1)

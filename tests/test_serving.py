@@ -381,3 +381,59 @@ def test_query_before_refresh_raises():
     resident = ResidentEnsemble(wl.ensemble, wl.theta0, key=jax.random.key(0))
     with pytest.raises(RuntimeError, match="no draws yet"):
         resident.query(wl.query_specs["predictive"], np.zeros((2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# Online freshness from rolling R-hat (FreshnessPolicy.max_rhat)
+# ---------------------------------------------------------------------------
+
+
+def test_max_rhat_gate_admits_mixed_window():
+    """A generous R-hat ceiling on a well-mixed conjugate posterior admits
+    the snapshot after normal warm-up, and snapshot_rhat reports a finite
+    value computed from the rolling window."""
+    from repro.serving import snapshot_rhat
+
+    pool = _tiny_pool(min_draws=8, max_rhat=5.0)
+    snap = pool.ensure_fresh("bayeslr")
+    rhat = snapshot_rhat(snap)
+    assert rhat is not None and np.isfinite(rhat)
+    assert pool.config.freshness.stale_reason(snap) is None
+
+
+def test_max_rhat_gate_refuses_short_window():
+    """Fewer than 4 draws per chain cannot be split into half-chains; the
+    gate must read that as stale (and say why)."""
+    from repro.serving import FreshnessPolicy
+
+    pool = _tiny_pool(min_draws=2, max_rhat=1.5)
+    resident = pool.resident("bayeslr")
+    resident.refresh(2)  # window depth 2 < 4
+    reason = pool.config.freshness.stale_reason(resident.snapshot())
+    assert reason is not None and "split-R-hat" in reason
+
+
+def test_max_rhat_gate_forces_refresh_until_mixed():
+    """ensure_fresh keeps refreshing while the window's R-hat sits above the
+    ceiling; the admitted snapshot satisfies it."""
+    from repro.serving import snapshot_rhat
+
+    pool = _tiny_pool(min_draws=8, max_rhat=1.8)
+    snap = pool.ensure_fresh("bayeslr")
+    assert snapshot_rhat(snap) <= 1.8
+
+
+def test_max_rhat_gate_rejects_unmixed_window():
+    """Disjoint per-chain windows (hand-built) must be refused by the gate."""
+    from repro.serving import FreshnessPolicy
+    from repro.serving.resident import Snapshot
+
+    k, w = 2, 8
+    draws = np.concatenate(
+        [np.zeros((1, w, 3)), 10.0 + np.zeros((1, w, 3))], axis=0
+    ) + 0.01 * np.random.default_rng(0).standard_normal((k, w, 3))
+    snap = Snapshot(draws=draws, num_draws=k * w, steps_done=w,
+                    staleness_s=0.0, summary={}, created_at=0.0)
+    policy = FreshnessPolicy(max_staleness_s=1e9, min_draws=1, max_rhat=1.1)
+    reason = policy.stale_reason(snap)
+    assert reason is not None and "R-hat" in reason
