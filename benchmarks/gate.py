@@ -1,0 +1,190 @@
+"""CI perf-regression gate over the machine-readable bench artifacts.
+
+Diffs this run's ``BENCH_<name>.json`` files (multichain, serving, fleet,
+roofline — see ``multichain_bench.bench_json_path``) against the previous
+CI run's artifact directory and fails on any metric that regressed by more
+than the threshold (default 15%, ``--threshold`` / ``$REPRO_GATE_THRESHOLD``):
+req/s down, latency tails up, steady-state transition throughput down.
+
+    python -m benchmarks.gate --previous prev-artifacts --current bench-artifacts
+
+Records are matched run-over-run on their identifying fields (bench name +
+``kind``/``engine``/shape fields); metrics are compared per direction —
+``qps``/``tps_*`` must not drop, ``p95_ms``/``us_per_call`` must not rise.
+A machine-readable verdict lands in ``<current>/GATE_verdict.json``; the
+process exits nonzero iff any comparison regressed. A missing previous
+artifact passes with ``status: "no_baseline"`` (first run, expired cache)
+unless ``--fail-on-missing`` is set.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BENCHES = ("multichain", "serving", "fleet", "roofline")
+
+# Metric -> direction. HIGHER: a drop beyond the threshold regresses.
+# LOWER: a rise beyond the threshold regresses. Anything not listed is
+# informational and never gates.
+HIGHER, LOWER = "higher", "lower"
+METRIC_DIRECTIONS = {
+    "qps": HIGHER,
+    "tps_e2e": HIGHER,
+    "tps_steady": HIGHER,
+    "transitions_per_sec": HIGHER,
+    "tps_mesh_2d": HIGHER,
+    "gflops": HIGHER,
+    "p50_ms": LOWER,
+    "p95_ms": LOWER,
+    "p99_ms": LOWER,
+    "us_per_call": LOWER,
+    "ratio": LOWER,  # delta-stream wire bytes vs full-snapshot bytes
+}
+
+# Fields that identify a record across runs (never compared as metrics).
+ID_FIELDS = ("kind", "engine", "name", "kernel", "workload", "transport",
+             "path", "backend", "shape", "N", "K", "steps", "replicas",
+             "queries", "rows_per_query", "max_batch", "window", "mode")
+
+
+def record_key(bench: str, rec: dict) -> str:
+    parts = [bench] + [
+        f"{f}={rec[f]}" for f in ID_FIELDS if rec.get(f) is not None
+    ]
+    return "/".join(parts)
+
+
+def load_records(art_dir: str, bench: str) -> dict[str, dict] | None:
+    """``{record_key: record}`` from one artifact file, or None when the
+    file is absent (bench not run / first CI run)."""
+    path = os.path.join(art_dir, f"BENCH_{bench}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        payload = json.load(f)
+    out: dict[str, dict] = {}
+    for rec in payload.get("records", []):
+        key = record_key(bench, rec)
+        if key in out:  # duplicate id fields: keep first, flag neither
+            continue
+        out[key] = rec
+    return out
+
+
+def compare(prev: dict, cur: dict, key: str, threshold: float) -> list[dict]:
+    """Per-metric comparisons for one matched record pair."""
+    rows = []
+    for metric, direction in METRIC_DIRECTIONS.items():
+        p, c = prev.get(metric), cur.get(metric)
+        if not isinstance(p, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        if abs(p) < 1e-12:  # degenerate baseline: nothing meaningful to diff
+            continue
+        if direction == HIGHER:
+            change = (p - c) / abs(p)  # fraction LOST
+        else:
+            change = (c - p) / abs(p)  # fraction GAINED (latency up = bad)
+        rows.append({
+            "record": key,
+            "metric": metric,
+            "direction": direction,
+            "previous": p,
+            "current": c,
+            "regression": change,
+            "regressed": change > threshold,
+        })
+    return rows
+
+
+def run_gate(previous_dir: str, current_dir: str, *,
+             threshold: float = 0.15,
+             benches: tuple[str, ...] = BENCHES,
+             fail_on_missing: bool = False) -> dict:
+    """The full verdict dict (``status`` in pass/fail/no_baseline)."""
+    comparisons: list[dict] = []
+    missing: list[dict] = []
+    seen_baseline = False
+    for bench in benches:
+        cur = load_records(current_dir, bench)
+        prev = load_records(previous_dir, bench)
+        if cur is None:
+            missing.append({"bench": bench, "side": "current"})
+            continue
+        if prev is None:
+            missing.append({"bench": bench, "side": "previous"})
+            continue
+        seen_baseline = True
+        for key, cur_rec in cur.items():
+            prev_rec = prev.get(key)
+            if prev_rec is None:
+                missing.append({"bench": bench, "side": "previous",
+                                "record": key})
+                continue
+            comparisons.extend(compare(prev_rec, cur_rec, key, threshold))
+    regressions = [c for c in comparisons if c["regressed"]]
+    if regressions:
+        status = "fail"
+    elif not seen_baseline:
+        status = "fail" if fail_on_missing else "no_baseline"
+    else:
+        status = "fail" if (fail_on_missing and missing) else "pass"
+    return {
+        "status": status,
+        "threshold": threshold,
+        "benches": list(benches),
+        "checked": len(comparisons),
+        "regressions": regressions,
+        "missing": missing,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--previous", required=True,
+                    help="previous run's bench artifact directory")
+    ap.add_argument("--current", default=os.environ.get("REPRO_BENCH_DIR", "."),
+                    help="this run's bench artifact directory "
+                         "(default: $REPRO_BENCH_DIR, else cwd)")
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("REPRO_GATE_THRESHOLD", 0.15)),
+                    help="regression fraction that fails the gate "
+                         "(default 0.15 = 15%%)")
+    ap.add_argument("--benches", default=",".join(BENCHES),
+                    help="comma list of bench artifacts to diff")
+    ap.add_argument("--out", default=None,
+                    help="verdict JSON path (default <current>/GATE_verdict.json)")
+    ap.add_argument("--fail-on-missing", action="store_true",
+                    help="also fail when a baseline artifact or record is "
+                         "absent (default: pass with status no_baseline)")
+    args = ap.parse_args(argv)
+
+    verdict = run_gate(
+        args.previous, args.current,
+        threshold=args.threshold,
+        benches=tuple(b for b in args.benches.split(",") if b),
+        fail_on_missing=args.fail_on_missing,
+    )
+    out = args.out or os.path.join(args.current, "GATE_verdict.json")
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(verdict, f, indent=1)
+
+    worst = sorted(verdict["regressions"],
+                   key=lambda c: -c["regression"])[:10]
+    for c in worst:
+        print(f"GATE REGRESSION {c['record']} {c['metric']}: "
+              f"{c['previous']:.4g} -> {c['current']:.4g} "
+              f"({c['regression']:+.1%}, {c['direction']}-is-better)")
+    for m in verdict["missing"][:10]:
+        print(f"gate: missing {m['side']} "
+              f"{m.get('record', 'artifact for ' + m['bench'])}")
+    print(f"GATE_{verdict['status'].upper()} checked={verdict['checked']} "
+          f"regressions={len(verdict['regressions'])} "
+          f"threshold={verdict['threshold']:.0%} verdict={out}")
+    return 1 if verdict["status"] == "fail" else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,252 +1,206 @@
-"""Roofline analysis (deliverable g): three derived terms per (arch × shape)
-cell from the dry-run artifacts + an analytic TPU-target model.
+"""Per-kernel roofline harness over the repro.kernels dispatch surface.
 
-Terms (per v5e chip, single-pod 256-chip mesh):
-    compute_s    = FLOPs / (197e12 FLOP/s bf16)
-    memory_s     = HBM bytes / (819e9 B/s)
-    collective_s = collective wire bytes / (50e9 B/s per ICI link)
+For each production kernel (the five ``repro.kernels.ops`` entry points:
+pair-fused logit delta, its ensemble-batched form, the batched AR(1)
+transition delta, fused CE, and its ensemble-batched form) this times the
+``mode="auto"`` dispatch path — exactly what the samplers execute: the
+Pallas kernel on TPU, the jnp reference elsewhere — and pairs the measured
+wall time with the kernel's analytic operation/byte model:
 
-Measurement caveats (DESIGN.md §8, established empirically during the
-dry-run):
-  * ``compiled.cost_analysis()`` counts scan/while bodies ONCE — a 64-layer
-    scanned transformer reports ~1/64 of its true FLOPs. We therefore derive
-    compute/memory terms ANALYTICALLY from the architecture config and shape
-    (formulas below), and report the raw cost_analysis number alongside.
-  * XLA:CPU materializes f32 copies of bf16 buffers around dots and hoists
-    them out of loops; memory_analysis() is reported raw plus a TPU-adjusted
-    analytic params+cache+activation budget.
-  * Collective bytes are parsed from post-SPMD HLO (per-device shard shapes);
-    collectives inside scanned layer bodies are counted once per body and
-    scaled by the trip count recorded in the artifact metadata.
+  * ``flops``            analytic FLOPs per call
+  * ``bytes_min``        compulsory HBM traffic (each operand read once,
+                         the output written once) — the fused kernels'
+                         design point
+  * ``intensity``        flops / bytes_min (arithmetic intensity)
+  * ``gflops`` /``gbs``  achieved rates from the measured wall time
+  * ``tpu_bound``        which side of the TPU-v5e roofline the analytic
+                         model puts the kernel on (compute vs memory), with
+                         the corresponding ideal per-call seconds
+
+The machine-readable result lands in ``BENCH_roofline.json`` (see
+``multichain_bench.bench_json_path``) next to the other bench artifacts so
+``benchmarks/gate.py`` can diff per-kernel throughput run-over-run.
 """
 from __future__ import annotations
 
-import glob
 import json
-import os
+import time
 
-import numpy as np
+import jax
+import jax.numpy as jnp
 
-PEAK_FLOPS = 197e12  # bf16 per chip
-HBM_BW = 819e9  # B/s per chip
-ICI_BW = 50e9  # B/s per link
-CHIPS_SINGLE = 256
+from repro.kernels import ops
 
+from .multichain_bench import bench_json_path
 
-def _cfg(arch: str):
-    from repro.configs import ARCHS
-
-    return ARCHS[arch]
-
-
-def per_token_matmul_flops(cfg) -> float:
-    """Forward matmul FLOPs per token, excluding attention's quadratic term
-    and the unembedding (= 2 x active non-embedding params)."""
-    embed = cfg.vocab * cfg.d_model
-    return 2.0 * max(cfg.active_param_count() - embed, 0)
+# TPU v5e single-chip peaks — the roofline the kernels were designed
+# against; on CPU the measured rates land far below, but the analytic
+# bound classification is machine-independent.
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9       # B/s
 
 
-def attn_quadratic_flops(cfg, kv_avg: float) -> float:
-    """Per-token score+value FLOPs summed over attention layers."""
-    if cfg.family == "ssm":
-        return 0.0
-    n_attn = cfg.n_layers
-    if cfg.family == "hybrid":
-        n_attn = cfg.n_layers // cfg.attn_period
-    per_layer = 2 * 2 * cfg.n_heads * cfg.hd * kv_avg  # qk^T and pv
-    extra = 0.0
-    if cfg.family == "audio":
-        # cross-attention against the (stubbed) encoder output
-        extra = cfg.n_layers * 2 * 2 * cfg.n_heads * cfg.hd * cfg.n_audio_frames
-    return n_attn * per_layer + extra
+def _time(f, *args, n: int = 5) -> float:
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
 
 
-def unembed_flops(cfg) -> float:
-    return 2.0 * cfg.d_model * cfg.vocab
+def _nbytes(*arrays) -> int:
+    return sum(a.size * a.dtype.itemsize for a in arrays)
 
 
-def kv_avg_for(cfg, spec) -> float:
-    s = spec.seq_len
-    win = cfg.window or (cfg.local_window if cfg.global_every else None)
-    if spec.kind == "decode":
-        full = min(s, cfg.window) if cfg.window else s
-        return float(full)
-    causal_avg = s / 2.0
-    if cfg.window:
-        return float(min(causal_avg, cfg.window))
-    if cfg.global_every and cfg.local_window:
-        # 1/global_every layers see s/2, the rest see the local window
-        g = 1.0 / cfg.global_every
-        return float(g * causal_avg + (1 - g) * min(causal_avg, cfg.local_window))
-    return float(causal_avg)
-
-
-def analytic_cell(arch: str, spec, rec: dict) -> dict:
-    """FLOPs / HBM bytes / collective seconds for one cell (per chip)."""
-    cfg = _cfg(arch)
-    chips = rec.get("n_chips", CHIPS_SINGLE)
-    p_bytes = cfg.param_count() * 2  # bf16
-    kv_avg = kv_avg_for(cfg, spec)
-    tok_f = per_token_matmul_flops(cfg) + attn_quadratic_flops(cfg, kv_avg)
-
-    kvb = 1 if rec.get("kv_dtype") == "fp8" else 2
-    if spec.kind == "train":
-        rb = rec.get("train_round_batch") or max(spec.global_batch // 4, 1)
-        tokens = rb * (spec.seq_len - 1)
-        # one test round = TWO forwards (theta, theta') incl. unembed loglik
-        flops = 2 * tokens * (tok_f + unembed_flops(cfg))
-        hbm = 2 * 2 * p_bytes + tokens * cfg.d_model * 2 * 8  # 2 fwd x (w read) + prop rw + acts
-        rounds_note = f"per test round (round_batch={rb}); E[rounds] <= {spec.global_batch // rb}"
-    elif spec.kind == "prefill":
-        tokens = spec.global_batch * spec.seq_len
-        flops = tokens * tok_f + spec.global_batch * unembed_flops(cfg)
-        cache_len = min(spec.seq_len, cfg.window) if cfg.window else spec.seq_len
-        kv_bytes = _kv_cache_bytes(cfg, spec.global_batch, cache_len, kvb)
-        hbm = p_bytes + tokens * cfg.d_model * 2 * 8 + kv_bytes
-        rounds_note = "single forward"
-    else:  # decode
-        tokens = spec.global_batch
-        flops = tokens * (tok_f + unembed_flops(cfg))
-        cache_len = min(spec.seq_len, cfg.window) if cfg.window else spec.seq_len
-        kv_bytes = _kv_cache_bytes(cfg, spec.global_batch, cache_len, kvb)
-        hbm = cfg.active_param_count() * 2 + kv_bytes  # weights + full cache read
-        rounds_note = "per decoded token"
-
-    compute_s = flops / chips / PEAK_FLOPS
-    memory_s = hbm / chips / HBM_BW
-    # Two collective accountings bracket the truth (DESIGN.md §8): the raw
-    # HLO parse counts scan-body collectives once (lower bound); scaling all
-    # non-entry collectives by the layer-scan trip count over-scales the
-    # per-round ones (upper bound). Primary = lower bound.
-    coll_bytes = rec.get("collective_wire_bytes_unscaled",
-                         rec.get("collective_wire_bytes_per_device", 0.0))
-    coll_bytes_hi = rec.get("collective_wire_bytes_per_device", coll_bytes)
-    collective_s = coll_bytes / ICI_BW
-
-    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
-    bottleneck = max(terms, key=terms.get)
-    frac = compute_s / max(max(terms.values()), 1e-30)
-
-    model_flops_6nd = 6.0 * cfg.active_param_count() * (
-        tokens if spec.kind == "train" else tokens
-    )
-    # MH is forward-only over two parameter sets: useful fwd flops = 4ND per
-    # round vs the 6ND training convention
-    ratio = model_flops_6nd / max(flops * chips / max(chips, 1), 1e-30) if False else (
-        model_flops_6nd / max(flops, 1e-30)
-    )
-
-    advice = {
-        "compute_s": "compute-bound: increase arithmetic efficiency (fused CE, "
-                     "larger round_batch to amortize, bf16 end-to-end)",
-        "memory_s": "memory-bound: cut bytes (int8 KV cache, windowed cache, "
-                    "weight reuse across theta/theta' via delta evaluation)",
-        "collective_s": "collective-bound: reshard to cut all-gathers "
-                        "(replicate small weights, 1D-shard attention io)",
-    }[bottleneck]
-
+def _case_logit_delta(n: int, d: int):
+    x = jax.random.normal(jax.random.key(0), (n, d))
+    y = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (n,)), 1.0, -1.0)
+    w1 = jax.random.normal(jax.random.key(2), (d,))
+    w2 = jax.random.normal(jax.random.key(3), (d,))
+    args = (x, y, w1, w2)
+    out_b = n * 4
     return {
-        "arch": arch,
-        "shape": spec.name,
-        "mesh": rec.get("mesh", "single"),
-        "status": rec.get("status"),
-        **{k: float(v) for k, v in terms.items()},
-        "bottleneck": bottleneck.replace("_s", ""),
-        "roofline_fraction": float(frac),
-        "analytic_flops_global": float(flops),
-        "costan_flops_per_dev": rec.get("flops_per_device"),
-        "collective_bytes_per_dev": float(coll_bytes),
-        "collective_s_upper": float(coll_bytes_hi / ICI_BW),
-        "model_flops_6nd": float(model_flops_6nd),
-        "useful_ratio_6nd": float(ratio),
-        "temp_gib_cpu": rec.get("memory", {}).get("temp_bytes", 0) / 2**30,
-        "note": rounds_note,
-        "advice": advice,
+        "name": f"logit_delta_N{n}_D{d}",
+        "fn": ops.logit_delta,
+        "args": args,
+        # two matvecs (2ND each) + ~8 elementwise ops per row
+        "flops": 2 * 2.0 * n * d + 8.0 * n,
+        "bytes_min": _nbytes(*args) + out_b,
+        "shape": f"N={n} D={d}",
     }
 
 
-def _kv_cache_bytes(cfg, batch: int, cache_len: int, kv_bytes_per: int = 2) -> float:
-    if cfg.family == "ssm":
-        pairs = cfg.n_layers // 2
-        dh = cfg.d_model // cfg.n_heads
-        per = cfg.n_heads * (dh * dh + 2 * dh + 1) * 4  # mLSTM C,n,m f32
-        per += cfg.n_heads * 4 * dh * 4  # sLSTM h,c,n,m
-        return float(pairs * batch * per)
-    n_attn = cfg.n_layers
-    if cfg.family == "hybrid":
-        n_attn = cfg.n_layers // cfg.attn_period
-        mamba = (cfg.n_layers - n_attn) * batch * (
-            cfg.d_inner * cfg.mamba_d_state * 4 + (cfg.mamba_d_conv - 1) * cfg.d_inner * 2
-        )
-    else:
-        mamba = 0.0
-    kv = n_attn * batch * cache_len * cfg.n_kv * cfg.hd * 2 * kv_bytes_per  # k+v
-    return float(kv + mamba)
+def _case_batched_logit_delta(k: int, m: int, d: int):
+    xg = jax.random.normal(jax.random.key(0), (k, m, d))
+    yg = jnp.where(jax.random.bernoulli(jax.random.key(1), 0.5, (k, m)), 1.0, -1.0)
+    w1 = jax.random.normal(jax.random.key(2), (k, d))
+    w2 = jax.random.normal(jax.random.key(3), (k, d))
+    args = (xg, yg, w1, w2)
+    return {
+        "name": f"batched_logit_delta_K{k}_m{m}_D{d}",
+        "fn": ops.batched_logit_delta,
+        "args": args,
+        "flops": 2 * 2.0 * k * m * d + 8.0 * k * m,
+        "bytes_min": _nbytes(*args) + k * m * 4,
+        "shape": f"K={k} m={m} D={d}",
+    }
 
 
-def load_artifacts(art_dir: str = "artifacts/dryrun") -> list[dict]:
-    recs = []
-    for fn in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
-        with open(fn) as f:
-            recs.append(json.load(f))
-    return recs
+def _case_ar1_delta(k: int, m: int):
+    keys = jax.random.split(jax.random.key(0), 6)
+    xt = jax.random.normal(keys[0], (k, m))
+    xp = jax.random.normal(keys[1], (k, m))
+    phi1 = 0.9 * jnp.tanh(jax.random.normal(keys[2], (k,)))
+    phi2 = 0.9 * jnp.tanh(jax.random.normal(keys[3], (k,)))
+    s21 = jnp.exp(jax.random.normal(keys[4], (k,)))
+    s22 = jnp.exp(jax.random.normal(keys[5], (k,)))
+    args = (xt, xp, phi1, s21, phi2, s22)
+    return {
+        "name": f"ar1_delta_K{k}_m{m}",
+        "fn": ops.batched_gaussian_ar1_delta,
+        "args": args,
+        # per (k, m) element: two gaussian logpdfs, ~10 flops each
+        "flops": 20.0 * k * m,
+        "bytes_min": _nbytes(*args) + k * m * 4,
+        "shape": f"K={k} m={m}",
+    }
 
 
-def build_table(art_dir: str = "artifacts/dryrun", mesh: str = "single",
-                include_variants: bool = False) -> list[dict]:
-    from repro.configs import SHAPES
+def _case_fused_ce(t: int, d: int, v: int):
+    h = jax.random.normal(jax.random.key(0), (t, d), jnp.bfloat16)
+    tab = jax.random.normal(jax.random.key(1), (v, d), jnp.bfloat16)
+    tgt = jax.random.randint(jax.random.key(2), (t,), 0, v)
+    args = (h, tab, tgt)
+    return {
+        "name": f"fused_ce_T{t}_D{d}_V{v}",
+        "fn": ops.fused_ce,
+        "args": args,
+        # logits matmul + logsumexp over V per token
+        "flops": 2.0 * t * d * v + 3.0 * t * v,
+        "bytes_min": _nbytes(*args) + t * 4,
+        "shape": f"T={t} D={d} V={v}",
+        # what the fused kernel avoids: materializing (T, V) f32 logits
+        "naive_bytes": _nbytes(*args) + t * 4 + 2 * t * v * 4,
+    }
 
-    rows = []
-    for rec in load_artifacts(art_dir):
-        if rec.get("mesh") != mesh:
-            continue
-        if not include_variants and rec.get("tag"):
-            continue  # hillclimb variants are reported in §Perf, not the table
-        if rec.get("status") != "ok":
-            rows.append({"arch": rec["arch"], "shape": rec["shape"],
-                         "mesh": rec["mesh"], "status": rec["status"],
-                         "note": rec.get("reason", rec.get("error", ""))[:90]})
-            continue
-        rows.append(analytic_cell(rec["arch"], SHAPES[rec["shape"]], rec))
-    return rows
+
+def _case_batched_fused_ce(k: int, t: int, d: int, v: int):
+    h = jax.random.normal(jax.random.key(0), (k, t, d), jnp.bfloat16)
+    tab = jax.random.normal(jax.random.key(1), (v, d), jnp.bfloat16)
+    tgt = jax.random.randint(jax.random.key(2), (k, t), 0, v)
+    args = (h, tab, tgt)
+    return {
+        "name": f"batched_fused_ce_K{k}_T{t}_V{v}",
+        "fn": ops.batched_fused_ce,
+        "args": args,
+        "flops": 2.0 * k * t * d * v + 3.0 * k * t * v,
+        "bytes_min": _nbytes(*args) + k * t * 4,
+        "shape": f"K={k} T={t} D={d} V={v}",
+        "naive_bytes": _nbytes(*args) + k * t * 4 + 2 * k * t * v * 4,
+    }
 
 
-def to_markdown(rows: list[dict]) -> str:
-    hdr = ("| arch | shape | compute_s | memory_s | collective_s | bound | "
-           "roofline frac | 6ND ratio |")
-    sep = "|" + "---|" * 8
-    lines = [hdr, sep]
-    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
-        if r.get("status") != "ok":
-            lines.append(
-                f"| {r['arch']} | {r['shape']} | — | — | — | skipped | — | — |")
-            continue
-        lines.append(
-            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
-            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | {r['bottleneck']} | "
-            f"{r['roofline_fraction']:.2f} | {r['useful_ratio_6nd']:.2f} |"
-        )
-    return "\n".join(lines)
+def cases(fast: bool = True) -> list[dict]:
+    if fast:
+        return [
+            _case_logit_delta(12214, 50),
+            _case_batched_logit_delta(8, 256, 50),
+            _case_ar1_delta(8, 512),
+            _case_fused_ce(256, 512, 32_000),
+            _case_batched_fused_ce(4, 128, 512, 32_000),
+        ]
+    return [
+        _case_logit_delta(100_000, 50),
+        _case_batched_logit_delta(32, 1024, 50),
+        _case_ar1_delta(32, 2048),
+        _case_fused_ce(512, 1024, 152_064),
+        _case_batched_fused_ce(8, 256, 1024, 152_064),
+    ]
+
+
+def measure(case: dict) -> dict:
+    path = "pallas" if ops.use_kernel("auto") else "ref"
+    fn = jax.jit(lambda *a: case["fn"](*a, mode="auto"))
+    sec = _time(fn, *case["args"])
+    flops, bmin = case["flops"], case["bytes_min"]
+    tpu_compute_s = flops / PEAK_FLOPS
+    tpu_memory_s = bmin / HBM_BW
+    rec = {
+        "kind": "roofline",
+        "name": case["name"],
+        "path": path,
+        "backend": jax.default_backend(),
+        "shape": case["shape"],
+        "us_per_call": sec * 1e6,
+        "flops": flops,
+        "bytes_min": bmin,
+        "intensity_flops_per_byte": flops / bmin,
+        "gflops": flops / sec / 1e9,
+        "gbs": bmin / sec / 1e9,
+        "tpu_bound": "compute" if tpu_compute_s >= tpu_memory_s else "memory",
+        "tpu_ideal_us": max(tpu_compute_s, tpu_memory_s) * 1e6,
+    }
+    if "naive_bytes" in case:
+        rec["traffic_ratio_naive_over_fused"] = case["naive_bytes"] / bmin
+    return rec
 
 
 def main(fast: bool = True):
-    rows = build_table()
-    os.makedirs("artifacts", exist_ok=True)
-    with open("artifacts/roofline.json", "w") as f:
-        json.dump(rows, f, indent=1)
-    with open("artifacts/roofline.md", "w") as f:
-        f.write(to_markdown(rows) + "\n")
-    out = []
-    for r in rows:
-        if r.get("status") != "ok":
-            continue
-        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
-        out.append((
-            f"roofline_{r['arch']}_{r['shape']}",
-            dom * 1e6,
-            f"bound={r['bottleneck']}_frac={r['roofline_fraction']:.2f}",
-        ))
-    return out, rows
+    records = [measure(c) for c in cases(fast)]
+    payload = {"bench": "roofline", "fast": fast,
+               "backend": jax.default_backend(), "records": records}
+    path = bench_json_path("roofline")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    rows = [(
+        f"roofline_{r['name']}",
+        r["us_per_call"],
+        f"path={r['path']}_ai={r['intensity_flops_per_byte']:.1f}"
+        f"_gflops={r['gflops']:.1f}_tpu_bound={r['tpu_bound']}",
+    ) for r in records]
+    return rows, records
 
 
 if __name__ == "__main__":

@@ -6,6 +6,8 @@ matching ``scipy.stats.t.sf`` to f32 precision.
 """
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -257,6 +259,182 @@ def slo_summary(latencies_s, deadlines_s=None, percentiles=(50, 95, 99)) -> dict
         dl = np.broadcast_to(np.asarray(deadlines_s, np.float64).ravel(), lat.shape)
         out["deadline_hit_rate"] = float(np.mean(lat <= dl))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Unified serving SLO schema.
+#
+# RequestQueue.slo_report() and FleetRouter.slo_report() used to return
+# differently-shaped dicts for the same concepts. Both now build the one
+# schema below, which is what the observability recorder (repro.obs) and the
+# CI perf gate (benchmarks/gate.py) consume. Every field is always present
+# (latency percentiles are None when a class has no successful completions),
+# so consumers never need per-producer key probing.
+# ---------------------------------------------------------------------------
+
+
+_SLO_DEPRECATED_KEYS = {"total_requests": "count"}
+
+
+class SLOReportDict(dict):
+    """A canonical slo_report dict that still answers the pre-unification
+    key spellings (``total_requests``), with a :class:`DeprecationWarning`.
+    The aliases are not real keys — iteration, ``in``, and serialization see
+    only the canonical schema — and they are removed next release."""
+
+    def __missing__(self, key):
+        canon = _SLO_DEPRECATED_KEYS.get(key)
+        if canon is not None and dict.__contains__(self, canon):
+            warnings.warn(
+                f"slo_report key {key!r} is deprecated; use {canon!r}",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            return self[canon]
+        raise KeyError(key)
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+
+@dataclasses.dataclass
+class ClassSLO:
+    """Per-(workload, request-class) serving statistics.
+
+    ``count``/``errors`` cover *attempted* (non-shed) completions;
+    ``admitted``/``shed`` are admission-control counters (for the plain
+    queue, which never sheds, ``admitted`` equals the attempted count).
+    Latency percentiles summarize successful requests only — a batch that
+    failed fast must not read as low latency — while ``deadline_hit_rate``
+    covers every attempted request (failures count as misses).
+    """
+
+    count: int = 0
+    errors: int = 0
+    admitted: int = 0
+    shed: int = 0
+    priority: int = 0
+    deadline_hit_rate: float = 0.0
+    mean_batch_size: float = 0.0
+    p50_ms: float | None = None
+    p95_ms: float | None = None
+    p99_ms: float | None = None
+    mean_ms: float | None = None
+    max_ms: float | None = None
+    staleness_mean_s: float | None = None
+    staleness_max_s: float | None = None
+
+    @classmethod
+    def from_requests(
+        cls, requests, *, priority: int = 0,
+        admitted: int | None = None, shed: int | None = None,
+    ) -> "ClassSLO":
+        """Aggregate completed request records (anything with ``latency_s``
+        / ``error`` / ``deadline_met`` / ``staleness_s`` / ``batch_size``
+        attributes; shed requests carry ``error="shed: ..."``)."""
+        attempted, shed_local = [], 0
+        for r in requests:
+            if (r.error or "").startswith("shed"):
+                shed_local += 1
+            else:
+                attempted.append(r)
+        ok = [r for r in attempted if r.error is None]
+        out = cls(
+            count=len(ok),
+            errors=len(attempted) - len(ok),
+            admitted=len(attempted) if admitted is None else int(admitted),
+            shed=shed_local if shed is None else int(shed),
+            priority=int(priority),
+        )
+        if attempted:
+            out.deadline_hit_rate = float(
+                np.mean([bool(r.deadline_met) for r in attempted])
+            )
+        if ok:
+            s = slo_summary([r.latency_s for r in ok])
+            out.p50_ms, out.p95_ms, out.p99_ms = s["p50_ms"], s["p95_ms"], s["p99_ms"]
+            out.mean_ms, out.max_ms = s["mean_ms"], s["max_ms"]
+            out.mean_batch_size = float(np.mean([r.batch_size or 1 for r in ok]))
+            staleness = [r.staleness_s for r in ok if r.staleness_s is not None]
+            if staleness:
+                out.staleness_mean_s = float(np.mean(staleness))
+                out.staleness_max_s = float(np.max(staleness))
+        return out
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SLOReport:
+    """One serving report: totals, admission/recovery state, per-class
+    tables. ``count`` spans every completion including shed requests (they
+    completed, just not with an answer); ``errors`` excludes shed.
+    """
+
+    count: int = 0
+    errors: int = 0
+    shed: int = 0
+    admission: dict | None = None
+    recovery: dict | None = None
+    classes: dict[str, ClassSLO] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> SLOReportDict:
+        return SLOReportDict(
+            count=self.count,
+            errors=self.errors,
+            shed=self.shed,
+            admission=self.admission,
+            recovery=self.recovery,
+            classes={k: v.to_dict() for k, v in self.classes.items()},
+        )
+
+
+def build_slo_report(
+    requests,
+    *,
+    priorities: dict[str, int] | None = None,
+    class_counters: dict[tuple[str, str], dict] | None = None,
+    admission: dict | None = None,
+    recovery: dict | None = None,
+) -> SLOReport:
+    """Aggregate completed requests into the unified :class:`SLOReport`.
+
+    ``class_counters`` (keyed ``(workload, query_class)``, entries holding
+    ``admitted``/``shed``) lets the router report its submit-time admission
+    counters instead of the completion-derived defaults; classes that only
+    appear in the counters (everything they admitted still pending) still
+    get a row.
+    """
+    done = [r for r in requests if r.latency_s is not None]
+    by_class: dict[tuple[str, str], list] = {}
+    for r in done:
+        by_class.setdefault((r.workload, r.query_class), []).append(r)
+    counters = class_counters or {}
+    classes: dict[str, ClassSLO] = {}
+    errors_total = shed_total = 0
+    for wl, qc in sorted(set(by_class) | set(counters)):
+        cnt = counters.get((wl, qc))
+        entry = ClassSLO.from_requests(
+            by_class.get((wl, qc), []),
+            priority=(priorities or {}).get(qc, 0),
+            admitted=cnt["admitted"] if cnt else None,
+            shed=cnt["shed"] if cnt else None,
+        )
+        classes[f"{wl}.{qc}"] = entry
+        errors_total += entry.errors
+        shed_total += entry.shed
+    return SLOReport(
+        count=len(done),
+        errors=errors_total,
+        shed=shed_total,
+        admission=admission,
+        recovery=recovery,
+        classes=classes,
+    )
 
 
 def jarque_bera(x: np.ndarray) -> tuple[float, float]:

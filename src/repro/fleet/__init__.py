@@ -13,7 +13,7 @@ The scale-out layer over :mod:`repro.serving` (see docs/ARCHITECTURE.md):
 Front-end: ``python -m repro.launch.serve --fleet --workload bayeslr``.
 """
 from .delta import SnapshotDelta, apply_delta, make_delta, payload_nbytes, wire_bytes
-from .replica import ReplicaEnsemble, ReplicaProcess
+from .replica import ReplicaDeadError, ReplicaEnsemble, ReplicaProcess
 from .router import AdmissionConfig, FleetRouter
 from .topology import Fleet, FleetConfig, FleetShard
 
@@ -23,6 +23,7 @@ __all__ = [
     "FleetConfig",
     "FleetRouter",
     "FleetShard",
+    "ReplicaDeadError",
     "ReplicaEnsemble",
     "ReplicaProcess",
     "SnapshotDelta",

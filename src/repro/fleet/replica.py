@@ -33,6 +33,14 @@ from .delta import SnapshotDelta, apply_delta, wire_bytes
 Params = Any
 
 
+class ReplicaDeadError(ConnectionError):
+    """The replica itself (not the request) failed: its process died, its
+    pipe broke, or it was killed. Callers treat this differently from a
+    request-level error — the fleet sync loop skips the replica and keeps
+    broadcasting, and the router marks the lane dead and reroutes the batch
+    to the surviving lanes instead of failing it."""
+
+
 class ReplicaEnsemble:
     """An in-process read replica: local window copy + shared evaluator.
 
@@ -49,6 +57,7 @@ class ReplicaEnsemble:
         self._last_update: float | None = None
         self._evaluator = SnapshotEvaluator(micro_batch)
         self._lock = threading.RLock()
+        self._dead = False
         self.deltas_applied = 0
         self.full_syncs = 0
         self.bytes_received = 0
@@ -60,6 +69,8 @@ class ReplicaEnsemble:
         the caller (the fleet sync loop) then re-emits a full resync.
         """
         with self._lock:
+            if self._dead:
+                raise ReplicaDeadError(f"replica {self.name!r} is down (killed)")
             if not delta.full and delta.draws is not None \
                     and delta.base_version != self.version:
                 raise ValueError(
@@ -120,6 +131,8 @@ class ReplicaEnsemble:
     def query(
         self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
     ) -> tuple[np.ndarray, Snapshot]:
+        if self._dead:
+            raise ReplicaDeadError(f"replica {self.name!r} is down (killed)")
         snap = snapshot if snapshot is not None else self.snapshot()
         if snap.draws is None:
             raise RuntimeError(
@@ -140,10 +153,35 @@ class ReplicaEnsemble:
             return {
                 "name": self.name,
                 "version": self.version,
+                "alive": not self._dead,
                 "deltas_applied": self.deltas_applied,
                 "full_syncs": self.full_syncs,
                 "bytes_received": self.bytes_received,
             }
+
+    # -- chaos / fault-injection surface (parity with ReplicaProcess) ------
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead
+
+    def ping(self) -> bool:
+        return not self._dead
+
+    def kill(self) -> None:
+        """Simulated crash for the in-process transport: every subsequent
+        ``apply_delta``/``query`` raises :class:`ReplicaDeadError` until
+        :meth:`restart` — what lets the chaos tests exercise the router's
+        failover deterministically without spawning processes."""
+        with self._lock:
+            self._dead = True
+
+    def restart(self) -> None:
+        """Come back empty (a restarted replica has no window; the next
+        sync is a full resync)."""
+        with self._lock:
+            self._dead = False
+        self.reset()
 
     def close(self) -> None:  # interface parity with ReplicaProcess
         pass
@@ -241,31 +279,56 @@ class ReplicaProcess:
         self.version = 0
         self.bytes_sent = 0
         self._lock = threading.Lock()
+        self._workload_name = workload_name
+        self._build_kw = dict(build_kw or {})
+        self._micro_batch = micro_batch
+        self._threads = threads
+        self._start_timeout_s = start_timeout_s
+        self._proc = None
+        self._conn = None
+        self._spawn()
+
+    def _spawn(self) -> None:
         ctx = mp.get_context("spawn")
         self._conn, child = ctx.Pipe()
         self._proc = ctx.Process(
             target=_replica_worker,
-            args=(child, name, workload_name, dict(build_kw or {}), micro_batch,
-                  threads),
-            name=f"replica-{name}",
+            args=(child, self.name, self._workload_name, dict(self._build_kw),
+                  self._micro_batch, self._threads),
+            name=f"replica-{self.name}",
             daemon=True,
         )
         self._proc.start()
         child.close()
-        if not self._conn.poll(start_timeout_s):
+        if not self._conn.poll(self._start_timeout_s):
             self.close()
-            raise TimeoutError(f"replica process {name!r} did not start")
+            raise TimeoutError(f"replica process {self.name!r} did not start")
         first = pickle.loads(self._conn.recv_bytes())
         if first[0] != "ready":
             self.close()
-            raise RuntimeError(f"replica process {name!r} failed: {first[1]}")
+            raise RuntimeError(f"replica process {self.name!r} failed: {first[1]}")
 
     def _rpc(self, *msg):
         payload = pickle.dumps(msg, protocol=pickle.HIGHEST_PROTOCOL)
-        with self._lock:
-            self.bytes_sent += len(payload)
-            self._conn.send_bytes(payload)
-            out = pickle.loads(self._conn.recv_bytes())
+        try:
+            with self._lock:
+                if self._proc is None or not self._proc.is_alive():
+                    raise ReplicaDeadError(
+                        f"replica {self.name!r} process is down"
+                    )
+                self.bytes_sent += len(payload)
+                self._conn.send_bytes(payload)
+                out = pickle.loads(self._conn.recv_bytes())
+        except ReplicaDeadError:
+            raise
+        except (EOFError, BrokenPipeError, ConnectionResetError, OSError) as e:
+            # The transport (not the request) failed — a killed process
+            # shows up as EOF on the pipe. Distinct from the worker's
+            # ("err", ...) replies, which stay RuntimeError below.
+            raise ReplicaDeadError(
+                f"replica {self.name!r} transport failed: "
+                f"{type(e).__name__}: {e}"
+            ) from e
         if out[0] == "err":
             raise RuntimeError(f"replica {self.name!r}: {out[1]}")
         return out
@@ -290,6 +353,37 @@ class ReplicaProcess:
         stats = self._rpc("stats")[1]
         stats["bytes_sent"] = self.bytes_sent
         return stats
+
+    # -- chaos / fault-injection surface ------------------------------------
+
+    @property
+    def alive(self) -> bool:
+        return self._proc is not None and self._proc.is_alive()
+
+    def ping(self) -> bool:
+        """True when the worker process answers; False on a dead transport
+        (never raises — this is the router's revive() probe)."""
+        try:
+            self._rpc("ping")
+            return True
+        except ReplicaDeadError:
+            return False
+
+    def kill(self, timeout_s: float = 10.0) -> None:
+        """SIGKILL the worker process — the chaos harness's crash. No
+        handshake, no cleanup: in-flight RPCs surface ReplicaDeadError."""
+        proc = self._proc
+        if proc is not None and proc.is_alive():
+            proc.kill()
+            proc.join(timeout=timeout_s)
+
+    def restart(self) -> None:
+        """Respawn the worker in place (fresh interpreter, empty window at
+        version 0 — the next sync full-resyncs it). The surrounding lane /
+        fleet objects keep their references valid across the bounce."""
+        self.close(timeout_s=1.0)
+        self.version = 0
+        self._spawn()
 
     def close(self, timeout_s: float = 10.0) -> None:
         proc, conn = self._proc, self._conn

@@ -26,8 +26,9 @@ from collections import defaultdict, deque
 
 import numpy as np
 
-from ..core.stats import slo_summary
+from ..core.stats import build_slo_report
 from ..serving.queue import Request
+from .replica import ReplicaDeadError
 from .topology import Fleet, FleetShard
 
 
@@ -58,13 +59,18 @@ class AdmissionConfig:
 class _Lane:
     """One replica's pending queue."""
 
-    __slots__ = ("shard", "replica", "pending", "served")
+    __slots__ = ("shard", "replica", "pending", "served", "dead")
 
     def __init__(self, shard: FleetShard, replica):
         self.shard = shard
         self.replica = replica
         self.pending: list[Request] = []
         self.served = 0
+        # Set when the replica's transport fails (ReplicaDeadError): the
+        # lane stops taking submissions and its backlog is rerouted to the
+        # surviving lanes. revive() re-admits it once the replica answers
+        # pings again (after ReplicaProcess.restart()).
+        self.dead = False
 
 
 class FleetRouter:
@@ -107,6 +113,8 @@ class FleetRouter:
         self._counters: dict[tuple[str, str], dict] = defaultdict(
             lambda: {"admitted": 0, "shed": 0}
         )
+        self._lane_deaths = 0
+        self._rerouted = 0
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
 
@@ -182,7 +190,18 @@ class FleetRouter:
                 req.done.set()
                 return req
             counters["admitted"] += 1
-            lanes = self._lanes[workload]
+            lanes = [l for l in self._lanes[workload] if not l.dead]
+            if not lanes:
+                req.error = (
+                    f"ReplicaDeadError: no live replica lanes for "
+                    f"workload {workload!r}"
+                )
+                req.latency_s = 0.0
+                req.deadline_met = False
+                req.batch_size = 0
+                self._completed.append(req)
+                req.done.set()
+                return req
             lane = min(lanes, key=lambda l: (len(l.pending), l.served))
             lane.pending.append(req)
             self._arrived.notify_all()
@@ -207,6 +226,8 @@ class FleetRouter:
         interchangeable, and stealing keeps the tail from being set by the
         slowest replica's private queue."""
         with self._lock:
+            if lane.dead:
+                return []
             source = lane
             if not source.pending:
                 peers = self._lanes[lane.shard.workload]
@@ -232,6 +253,12 @@ class FleetRouter:
             xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
             spec = self.fleet.spec(workload, qclass)
             values, staleness = lane.replica.serve(spec, qclass, xs)
+        except ReplicaDeadError:
+            # The replica (not the request) failed: the batch is still
+            # servable, so reroute it — plus the lane's whole backlog —
+            # to the surviving lanes instead of failing it.
+            self._on_lane_death(lane, batch)
+            return
         except Exception as e:  # noqa: BLE001 — fail the requests, not the server
             now = time.monotonic()
             with self._lock:
@@ -259,6 +286,58 @@ class FleetRouter:
             lane.served += len(batch)
             self._completed.extend(batch)
 
+    def _on_lane_death(self, lane: _Lane, batch: list[Request]) -> None:
+        """Mark a lane dead and reroute its in-flight batch plus backlog.
+
+        Requests keep their original ``submitted_at`` — the extra latency a
+        failover costs is real and must show in the SLO tables. Only when no
+        live lane remains do the stranded requests fail."""
+        with self._arrived:
+            if not lane.dead:
+                lane.dead = True
+                self._lane_deaths += 1
+            stranded = batch + lane.pending
+            lane.pending = []
+            live = [l for l in self._lanes[lane.shard.workload] if not l.dead]
+            if not live:
+                now = time.monotonic()
+                for req in stranded:
+                    req.error = (
+                        f"ReplicaDeadError: no live replica lanes for "
+                        f"workload {lane.shard.workload!r}"
+                    )
+                    req.latency_s = now - req.submitted_at
+                    req.deadline_met = False
+                    req.batch_size = 0
+                    self._miss_trail.append(True)
+                    req.done.set()
+                self._completed.extend(stranded)
+                return
+            for req in stranded:
+                target = min(live, key=lambda l: (len(l.pending), l.served))
+                target.pending.append(req)
+                self._rerouted += 1
+            self._arrived.notify_all()
+
+    def revive(self) -> int:
+        """Re-admit dead lanes whose replica answers pings again (after a
+        :meth:`ReplicaProcess.restart` + resync); returns how many."""
+        revived = 0
+        for lanes in self._lanes.values():
+            for lane in lanes:
+                if lane.dead and lane.replica.ping():
+                    with self._lock:
+                        lane.dead = False
+                    revived += 1
+        return revived
+
+    @property
+    def dead_lanes(self) -> int:
+        with self._lock:
+            return sum(
+                l.dead for lanes in self._lanes.values() for l in lanes
+            )
+
     def drain(self) -> list[Request]:
         """Serve everything pending on the calling thread (deterministic;
         what tests and the smoke path use), round-robin over lanes."""
@@ -270,7 +349,9 @@ class FleetRouter:
                     batch = self._take_batch(lane)
                     if batch:
                         self._serve_batch(lane, batch)
-                        served.extend(batch)
+                        # A batch that hit a dead lane was rerouted, not
+                        # completed — count each request where it finishes.
+                        served.extend(r for r in batch if r.done.is_set())
                         any_served = True
             if not any_served:
                 return served
@@ -320,54 +401,32 @@ class FleetRouter:
     # -- SLO accounting ----------------------------------------------------
 
     def slo_report(self) -> dict:
-        """The queue's per-class SLO tables extended with admission-control
-        counters: per class ``admitted``/``shed``, plus the router-wide
-        admission state."""
+        """The queue's per-class SLO tables (same unified
+        :func:`repro.core.stats.build_slo_report` schema) extended with
+        admission-control counters per class plus the router-wide admission
+        and lane-recovery state."""
         with self._lock:
             done = [r for r in self._completed if r.latency_s is not None]
             counters = {k: dict(v) for k, v in self._counters.items()}
             depth = self._depth_locked()
             floor = self._shed_floor_locked()
-        by_class: dict[tuple[str, str], list[Request]] = defaultdict(list)
-        for req in done:
-            by_class[(req.workload, req.query_class)].append(req)
-        shed_total = sum(c["shed"] for c in counters.values())
-        report: dict = {
-            "total_requests": len(done),
-            "errors": sum(
-                1 for r in done if r.error is not None and not r.error.startswith("shed")
-            ),
-            "shed": shed_total,
-            "admission": {
+            miss = self._miss_rate_locked()
+            recovery = {
+                "lane_deaths": self._lane_deaths,
+                "rerouted": self._rerouted,
+                "dead_lanes": sum(
+                    l.dead for lanes in self._lanes.values() for l in lanes
+                ),
+            }
+        priorities = {qc: self._priority(qc) for qc in self._known_classes()}
+        return build_slo_report(
+            done,
+            priorities=priorities,
+            class_counters=counters,
+            admission={
                 "depth": depth,
-                "predicted_miss_rate": self.predicted_miss_rate(),
+                "predicted_miss_rate": miss,
                 "shed_floor": floor,
             },
-        }
-        classes: dict = {}
-        for (wl, qc), reqs in sorted(by_class.items()):
-            # Shed requests are accounted in their own counter; folding them
-            # into the deadline hit rate would double-punish the class the
-            # admission policy already sacrificed.
-            attempted = [r for r in reqs
-                         if not (r.error or "").startswith("shed")]
-            ok = [r for r in attempted if r.error is None]
-            entry = slo_summary([r.latency_s for r in ok]) if ok else {"count": 0}
-            entry["deadline_hit_rate"] = float(
-                np.mean([bool(r.deadline_met) for r in attempted])
-            ) if attempted else 0.0
-            entry["errors"] = len(attempted) - len(ok)
-            cnt = counters.get((wl, qc), {"admitted": 0, "shed": 0})
-            entry["admitted"] = cnt["admitted"]
-            entry["shed"] = cnt["shed"]
-            entry["priority"] = self._priority(qc)
-            staleness = [r.staleness_s for r in ok if r.staleness_s is not None]
-            if staleness:
-                entry["staleness_mean_s"] = float(np.mean(staleness))
-                entry["staleness_max_s"] = float(np.max(staleness))
-            entry["mean_batch_size"] = float(
-                np.mean([r.batch_size or 1 for r in ok])
-            ) if ok else 0.0
-            classes[f"{wl}.{qc}"] = entry
-        report["classes"] = classes
-        return report
+            recovery=recovery,
+        ).to_dict()

@@ -33,7 +33,7 @@ from ..serving.pool import EnsemblePool, ServingConfig
 from ..serving.resident import QuerySpec, ResidentEnsemble
 from ..serving.workloads import ServingWorkload, build_serving_workload
 from .delta import make_delta, payload_nbytes, wire_bytes
-from .replica import ReplicaEnsemble, ReplicaProcess
+from .replica import ReplicaDeadError, ReplicaEnsemble, ReplicaProcess
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +91,8 @@ class Fleet:
             "full_wire_bytes": 0,  # what full-snapshot streaming would cost
             "delta_payload_bytes": 0,
             "full_payload_bytes": 0,
+            "full_deltas": 0,  # syncs that were full-window resyncs
+            "skipped_dead": 0,  # replicas skipped because their transport was down
         }
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
@@ -169,19 +171,31 @@ class Fleet:
         sent = 0
         with self._sync_lock:
             for replica in shard.replicas:
-                delta = make_delta(snap, replica.version, window, shard.name)
-                nbytes = wire_bytes(delta)
                 try:
-                    replica.apply_delta(delta, nbytes=nbytes)
-                except (ValueError, RuntimeError):
-                    # Version drift (e.g. a replica reset raced the
-                    # snapshot): fall back to a full resync. ReplicaProcess
-                    # surfaces the worker's ValueError as RuntimeError, so
-                    # both are resync triggers; a genuinely broken replica
-                    # raises again below and propagates.
-                    delta = make_delta(snap, 0, window, shard.name)
+                    delta = make_delta(snap, replica.version, window, shard.name)
                     nbytes = wire_bytes(delta)
-                    replica.apply_delta(delta, nbytes=nbytes)
+                    try:
+                        replica.apply_delta(delta, nbytes=nbytes)
+                    except (ValueError, RuntimeError):
+                        # Version drift (e.g. a replica reset raced the
+                        # snapshot): fall back to a full resync. ReplicaProcess
+                        # surfaces the worker's ValueError as RuntimeError, so
+                        # both are resync triggers; a genuinely broken replica
+                        # raises again below and propagates.
+                        delta = make_delta(snap, 0, window, shard.name)
+                        nbytes = wire_bytes(delta)
+                        replica.apply_delta(delta, nbytes=nbytes)
+                except ReplicaDeadError as e:
+                    # A crashed replica must not stall the broadcast to its
+                    # healthy peers: skip it (the router routes around the
+                    # dead lane) and keep the error visible until a later
+                    # sync — after restart() — reaches it again.
+                    self.sync_stats["skipped_dead"] += 1
+                    self._shard_errors[f"{shard.name}/{replica.name}"] = (
+                        f"{type(e).__name__}: {e}"
+                    )
+                    continue
+                self._shard_errors.pop(f"{shard.name}/{replica.name}", None)
                 delta_payload = payload_nbytes(delta.draws)
                 if delta.full:
                     full_wire, full_payload = nbytes, delta_payload
@@ -196,6 +210,7 @@ class Fleet:
                     full_payload = payload_nbytes(snap.draws)
                     full_wire = nbytes + (full_payload - delta_payload)
                 self.sync_stats["syncs"] += 1
+                self.sync_stats["full_deltas"] += int(delta.full)
                 self.sync_stats["delta_wire_bytes"] += nbytes
                 self.sync_stats["delta_payload_bytes"] += delta_payload
                 self.sync_stats["full_wire_bytes"] += full_wire
@@ -299,6 +314,13 @@ class Fleet:
                 out["shards"][shard.name] = {
                     "writer_steps": shard.writer.steps_done,
                     "replica_versions": [r.version for r in shard.replicas],
-                    "replicas": [r.stats() for r in shard.replicas],
+                    "replicas": [self._replica_stats(r) for r in shard.replicas],
                 }
         return out
+
+    @staticmethod
+    def _replica_stats(replica) -> dict:
+        try:
+            return replica.stats()
+        except ReplicaDeadError:
+            return {"name": replica.name, "alive": False}

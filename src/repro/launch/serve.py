@@ -106,6 +106,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="admission: queue depth before shedding starts")
     fl.add_argument("--max-miss-rate", type=float, default=0.5,
                     help="admission: predicted deadline-miss rate threshold")
+    # -- observability (repro.obs) ------------------------------------------
+    ob = ap.add_argument_group("observability")
+    ob.add_argument("--stats-addr", default=None, metavar="HOST:PORT",
+                    help="expose the live metric rollup as JSON over HTTP "
+                         "(port 0 = ephemeral); prints a STATS_OK self-check")
+    ob.add_argument("--obs-dir", default=os.environ.get("REPRO_OBS_DIR"),
+                    help="write per-run JSONL metric streams + summary.json "
+                         "under this directory (default: $REPRO_OBS_DIR, "
+                         "else in-memory only)")
+    ob.add_argument("--soak", action="store_true",
+                    help="chaos soak: sustained mixed-class load on the "
+                         "fleet while one replica is killed and restarted "
+                         "mid-load; prints SOAK_OK with recovery counters")
+    ob.add_argument("--soak-seconds", type=float, default=None,
+                    help="soak load duration (default: 6 smoke, 30 full)")
     # -- legacy LM decoding flags (only read under --workload lm) ----------
     lm = ap.add_argument_group("lm decoding demo (--workload lm)")
     lm.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
@@ -115,6 +130,64 @@ def build_parser() -> argparse.ArgumentParser:
     lm.add_argument("--gen-len", type=int, default=64)
     lm.add_argument("--model-parallel", type=int, default=1)
     return ap
+
+
+# ---------------------------------------------------------------------------
+# Observability wiring (repro.obs)
+# ---------------------------------------------------------------------------
+
+
+def _setup_obs(args, source=None):
+    """Recorder + optional HTTP stats endpoint + SLO sampler for a serve
+    run, or (None, None, None) when no observability flag is set."""
+    if not (args.stats_addr is not None or args.obs_dir or args.soak):
+        return None, None, None
+    from repro.obs import Recorder, SLOSampler, StatsServer
+
+    recorder = Recorder(
+        args.obs_dir,
+        meta={"workload": args.workload, "argv": sys.argv[1:]},
+    )
+    server = None
+    if args.stats_addr is not None:
+        server = StatsServer(recorder, args.stats_addr)
+        print(f"stats: live rollup at {server.url}")
+    sampler = SLOSampler(recorder, source) if source is not None else None
+    return recorder, server, sampler
+
+
+def _stats_selfcheck(server) -> bool:
+    """Fetch our own endpoint and print STATS_OK/STATS_FAIL — the CI-style
+    proof that the rollup is reachable and carries the headline fields."""
+    import urllib.request
+
+    import json as _json
+
+    with urllib.request.urlopen(server.url, timeout=10) as resp:
+        roll = _json.loads(resp.read())
+    streams = roll.get("streams", {})
+    slo_last = streams.get("slo", {}).get("last", {})
+    snap_last = streams.get("snapshot", {}).get("last", {})
+    ok = (
+        "req_per_s" in slo_last and "p95_ms" in slo_last
+        and "shed" in slo_last and "staleness_s" in snap_last
+    )
+    line = "STATS_OK" if ok else "STATS_FAIL"
+    print(f"{line} url={server.url} streams={sorted(streams)} "
+          f"req_per_s={slo_last.get('req_per_s', float('nan')):.0f} "
+          f"p95_ms={slo_last.get('p95_ms', float('nan')):.2f} "
+          f"shed={slo_last.get('shed', 'n/a')} "
+          f"staleness_s={snap_last.get('staleness_s', float('nan')):.3f}")
+    return ok
+
+
+def _teardown_obs(recorder, server) -> None:
+    if server is not None:
+        server.close()
+    if recorder is not None:
+        path = recorder.close()
+        if path:
+            print(f"obs: metric streams + summary in {recorder.dir}")
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +271,7 @@ def serve_posterior(args) -> int:
 
     queue = RequestQueue(pool, max_batch=args.max_batch,
                          default_deadline_s=args.deadline_ms / 1e3)
+    recorder, stats_server, sampler = _setup_obs(args, source=queue)
     classes = sorted(workload.query_specs)
     qkey = jax.random.key(args.seed + 1)
     t0 = time.perf_counter()
@@ -212,6 +286,12 @@ def serve_posterior(args) -> int:
             xs = workload.query_specs[cls].make_queries(sub, args.rows_per_query)
             queue.submit(args.workload, cls, xs)
         served += len(queue.drain())
+        if sampler is not None:
+            sampler.sample()
+            from repro.obs import record_snapshot
+
+            record_snapshot(recorder, args.workload,
+                            pool.resident(args.workload).snapshot())
     wall = time.perf_counter() - t0
     report = queue.slo_report()
 
@@ -259,10 +339,20 @@ def serve_posterior(args) -> int:
     if args.background:
         pool.stop()
 
+    stats_ok = True
+    if recorder is not None:
+        from repro.obs import record_adaptation
+
+        snap = pool.resident(args.workload).snapshot()
+        record_adaptation(recorder, args.workload, snap.summary)
+        if stats_server is not None:
+            stats_ok = _stats_selfcheck(stats_server)
+        _teardown_obs(recorder, stats_server)
+
     first = next(
         (e for e in report["classes"].values() if e.get("count")), None
     )
-    if first is None or report["errors"]:
+    if first is None or report["errors"] or not stats_ok:
         print(f"SERVE_FAIL workload={args.workload} errors={report['errors']}")
         return 1
     print(f"SERVE_OK workload={args.workload} queries={served} "
@@ -279,8 +369,10 @@ def serve_posterior(args) -> int:
 # ---------------------------------------------------------------------------
 
 
-def serve_fleet(args) -> int:
-    from repro.fleet import AdmissionConfig, Fleet, FleetConfig, FleetRouter
+def _build_fleet(args):
+    """Config + fleet + workload registration shared by the fleet and soak
+    paths; returns (fleet, workload, classes)."""
+    from repro.fleet import Fleet, FleetConfig
     from repro.serving import FreshnessPolicy, ServingConfig
 
     smoke = args.smoke
@@ -288,7 +380,6 @@ def serve_fleet(args) -> int:
     chains = dflt(args.chains, 4 if smoke else 8)
     refresh_steps = dflt(args.refresh_steps, 16 if smoke else 64)
     window = dflt(args.window, 32 if smoke else 128)
-    num_queries = dflt(args.queries, 120 if smoke else 400)
     min_draws = dflt(args.min_draws, max(chains * window // 2, chains))
     mesh = {"auto": "auto", "2d": ("chains", "data"), "off": False}[args.mesh]
     config = FleetConfig(
@@ -318,6 +409,43 @@ def serve_fleet(args) -> int:
     workload = fleet.workload(args.workload)
     classes = sorted(workload.query_specs)
     print(f"target: {workload.description}; request classes: {classes}")
+    return fleet, workload, classes
+
+
+def _build_router(args, fleet, workload):
+    """Priority/admission router over a fleet: the default class outranks
+    the rest, so under overload the low classes are shed first."""
+    from repro.fleet import AdmissionConfig, FleetRouter
+
+    priorities = {cls: 0 for cls in sorted(workload.query_specs)}
+    priorities[workload.default_class] = 1
+    return FleetRouter(
+        fleet,
+        priorities=priorities,
+        admission=AdmissionConfig(
+            max_depth=args.max_depth, max_miss_rate=args.max_miss_rate
+        ),
+        max_batch=args.max_batch,
+        default_deadline_s=args.deadline_ms / 1e3,
+    )
+
+
+def _compile_lanes(args, fleet, workload):
+    """Compile every replica lane's evaluators outside the measured window."""
+    wkey = jax.random.key(args.seed + 2)
+    for shard in fleet.shards(args.workload):
+        for replica in shard.replicas:
+            for cls in sorted(workload.query_specs):
+                wkey, sub = jax.random.split(wkey)
+                spec = workload.query_specs[cls]
+                replica.serve(spec, cls, spec.make_queries(sub, args.rows_per_query))
+
+
+def serve_fleet(args) -> int:
+    smoke = args.smoke
+    dflt = lambda v, d: d if v is None else v
+    num_queries = dflt(args.queries, 120 if smoke else 400)
+    fleet, workload, classes = _build_fleet(args)
 
     restored = None
     if args.ckpt_dir:
@@ -336,27 +464,9 @@ def serve_fleet(args) -> int:
           f"transitions/chain, replicas synced to "
           f"{[r.version for r in shard0.replicas]}")
 
-    # The default class outranks the rest — under overload the admission
-    # policy sheds the low classes first.
-    priorities = {cls: 0 for cls in classes}
-    priorities[workload.default_class] = 1
-    router = FleetRouter(
-        fleet,
-        priorities=priorities,
-        admission=AdmissionConfig(
-            max_depth=args.max_depth, max_miss_rate=args.max_miss_rate
-        ),
-        max_batch=args.max_batch,
-        default_deadline_s=args.deadline_ms / 1e3,
-    )
-    # Compile every replica lane's evaluators outside the measured window.
-    wkey = jax.random.key(args.seed + 2)
-    for shard in fleet.shards(args.workload):
-        for replica in shard.replicas:
-            for cls in classes:
-                wkey, sub = jax.random.split(wkey)
-                spec = workload.query_specs[cls]
-                replica.serve(spec, cls, spec.make_queries(sub, args.rows_per_query))
+    router = _build_router(args, fleet, workload)
+    recorder, stats_server, sampler = _setup_obs(args, source=router)
+    _compile_lanes(args, fleet, workload)
     if args.background:
         fleet.start()
         router.start_workers()
@@ -381,6 +491,11 @@ def serve_fleet(args) -> int:
             served += len(router.drain())
             if (i // burst) % 8 == 7:
                 fleet.pump(args.workload)  # stream fresh deltas mid-serve
+        if sampler is not None and (i // burst) % 4 == 3:
+            from repro.obs import record_fleet_sync
+
+            sampler.sample()
+            record_fleet_sync(recorder, fleet)
     if args.background:
         for req in pending:
             req.done.wait(timeout=60.0)
@@ -392,6 +507,17 @@ def serve_fleet(args) -> int:
             if r.done.is_set() and not (r.error or "").startswith("shed")
         ])
     wall = time.perf_counter() - t0
+    stats_ok = True
+    if sampler is not None:
+        from repro.obs import record_adaptation, record_fleet_sync, record_snapshot
+
+        sampler.sample()
+        record_fleet_sync(recorder, fleet)
+        snap = shard0.writer.snapshot()
+        record_snapshot(recorder, args.workload, snap)
+        record_adaptation(recorder, args.workload, snap.summary)
+        if stats_server is not None:
+            stats_ok = _stats_selfcheck(stats_server)
     report = router.slo_report()
 
     print(f"\nserved {served} requests ({args.rows_per_query} rows each) in "
@@ -434,6 +560,7 @@ def serve_fleet(args) -> int:
     if not np.array_equal(np.asarray(w_vals), np.asarray(r_vals)):
         print(f"PARITY FAIL: replica vs writer max|delta|={err:.3g} "
               f"(writer v{w_snap.steps_done}, replica v{shard0.replicas[0].version})")
+        _teardown_obs(recorder, stats_server)
         fleet.close()
         return 1
     parity = "ok(bitexact)"
@@ -443,10 +570,11 @@ def serve_fleet(args) -> int:
     if args.ckpt_dir:
         path = fleet.save(args.ckpt_dir)
         print(f"saved warm fleet to {path}")
+    _teardown_obs(recorder, stats_server)
     fleet.close()
 
     first = next((e for e in report["classes"].values() if e.get("count")), None)
-    if first is None or report["errors"] or (smoke and served < 100):
+    if first is None or report["errors"] or (smoke and served < 100) or not stats_ok:
         # The smoke floor gates BEFORE SERVE_OK: CI greps the log, so a
         # failed smoke must never have printed the success line.
         print(f"SERVE_FAIL workload={args.workload} fleet=1 "
@@ -458,6 +586,166 @@ def serve_fleet(args) -> int:
           f"p95_ms={first['p95_ms']:.2f} "
           f"deadline_hit={first['deadline_hit_rate']:.3f} "
           f"shed={report['shed']} delta_ratio={ratio:.2f} parity={parity}")
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos soak (--soak)
+# ---------------------------------------------------------------------------
+
+
+def serve_soak(args) -> int:
+    """Sustained mixed-class load against the multi-replica fleet while one
+    replica is SIGKILLed mid-load and later restarted: proves the router
+    reroutes around the dead lane without dropping top-class requests and
+    that the revived replica full-resyncs to bit-exact parity with the warm
+    writer. Prints ``SOAK_OK``/``SOAK_FAIL`` with the recovery counters."""
+    from repro.obs import record_fleet_sync, record_snapshot
+
+    smoke = args.smoke
+    soak_s = args.soak_seconds or (6.0 if smoke else 30.0)
+    # Killing a replica must leave a live lane in its shard.
+    args.replicas = max(args.replicas, 2)
+    fleet, workload, classes = _build_fleet(args)
+    fleet.warm()
+    shard0 = fleet.shards(args.workload)[0]
+    victim = shard0.replicas[-1]
+    router = _build_router(args, fleet, workload)
+    recorder, stats_server, sampler = _setup_obs(args, source=router)
+    _compile_lanes(args, fleet, workload)
+    top = workload.default_class
+    print(f"soak: {soak_s:.0f}s mixed-class load "
+          f"({', '.join(classes)}; top class {top!r}), "
+          f"kill {victim.name} at ~35%, restart at ~65%")
+
+    fleet.start()          # background refresh + delta sync
+    router.start_workers()  # one worker thread per replica lane
+
+    t0 = time.perf_counter()
+    end = t0 + soak_s
+    kill_at = t0 + 0.35 * soak_s
+    recover_at = t0 + 0.65 * soak_s
+    killed = recovered = False
+    full_before = 0
+    pending: list = []
+    qkey = jax.random.key(args.seed + 1)
+    i = 0
+    last_sample = t0
+    while True:
+        now = time.perf_counter()
+        if now >= end and recovered:
+            break
+        if not killed and now >= kill_at:
+            recorder.record("chaos", {"event": "kill", "replica": victim.name})
+            victim.kill()
+            killed = True
+            print(f"chaos: killed {victim.name} at t+{now - t0:.1f}s "
+                  f"(pending={router.pending_count})")
+        if killed and not recovered and now >= recover_at and (
+                router.dead_lanes >= 1 or now >= end):
+            full_before = fleet.sync_stats["full_deltas"]
+            victim.restart()
+            fleet.sync_shard(shard0)  # version 0 -> full snapshot resync
+            revived = router.revive()
+            recovered = True
+            recorder.record("chaos", {
+                "event": "restart", "replica": victim.name,
+                "revived_lanes": revived,
+                "replica_version": victim.version,
+            })
+            print(f"chaos: restarted {victim.name} at t+{now - t0:.1f}s "
+                  f"(revived {revived} lane(s), replica v{victim.version})")
+        if router.pending_count > 4 * args.max_depth:
+            time.sleep(0.01)  # backpressure: let the lane workers catch up
+        else:
+            cls = classes[i % len(classes)]
+            qkey, sub = jax.random.split(qkey)
+            xs = workload.query_specs[cls].make_queries(sub, args.rows_per_query)
+            pending.append(router.submit(args.workload, cls, xs))
+            i += 1
+            if i % 8 == 0:
+                time.sleep(0.002)  # yield to the worker threads
+        if sampler is not None and now - last_sample >= max(soak_s / 12, 0.25):
+            sampler.sample()
+            record_fleet_sync(recorder, fleet)
+            record_snapshot(recorder, args.workload, shard0.writer.snapshot())
+            last_sample = now
+
+    for req in pending:
+        req.done.wait(timeout=120.0)
+    wall = time.perf_counter() - t0
+    stats_ok = True
+    if sampler is not None:
+        sampler.sample()
+        record_fleet_sync(recorder, fleet)
+        record_snapshot(recorder, args.workload, shard0.writer.snapshot())
+        if stats_server is not None:
+            stats_ok = _stats_selfcheck(stats_server)
+    report = router.slo_report()
+    router.stop_workers()
+    fleet.stop()
+
+    # -- post-chaos parity: the revived replica vs the warm writer ---------
+    fleet.sync_all()
+    resyncs = fleet.sync_stats["full_deltas"] - full_before
+    spec = workload.query_specs[top]
+    qkey, sub = jax.random.split(qkey)
+    xs = spec.make_queries(sub, 16)
+    w_vals, w_snap = shard0.writer.query(spec, xs)
+    r_vals, _ = victim.serve(spec, top, xs)
+    parity_ok = np.array_equal(np.asarray(w_vals), np.asarray(r_vals))
+
+    served = len([
+        r for r in pending
+        if r.done.is_set() and not (r.error or "").startswith("shed")
+    ])
+    recovery = report["recovery"]
+    top_entry = report["classes"].get(f"{args.workload}.{top}", {})
+    top_reqs = [r for r in pending if r.query_class == top]
+    dropped = [r for r in top_reqs if not r.done.is_set()]
+    print(f"\nsoak: {served} served / {len(pending)} submitted in {wall:.1f}s "
+          f"({served / max(wall, 1e-9):.0f} req/s), shed={report['shed']}, "
+          f"lane_deaths={recovery['lane_deaths']}, "
+          f"rerouted={recovery['rerouted']}, "
+          f"dead_lanes={recovery['dead_lanes']}, resyncs={resyncs}")
+
+    failures = []
+    if not top_entry.get("count"):
+        failures.append(f"no completed top-class ({top!r}) requests in report")
+    if not killed or not recovered:
+        failures.append("kill/restart never fired (soak too short?)")
+    if recovery["lane_deaths"] < 1:
+        failures.append("victim lane never died under load")
+    if recovery["dead_lanes"]:
+        failures.append(f"{recovery['dead_lanes']} lane(s) still dead after revive")
+    if dropped:
+        failures.append(f"{len(dropped)} top-class request(s) never completed")
+    if top_entry.get("errors", 0):
+        failures.append(f"top-class errors={top_entry['errors']}")
+    if top_entry.get("shed", 0):
+        failures.append(f"top-class shed={top_entry['shed']}")
+    if resyncs < 1:
+        failures.append("restarted replica never full-resynced")
+    if not parity_ok:
+        err = float(np.max(np.abs(np.asarray(w_vals) - np.asarray(r_vals))))
+        failures.append(
+            f"parity: revived replica vs writer max|delta|={err:.3g} "
+            f"(writer v{w_snap.steps_done}, replica v{victim.version})")
+    if not stats_ok:
+        failures.append("stats endpoint self-check failed")
+
+    _teardown_obs(recorder, stats_server)
+    fleet.close()
+    if failures:
+        print(f"SOAK_FAIL workload={args.workload} " + "; ".join(failures))
+        return 1
+    print(f"SOAK_OK workload={args.workload} soak_s={wall:.1f} "
+          f"served={served} kills=1 recovered=1 resyncs={resyncs} "
+          f"reroutes={recovery['rerouted']} "
+          f"lane_deaths={recovery['lane_deaths']} shed={report['shed']} "
+          f"top_class_errors=0 "
+          f"p95_ms={top_entry.get('p95_ms') or float('nan'):.2f} "
+          f"parity=ok(bitexact)")
     return 0
 
 
@@ -544,8 +832,13 @@ def main(argv=None) -> None:
                 f"{', '.join(drifted)} only apply to the LM decoding demo; "
                 "add --workload lm (posterior serving ignores them)"
             )
+    if args.soak and (args.workload == "lm" or not args.fleet):
+        parser.error("--soak drives the replica fleet: add --fleet "
+                     "(and a posterior --workload)")
     if args.workload == "lm":
         code = serve_lm(args)
+    elif args.soak:
+        code = serve_soak(args)
     elif args.fleet:
         code = serve_fleet(args)
     else:

@@ -1,0 +1,35 @@
+"""Observability: per-run metric streams, rollups, and the live stats endpoint.
+
+The recording layer over the serving/fleet stack (see docs/OBSERVABILITY.md):
+
+    signal sources ──▶ sources.py adapters ──▶ Recorder ──▶ <run>/<stream>.jsonl
+     slo_report()        SLOSampler              │             summary.json
+     Snapshot            record_snapshot         └─▶ rollup() ──▶ StatsServer
+     sync_stats          record_fleet_sync                        (HTTP JSON)
+     run_timed           make_on_block
+     adaptation trace    record_adaptation
+
+Front-end: ``python -m repro.launch.serve --stats-addr 127.0.0.1:8787
+--obs-dir /tmp/obs``; regression gating over the recorded benchmark
+artifacts lives in ``benchmarks/gate.py``.
+"""
+from .recorder import Recorder, json_default
+from .server import StatsServer
+from .sources import (
+    SLOSampler,
+    make_on_block,
+    record_adaptation,
+    record_fleet_sync,
+    record_snapshot,
+)
+
+__all__ = [
+    "Recorder",
+    "SLOSampler",
+    "StatsServer",
+    "json_default",
+    "make_on_block",
+    "record_adaptation",
+    "record_fleet_sync",
+    "record_snapshot",
+]

@@ -1,0 +1,205 @@
+"""Append-only per-run metric recording with live rollups.
+
+A :class:`Recorder` owns one run directory (``<root>/<run_id>/``) holding
+one JSONL file per metric *stream* — ``slo.jsonl``, ``snapshot.jsonl``,
+``fleet.jsonl``, ``refresh.jsonl``, ``adaptation.jsonl``, ``chaos.jsonl``
+in the serving front-end — plus ``meta.json`` at start and ``summary.json``
+(the final rollup) at close. Every record is one JSON object per line with
+a wall-clock ``t`` and a run-relative ``rel_s`` stamp, so streams from one
+run can be joined on time.
+
+The rollup is maintained incrementally (count / mean / min / max / last per
+numeric field per stream) and is cheap to read at any moment — it is what
+the ``serve --stats-addr`` HTTP endpoint returns while the run is live, and
+what ``summary.json`` freezes at the end.
+
+``root_dir=None`` records in memory only (rollup works, nothing touches
+disk) — what tests and ephemeral smoke runs use.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+
+def json_default(obj):
+    """JSON encoder fallback for the numpy scalars/arrays metric dicts
+    naturally carry."""
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    return str(obj)
+
+
+def _as_scalar(value) -> float | None:
+    """The aggregatable float behind a metric value, or None for
+    non-numeric values (bool counts as numeric: rates of flags are useful)."""
+    if isinstance(value, bool):
+        return float(value)
+    if isinstance(value, (int, float, np.integer, np.floating)):
+        v = float(value)
+        return v if np.isfinite(v) else None
+    return None
+
+
+class _FieldAgg:
+    """Streaming count/sum/min/max/last for one numeric field."""
+
+    __slots__ = ("count", "total", "min", "max", "last")
+
+    def __init__(self):
+        self.count = 0
+        self.total = 0.0
+        self.min = float("inf")
+        self.max = float("-inf")
+        self.last = 0.0
+
+    def add(self, v: float) -> None:
+        self.count += 1
+        self.total += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+        self.last = v
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "mean": self.total / max(self.count, 1),
+            "min": self.min,
+            "max": self.max,
+            "last": self.last,
+        }
+
+
+class Recorder:
+    """Thread-safe append-only metric streams + incremental rollup."""
+
+    def __init__(self, root_dir: str | None = None, *,
+                 run_id: str | None = None, meta: dict | None = None):
+        self.run_id = run_id or (
+            f"run-{time.strftime('%Y%m%d-%H%M%S')}-{os.getpid()}"
+        )
+        self.meta = dict(meta or {})
+        self.dir: str | None = None
+        self._files: dict[str, object] = {}
+        self._streams: dict[str, dict] = {}
+        self._lock = threading.Lock()
+        self._t0_wall = time.time()
+        self._t0_mono = time.monotonic()
+        self._closed = False
+        if root_dir:
+            self.dir = os.path.join(root_dir, self.run_id)
+            os.makedirs(self.dir, exist_ok=True)
+            with open(os.path.join(self.dir, "meta.json"), "w") as f:
+                json.dump({"run_id": self.run_id, "started_at": self._t0_wall,
+                           **self.meta}, f, default=json_default, indent=2)
+
+    # -- writing -----------------------------------------------------------
+
+    def record(self, stream: str, metrics: dict | None = None, **kw) -> dict:
+        """Append one record to ``stream``; returns the record (with its
+        time stamps) as written."""
+        rec = {"t": time.time(),
+               "rel_s": time.monotonic() - self._t0_mono}
+        rec.update(metrics or {})
+        rec.update(kw)
+        line = json.dumps(rec, default=json_default)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(f"recorder {self.run_id!r} is closed")
+            agg = self._streams.setdefault(
+                stream, {"count": 0, "fields": {}, "last": {}}
+            )
+            agg["count"] += 1
+            agg["last"] = rec
+            for field, value in rec.items():
+                v = _as_scalar(value)
+                if v is None:
+                    continue
+                agg["fields"].setdefault(field, _FieldAgg()).add(v)
+            if self.dir is not None:
+                f = self._files.get(stream)
+                if f is None:
+                    safe = stream.replace(os.sep, "_")
+                    f = open(os.path.join(self.dir, f"{safe}.jsonl"), "a",
+                             buffering=1)
+                    self._files[stream] = f
+                f.write(line + "\n")
+        return rec
+
+    # -- reading -----------------------------------------------------------
+
+    def rollup(self) -> dict:
+        """The current end-of-run summary, computable at any moment: per
+        stream the record count, the last record, and count/mean/min/max/last
+        per numeric field."""
+        with self._lock:
+            return {
+                "run_id": self.run_id,
+                "uptime_s": time.monotonic() - self._t0_mono,
+                "meta": dict(self.meta),
+                "streams": {
+                    name: {
+                        "count": agg["count"],
+                        "last": dict(agg["last"]),
+                        "fields": {
+                            f: a.summary() for f, a in agg["fields"].items()
+                        },
+                    }
+                    for name, agg in self._streams.items()
+                },
+            }
+
+    def stream_path(self, stream: str) -> str | None:
+        if self.dir is None:
+            return None
+        return os.path.join(self.dir, f"{stream.replace(os.sep, '_')}.jsonl")
+
+    def read_stream(self, stream: str) -> list[dict]:
+        """Parse a stream's JSONL back into records (empty when the stream
+        was never written or the recorder is memory-only)."""
+        path = self.stream_path(stream)
+        if path is None or not os.path.exists(path):
+            return []
+        with open(path) as f:
+            return [json.loads(line) for line in f if line.strip()]
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def write_summary(self) -> str | None:
+        """Freeze the rollup to ``summary.json``; returns its path (None
+        for a memory-only recorder)."""
+        if self.dir is None:
+            return None
+        path = os.path.join(self.dir, "summary.json")
+        with open(path, "w") as f:
+            json.dump(self.rollup(), f, default=json_default, indent=2)
+        return path
+
+    def close(self) -> str | None:
+        """Write the summary and close every stream file (idempotent)."""
+        with self._lock:
+            if self._closed:
+                return None
+            files, self._files = self._files, {}
+        path = self.write_summary()
+        for f in files.values():
+            f.close()
+        with self._lock:
+            self._closed = True
+        return path
+
+    def __enter__(self) -> "Recorder":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

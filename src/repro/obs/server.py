@@ -1,0 +1,57 @@
+"""Live stats endpoint: the recorder's rollup over HTTP.
+
+A :class:`StatsServer` binds a tiny :class:`ThreadingHTTPServer` on a
+daemon thread and answers every GET with the owning
+:class:`repro.obs.Recorder`'s current :meth:`rollup` as JSON — what
+``serve --stats-addr host:port`` exposes so a dashboard (or ``curl``) can
+watch req/s, latency tails, shed counts, and snapshot staleness while the
+service is under load. Port 0 binds an ephemeral port (tests); the bound
+address is in :attr:`url`.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+from .recorder import Recorder, json_default
+
+
+class StatsServer:
+    """Serve ``recorder.rollup()`` as JSON on every GET."""
+
+    def __init__(self, recorder: Recorder, addr: str = "127.0.0.1:0"):
+        host, _, port = addr.partition(":")
+        recorder_ref = recorder
+
+        class _Handler(BaseHTTPRequestHandler):
+            def do_GET(self):  # noqa: N802 — http.server API
+                body = json.dumps(
+                    recorder_ref.rollup(), default=json_default
+                ).encode()
+                self.send_response(200)
+                self.send_header("Content-Type", "application/json")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):  # silence per-request stderr spam
+                pass
+
+        self._server = ThreadingHTTPServer(
+            (host or "127.0.0.1", int(port or 0)), _Handler
+        )
+        self.host, self.port = self._server.server_address[:2]
+        self._thread = threading.Thread(
+            target=self._server.serve_forever, name="stats-http", daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=10.0)

@@ -27,11 +27,10 @@ import dataclasses
 import itertools
 import threading
 import time
-from collections import defaultdict
 
 import numpy as np
 
-from ..core.stats import slo_summary
+from ..core.stats import build_slo_report
 from .pool import EnsemblePool
 
 _REQUEST_IDS = itertools.count()
@@ -220,35 +219,9 @@ class RequestQueue:
 
     def slo_report(self) -> dict:
         """Per-(workload, request-class) latency/deadline/staleness tables
-        over everything completed so far."""
+        over everything completed so far, in the unified
+        :func:`repro.core.stats.build_slo_report` schema (the queue never
+        sheds, so its ``shed`` counters are always zero)."""
         with self._lock:
             done = [r for r in self._completed if r.latency_s is not None]
-        by_class: dict[tuple[str, str], list[Request]] = defaultdict(list)
-        for req in done:
-            by_class[(req.workload, req.query_class)].append(req)
-        report: dict = {"total_requests": len(done), "classes": {}}
-        errors = sum(1 for r in done if r.error is not None)
-        report["errors"] = errors
-        for (wl, qc), reqs in sorted(by_class.items()):
-            # Latency percentiles over *successful* requests only — a batch
-            # that failed fast must not read as low latency — while the
-            # deadline hit rate covers every request via its recorded
-            # deadline_met (failures count as misses).
-            ok = [r for r in reqs if r.error is None]
-            if ok:
-                entry = slo_summary([r.latency_s for r in ok])
-            else:
-                entry = {"count": 0}
-            entry["deadline_hit_rate"] = float(
-                np.mean([bool(r.deadline_met) for r in reqs])
-            )
-            entry["errors"] = len(reqs) - len(ok)
-            staleness = [r.staleness_s for r in ok if r.staleness_s is not None]
-            if staleness:
-                entry["staleness_mean_s"] = float(np.mean(staleness))
-                entry["staleness_max_s"] = float(np.max(staleness))
-            entry["mean_batch_size"] = float(
-                np.mean([r.batch_size or 1 for r in reqs])
-            )
-            report["classes"][f"{wl}.{qc}"] = entry
-        return report
+        return build_slo_report(done).to_dict()

@@ -1,0 +1,211 @@
+"""Chaos/fault-tolerance: replica death mid-load, router recovery, resync.
+
+The fast tier kills in-process replicas (``ReplicaEnsemble.kill`` raises
+``ReplicaDeadError`` from every subsequent RPC, exactly like a dead
+process-group pipe) and asserts the router's recovery contract: the dead
+lane's in-flight batch and backlog reroute to live lanes, nothing is
+dropped, and after ``restart()`` + a full-resync the revived replica serves
+bit-for-bit what the writer serves. The slow tier drives the same sequence
+through ``serve --fleet --soak`` with one-OS-process-per-replica transport
+and a real SIGKILL (the CI chaos smoke greps the same ``SOAK_OK`` line).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.fleet import Fleet, FleetConfig, FleetRouter, ReplicaDeadError
+from repro.serving import FreshnessPolicy, ServingConfig
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _tiny_fleet(replicas=2, shards=1) -> Fleet:
+    fleet = Fleet(FleetConfig(
+        replicas=replicas,
+        shards=shards,
+        transport="inproc",
+        serving=ServingConfig(
+            num_chains=2, refresh_steps=8, window=16, micro_batch=8,
+            max_batch=4,
+            freshness=FreshnessPolicy(max_staleness_s=1e9, min_draws=8),
+            seed=0,
+        ),
+    ))
+    fleet.add_workload("bayeslr", smoke=True, n_train=400, d=3, batch_size=50)
+    fleet.warm()
+    return fleet
+
+
+def test_kill_mid_load_reroutes_without_dropping_requests():
+    """A replica dies with requests queued on its lane: the router marks the
+    lane dead once, moves the stranded batch + backlog to the live lane, and
+    every request still completes (correctly) without an error."""
+    fleet = _tiny_fleet()
+    try:
+        shard = fleet.shards("bayeslr")[0]
+        victim = shard.replicas[1]
+        spec = fleet.spec("bayeslr", "predictive")
+        router = FleetRouter(fleet, priorities={"predictive": 1, "vote": 0},
+                             max_batch=4, default_deadline_s=30.0)
+        reqs, queries = [], []
+        for i in range(12):
+            xs = spec.make_queries(jax.random.key(i), 3)
+            queries.append(xs)
+            reqs.append(router.submit("bayeslr", "predictive", xs))
+        victim.kill()  # both lanes hold pending work at this point
+        served = router.drain()
+        assert len(served) == len(reqs)
+        report = router.slo_report()
+        assert report["errors"] == 0
+        assert report["recovery"]["lane_deaths"] == 1
+        assert report["recovery"]["rerouted"] >= 1
+        assert report["recovery"]["dead_lanes"] == 1
+        assert router.dead_lanes == 1
+        # rerouted answers are the same bits the writer would serve
+        for xs, req in zip(queries, reqs):
+            want, _ = shard.writer.query(spec, xs)
+            np.testing.assert_array_equal(
+                np.asarray(req.result()), np.asarray(want))
+    finally:
+        fleet.close()
+
+
+def test_restart_resyncs_bit_exact_and_revives_lane():
+    fleet = _tiny_fleet()
+    try:
+        shard = fleet.shards("bayeslr")[0]
+        victim = shard.replicas[1]
+        spec = fleet.spec("bayeslr", "predictive")
+        router = FleetRouter(fleet, priorities={"predictive": 0},
+                             max_batch=4, default_deadline_s=30.0)
+        victim.kill()
+        assert not victim.alive and not victim.ping()
+        with pytest.raises(ReplicaDeadError):
+            victim.serve(spec, "predictive", spec.make_queries(jax.random.key(0), 2))
+        for i in range(4):  # land work on both lanes (least-loaded routing)
+            router.submit("bayeslr", "predictive",
+                          spec.make_queries(jax.random.key(1 + i), 2))
+        router.drain()  # lane death observed here
+        assert router.dead_lanes == 1
+        assert router.revive() == 0  # still dead: ping fails, stays dead
+
+        full_before = fleet.sync_stats["full_deltas"]
+        victim.restart()
+        assert victim.alive and victim.version == 0  # empty, needs resync
+        fleet.sync_shard(shard)
+        assert fleet.sync_stats["full_deltas"] == full_before + 1
+        assert victim.version == shard.writer.steps_done
+        assert router.revive() == 1 and router.dead_lanes == 0
+
+        xs = spec.make_queries(jax.random.key(2), 8)
+        want, _ = shard.writer.query(spec, xs)
+        got, _ = victim.serve(spec, "predictive", xs)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    finally:
+        fleet.close()
+
+
+def test_submit_fails_fast_when_every_lane_is_dead():
+    fleet = _tiny_fleet(replicas=1)
+    try:
+        shard = fleet.shards("bayeslr")[0]
+        spec = fleet.spec("bayeslr", "predictive")
+        router = FleetRouter(fleet, priorities={"predictive": 0},
+                             max_batch=4, default_deadline_s=30.0)
+        shard.replicas[0].kill()
+        first = router.submit("bayeslr", "predictive",
+                              spec.make_queries(jax.random.key(0), 2))
+        router.drain()  # death observed; no live lane left to reroute to
+        assert first.done.is_set() and "ReplicaDeadError" in first.error
+        # subsequent submissions fail at intake, not after a timeout
+        second = router.submit("bayeslr", "predictive",
+                               spec.make_queries(jax.random.key(1), 2))
+        assert second.done.is_set() and "no live replica lanes" in second.error
+        report = router.slo_report()
+        assert report["errors"] == 2
+        with pytest.raises(RuntimeError, match="ReplicaDeadError"):
+            first.result()
+    finally:
+        fleet.close()
+
+
+def test_fleet_sync_skips_dead_replica_and_recovers():
+    """A dead replica must not wedge the shard's delta stream: sync skips it
+    (recording the error), keeps the live replica fresh, and heals after a
+    restart."""
+    fleet = _tiny_fleet()
+    try:
+        shard = fleet.shards("bayeslr")[0]
+        live, victim = shard.replicas
+        victim.kill()
+        fleet.pump("bayeslr")
+        assert fleet.sync_stats["skipped_dead"] >= 1
+        assert live.version == shard.writer.steps_done  # live lane kept fresh
+        errors = fleet.report()["errors"]
+        assert any("#r1" in k for k in errors)
+        stats = fleet.report()["shards"]["bayeslr@0"]["replicas"]
+        assert any(s.get("alive") is False for s in stats)
+
+        victim.restart()
+        fleet.pump("bayeslr")
+        assert victim.version == shard.writer.steps_done
+        assert fleet.report()["errors"] == {}
+    finally:
+        fleet.close()
+
+
+def test_worker_threads_route_around_death_under_live_load():
+    """Background lane workers (the serve --fleet path): kill a replica while
+    workers are actively serving; no request may hang or error."""
+    fleet = _tiny_fleet()
+    try:
+        shard = fleet.shards("bayeslr")[0]
+        spec = fleet.spec("bayeslr", "predictive")
+        router = FleetRouter(fleet, priorities={"predictive": 1, "vote": 0},
+                             max_batch=4, default_deadline_s=30.0)
+        router.start_workers(max_wait_s=0.001)
+        try:
+            reqs = []
+            for i in range(30):
+                xs = spec.make_queries(jax.random.key(i), 2)
+                reqs.append(router.submit("bayeslr", "predictive", xs))
+                if i == 10:
+                    shard.replicas[1].kill()
+            for req in reqs:
+                req.result(timeout_s=60.0)  # raises on error, hangs if dropped
+        finally:
+            router.stop_workers()
+        report = router.slo_report()
+        assert report["errors"] == 0
+        assert report["recovery"]["lane_deaths"] == 1
+        assert report["classes"]["bayeslr.predictive"]["count"] == 30
+    finally:
+        fleet.close()
+
+
+@pytest.mark.slow
+def test_soak_sigkills_replica_process_and_recovers():
+    """End-to-end chaos soak over one-OS-process-per-replica transport: a
+    live ReplicaProcess is SIGKILLed mid-load, the router reroutes, the
+    respawned worker full-resyncs, and the run ends SOAK_OK with bit-exact
+    writer parity — the same line the CI chaos smoke greps."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--fleet", "--soak",
+         "--smoke", "--workload", "bayeslr", "--soak-seconds", "8",
+         "--replica-transport", "proc", "--stats-addr", "127.0.0.1:0"],
+        capture_output=True, text=True, timeout=900,
+        cwd=_REPO, env={**os.environ, "PYTHONPATH": "src"},
+    )
+    out = proc.stdout
+    assert proc.returncode == 0, f"stdout:\n{out}\nstderr:\n{proc.stderr[-4000:]}"
+    soak_line = next(l for l in out.splitlines() if l.startswith("SOAK_OK"))
+    assert "kills=1" in soak_line and "recovered=1" in soak_line
+    assert "top_class_errors=0" in soak_line
+    assert "parity=ok(bitexact)" in soak_line
+    assert "resyncs=0" not in soak_line
+    assert "STATS_OK" in out  # live endpoint answered under load

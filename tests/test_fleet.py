@@ -15,6 +15,8 @@ import sys
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings
+from _hypothesis_compat import strategies as st
 
 import jax
 import jax.numpy as jnp
@@ -108,6 +110,81 @@ def test_make_delta_zero_gap_is_empty():
     delta = make_delta(_snap(writer, 7), base_version=7, window=4)
     assert delta.draws is None and payload_nbytes(delta.draws) == 0
     np.testing.assert_array_equal(apply_delta(writer, delta), writer)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),    # chains K
+    st.integers(min_value=2, max_value=12),   # window depth
+    st.integers(min_value=0, max_value=64),   # replica version b
+    st.integers(min_value=0, max_value=64),   # writer advance beyond b
+)
+def test_delta_roundtrip_property(k, window, base, advance):
+    """apply(make(replica@b -> writer@v)) == writer window, bit for bit, for
+    ANY (K, window, versions) — including cold replicas, still-filling
+    windows, and replicas ahead of the writer (checkpoint restore)."""
+    version = base + advance
+    if version == 0:
+        return  # writer has produced nothing: no snapshot to stream
+    # One global draw sequence; a window at version v is its last columns.
+    seq = np.arange(k * 80, dtype=np.float32).reshape(k, 80)
+    win_at = lambda v: seq[:, max(v - window, 0):v] if v else None
+    writer = win_at(version)
+    delta = make_delta(_snap(writer, version), base, window)
+    result = apply_delta(win_at(base), delta)
+    np.testing.assert_array_equal(result, writer)
+    assert delta.version == version
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=2, max_value=12),
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=0, max_value=64),
+)
+def test_delta_full_resync_iff_gap_reaches_window(window, base, advance):
+    """The delta degrades to a full-window resync exactly when the gap can't
+    be bridged: replica cold (b=0), replica ahead, or gap >= the writer
+    window's actual width (min(version, window) — still-filling windows
+    included)."""
+    version = base + advance
+    seq = np.arange(80, dtype=np.float32).reshape(1, 80)
+    writer = seq[:, max(version - window, 0):version]
+    delta = make_delta(_snap(writer, version), base, window)
+    width = writer.shape[1]
+    assert delta.full == (base == 0 or version - base >= width)
+    if delta.full:
+        assert delta.base_version == 0  # applies to any replica state
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=2, max_value=12),
+    st.integers(min_value=1, max_value=64),
+    st.integers(min_value=0, max_value=64),
+)
+def test_delta_payload_accounting_invariants(k, window, base, advance):
+    """Byte accounting the fleet bench reports: an empty delta costs zero
+    payload, an incremental delta carries exactly the new tail columns and
+    never more than the full window, and the pickled wire size bounds the
+    raw payload from above."""
+    version = base + advance
+    seq = np.arange(k * 80, dtype=np.float32).reshape(k, 80)
+    writer = seq[:, max(version - window, 0):version]
+    delta = make_delta(_snap(writer, version), base, window)
+    payload = payload_nbytes(delta.draws)
+    full_payload = payload_nbytes(writer)
+    if delta.draws is None:
+        assert payload == 0
+        assert version == base  # only a zero gap streams nothing
+    elif delta.full:
+        assert payload == full_payload
+    else:
+        gap = version - base
+        assert payload == k * gap * 4  # exactly the new f32 tail
+        assert payload < full_payload
+    assert wire_bytes(delta) >= payload  # pickle overhead, never compression
 
 
 def test_replica_rejects_mismatched_incremental():
@@ -297,6 +374,59 @@ def test_single_class_is_never_shed(warm_fleet):
         router.submit("bayeslr", "predictive", spec.make_queries(jax.random.key(i), 2))
     router.drain()
     assert router.slo_report()["shed"] == 0
+
+
+def test_admission_floor_steps_at_max_depth_multiples(warm_fleet):
+    """Hysteresis of the depth-driven shed floor across three priority
+    levels: each ``max_depth`` multiple of backlog raises the floor one
+    level (never past the top class), and draining drops it back to None."""
+    fleet = warm_fleet
+    fleet.sync_all()
+    depth = 4
+    # Three levels: "bulk" exists only in the priority map (submissions for
+    # it queue like any class) so the floor has two steps to climb.
+    router = FleetRouter(
+        fleet, priorities={"predictive": 2, "vote": 1, "bulk": 0},
+        admission=AdmissionConfig(max_depth=depth, min_observations=10**9),
+        max_batch=4, default_deadline_s=30.0,
+    )
+    spec = fleet.spec("bayeslr", "predictive")
+    qs = lambda i: spec.make_queries(jax.random.key(i), 2)
+
+    assert router.slo_report()["admission"]["shed_floor"] is None
+    assert router.submit("bayeslr", "bulk", qs(0)).error is None  # admitted
+
+    # Build backlog (no workers running) out of top-class requests only —
+    # they are always admitted, so the depth is exactly controllable.
+    floors = {}
+    for i in range(1, 2 * depth + 1):
+        router.submit("bayeslr", "predictive", qs(i))
+        floors[router.pending_count] = (
+            router.slo_report()["admission"]["shed_floor"]
+        )
+    # below max_depth: everything admitted; the first multiple cuts
+    # priority-0; the second cuts priority-1 as well; never priority-2.
+    assert floors[depth - 1] is None
+    assert floors[depth] == 1
+    assert floors[2 * depth] == 2
+
+    low = router.submit("bayeslr", "bulk", qs(100))
+    mid = router.submit("bayeslr", "vote", qs(101))
+    top = router.submit("bayeslr", "predictive", qs(102))
+    assert (low.error or "").startswith("shed")
+    assert (mid.error or "").startswith("shed")
+    assert top.error is None
+
+    # The one pre-floor bulk request fails at serve time (no such spec) —
+    # that must fail the request, not the drain.
+    router.drain()
+    report = router.slo_report()
+    assert report["admission"]["shed_floor"] is None  # backlog gone: recovered
+    assert report["classes"]["bayeslr.bulk"]["shed"] == 1
+    assert report["classes"]["bayeslr.vote"]["shed"] == 1
+    assert report["classes"]["bayeslr.predictive"]["shed"] == 0
+    admit = router.submit("bayeslr", "vote", qs(103))
+    assert admit.error is None  # floor lifted: low classes admitted again
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,332 @@
+"""Observability subsystem: Recorder streams/rollups, source adapters, the
+HTTP stats endpoint, and the bench perf-regression gate.
+
+The recorder tests run memory-only or against tmp_path; the gate tests
+drive ``benchmarks/gate.py`` both ways on synthetic fixtures (unchanged
+baseline must pass, a >15% p95 regression must fail) — the contract the CI
+gate job relies on.
+"""
+import json
+import os
+import sys
+import urllib.request
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import (
+    Recorder,
+    SLOSampler,
+    StatsServer,
+    make_on_block,
+    record_adaptation,
+    record_fleet_sync,
+    record_snapshot,
+)
+from repro.serving.resident import Snapshot
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _REPO)  # benchmarks/ is a repo-root package, not in src/
+
+from benchmarks.gate import run_gate  # noqa: E402
+from benchmarks import gate  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Recorder
+# ---------------------------------------------------------------------------
+
+
+def test_recorder_streams_roundtrip(tmp_path):
+    with Recorder(str(tmp_path), run_id="r1", meta={"workload": "t"}) as rec:
+        rec.record("slo", {"count": 1, "p95_ms": 10.0})
+        rec.record("slo", count=3, p95_ms=30.0)
+        rec.record("snapshot", {"staleness_s": 0.5})
+        roll = rec.rollup()
+    assert roll["run_id"] == "r1" and roll["meta"] == {"workload": "t"}
+    slo = roll["streams"]["slo"]
+    assert slo["count"] == 2 and slo["last"]["count"] == 3
+    agg = slo["fields"]["p95_ms"]
+    assert agg == {"count": 2, "mean": 20.0, "min": 10.0, "max": 30.0,
+                   "last": 30.0}
+    # JSONL round-trips and carries both time stamps
+    back = rec.read_stream("slo")
+    assert [r["count"] for r in back] == [1, 3]
+    assert all("t" in r and "rel_s" in r for r in back)
+    # meta.json at start, summary.json at close
+    run_dir = tmp_path / "r1"
+    assert json.loads((run_dir / "meta.json").read_text())["run_id"] == "r1"
+    summary = json.loads((run_dir / "summary.json").read_text())
+    assert summary["streams"]["snapshot"]["count"] == 1
+
+
+def test_recorder_memory_only_and_numpy_safety():
+    rec = Recorder()  # no root_dir: nothing touches disk
+    rec.record("s", {"arr": np.arange(3), "np_int": np.int64(7),
+                     "np_float": np.float32(1.5), "flag": True,
+                     "label": "text", "nan": float("nan")})
+    roll = rec.rollup()
+    fields = roll["streams"]["s"]["fields"]
+    assert fields["np_int"]["last"] == 7.0
+    assert fields["np_float"]["last"] == 1.5
+    assert fields["flag"]["last"] == 1.0  # bools aggregate as rates
+    assert "label" not in fields and "arr" not in fields
+    assert "nan" not in fields  # non-finite values don't poison aggregates
+    assert rec.stream_path("s") is None and rec.read_stream("s") == []
+    assert rec.write_summary() is None
+    rec.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        rec.record("s", {"x": 1})
+
+
+def test_stats_server_serves_live_rollup():
+    rec = Recorder()
+    rec.record("slo", {"req_per_s": 12.0, "arr": np.ones(2)})
+    server = StatsServer(rec, "127.0.0.1:0")
+    try:
+        with urllib.request.urlopen(server.url, timeout=10) as resp:
+            assert resp.headers["Content-Type"] == "application/json"
+            roll = json.loads(resp.read())
+        assert roll["streams"]["slo"]["last"]["req_per_s"] == 12.0
+        assert roll["streams"]["slo"]["last"]["arr"] == [1.0, 1.0]
+        # live: a later record shows up on the next GET
+        rec.record("slo", {"req_per_s": 24.0})
+        with urllib.request.urlopen(server.url, timeout=10) as resp:
+            roll = json.loads(resp.read())
+        assert roll["streams"]["slo"]["last"]["req_per_s"] == 24.0
+    finally:
+        server.close()
+        rec.close()
+
+
+# ---------------------------------------------------------------------------
+# Source adapters
+# ---------------------------------------------------------------------------
+
+
+class _FakeSource:
+    """Minimal slo_report() source: two classes, mutable counters."""
+
+    def __init__(self):
+        self.count = 0
+        self.floor = None
+
+    def slo_report(self):
+        return {
+            "count": self.count,
+            "errors": 0,
+            "shed": 2,
+            "admission": {"depth": 5, "predicted_miss_rate": 0.1,
+                          "shed_floor": self.floor},
+            "recovery": {"lane_deaths": 1, "rerouted": 3, "dead_lanes": 0},
+            "classes": {
+                "w.fast": {"count": self.count, "errors": 0, "admitted": 9,
+                           "shed": 0, "priority": 1, "p50_ms": 1.0,
+                           "p95_ms": 4.0, "p99_ms": 5.0,
+                           "deadline_hit_rate": 1.0, "mean_batch_size": 2.0,
+                           "staleness_mean_s": 0.25},
+                "w.slow": {"count": 0, "errors": 0, "admitted": 0, "shed": 2,
+                           "priority": 0, "p50_ms": None, "p95_ms": 9.0,
+                           "p99_ms": None, "deadline_hit_rate": 0.0,
+                           "mean_batch_size": None, "staleness_mean_s": None},
+            },
+        }
+
+
+def test_slo_sampler_derives_rates_and_worst_class():
+    rec = Recorder()
+    src = _FakeSource()
+    sampler = SLOSampler(rec, src)
+    src.count = 10
+    first = sampler.sample()
+    assert "req_per_s" not in first  # no interval yet
+    src.count = 20
+    second = sampler.sample()
+    assert second["req_per_s"] > 0
+    assert second["p95_ms"] == 9.0  # worst class lifted to top level
+    assert second["staleness_mean_s"] == 0.25
+    assert second["w.fast.count"] == 20 and second["w.slow.shed"] == 2
+    assert "w.slow.p50_ms" not in second  # None fields stay absent
+    rec.close()
+
+
+def test_slo_sampler_records_admission_transitions_only():
+    rec = Recorder()
+    src = _FakeSource()
+    sampler = SLOSampler(rec, src)
+    sampler.sample()          # initial floor None: establishes state, no event
+    sampler.sample()          # unchanged: still no event
+    src.floor = 1
+    sampler.sample()          # None -> 1: one transition
+    sampler.sample()          # unchanged
+    src.floor = None
+    sampler.sample()          # 1 -> None: second transition
+    roll = rec.rollup()
+    admission = roll["streams"]["admission"]
+    assert admission["count"] == 2
+    assert admission["last"]["shed_floor"] == -1  # None encoded as -1
+    rec.close()
+
+
+def _synthetic_snapshot(k=3, w=8):
+    draws = np.cumsum(
+        np.random.default_rng(0).normal(size=(k, w)), axis=1
+    ).astype(np.float32)
+    return Snapshot(draws=draws, num_draws=k * w, steps_done=64,
+                    staleness_s=0.5, summary={}, created_at=0.0)
+
+
+def test_record_snapshot_emits_freshness_diagnostics():
+    rec = Recorder()
+    out = record_snapshot(rec, "bayeslr", _synthetic_snapshot())
+    assert out["workload"] == "bayeslr"
+    assert out["staleness_s"] == 0.5 and out["steps_done"] == 64
+    assert np.isfinite(out["rhat"]) and out["ess"] > 0
+    # too-shallow window: diagnostics are omitted, not fabricated
+    shallow = record_snapshot(rec, "b", _synthetic_snapshot(w=2))
+    assert "rhat" not in shallow
+    rec.close()
+
+
+def test_record_adaptation_flattens_summary():
+    rec = Recorder()
+    summary = {
+        "accept_rate": np.array([0.2, 0.4]),      # per-chain -> mean
+        "mean_batch_frac": 0.125,                  # scalar -> direct
+        "schedule": {"epsilon": 0.01},             # nested -> dotted
+        "edges": {"hist": np.arange(5)},           # nested array -> dropped
+    }
+    out = record_adaptation(rec, "sv", summary)
+    assert out["accept_rate_mean"] == pytest.approx(0.3)
+    assert out["mean_batch_frac"] == 0.125
+    assert out["schedule.epsilon"] == 0.01
+    assert not any(k.startswith("edges") for k in out)
+    assert record_adaptation(rec, "sv", {}) is None
+    assert record_adaptation(rec, "sv", {"note": "text"}) is None
+    rec.close()
+
+
+def test_make_on_block_records_refresh_throughput(gaussian_target_factory):
+    from repro.core import ChainEnsemble, RandomWalk
+
+    target, _, _ = gaussian_target_factory(n=400, seed=5)
+    ens = ChainEnsemble(target, RandomWalk(0.1), num_chains=2)
+    rec = Recorder()
+    _, out = ens.run_timed(jax.random.key(0), ens.init(jnp.zeros(())),
+                           num_steps=6, block_every=2,
+                           on_block=make_on_block(rec, "gauss"))
+    assert out["next_step"] == 6
+    refresh = rec.rollup()["streams"]["refresh"]
+    assert refresh["count"] == 3  # one record per block
+    assert refresh["last"]["steps_done"] == 6
+    assert refresh["last"]["workload"] == "gauss"
+    # the first block has no prior clock; later blocks report throughput
+    assert refresh["fields"]["transitions_per_sec"]["count"] == 2
+    assert refresh["fields"]["transitions_per_sec"]["min"] > 0
+    assert 0.0 <= refresh["last"]["accept_rate"] <= 1.0
+    rec.close()
+
+
+def test_record_fleet_sync_accounts_delta_bytes():
+    class _FakeFleet:
+        sync_stats = {"syncs": 4, "full_deltas": 1, "skipped_dead": 0,
+                      "delta_wire_bytes": 100, "full_wire_bytes": 400,
+                      "delta_payload_bytes": 80, "full_payload_bytes": 300}
+
+        def report(self):
+            return {"shards": {"b@0": {"writer_steps": 64,
+                                       "replica_versions": [64, 48]}},
+                    "errors": {}}
+
+    rec = Recorder()
+    out = record_fleet_sync(rec, _FakeFleet())
+    assert out["delta_ratio"] == 0.25
+    assert out["b@0.writer_steps"] == 64
+    assert out["b@0.min_replica_version"] == 48
+    assert out["sync_errors"] == 0 and out["full_deltas"] == 1
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/gate.py — the CI perf-regression gate
+# ---------------------------------------------------------------------------
+
+
+def _write_bench(dirpath, p95=20.0, qps=1000.0, tps=5000.0):
+    os.makedirs(dirpath, exist_ok=True)
+    with open(os.path.join(dirpath, "BENCH_serving.json"), "w") as f:
+        json.dump({"bench": "serving", "records": [
+            {"kind": "queries", "K": 4, "max_batch": 16,
+             "qps": qps, "p50_ms": 5.0, "p95_ms": p95, "p99_ms": 2 * p95},
+        ]}, f)
+    with open(os.path.join(dirpath, "BENCH_multichain.json"), "w") as f:
+        json.dump({"bench": "multichain", "records": [
+            {"engine": "ensemble", "N": 2000, "K": 8, "steps": 64,
+             "tps_e2e": tps * 0.9, "tps_steady": tps},
+        ]}, f)
+
+
+def test_gate_passes_on_unchanged_fixture(tmp_path):
+    _write_bench(tmp_path / "prev")
+    _write_bench(tmp_path / "cur")
+    code = gate.main(["--previous", str(tmp_path / "prev"),
+                      "--current", str(tmp_path / "cur"),
+                      "--benches", "serving,multichain"])
+    assert code == 0
+    verdict = json.loads((tmp_path / "cur" / "GATE_verdict.json").read_text())
+    assert verdict["status"] == "pass"
+    assert verdict["checked"] > 0 and verdict["regressions"] == []
+
+
+def test_gate_fails_on_p95_regression(tmp_path):
+    _write_bench(tmp_path / "prev", p95=20.0)
+    _write_bench(tmp_path / "cur", p95=25.0)  # +25% > 15% threshold
+    code = gate.main(["--previous", str(tmp_path / "prev"),
+                      "--current", str(tmp_path / "cur"),
+                      "--benches", "serving,multichain"])
+    assert code == 1
+    verdict = json.loads((tmp_path / "cur" / "GATE_verdict.json").read_text())
+    assert verdict["status"] == "fail"
+    regressed = {(r["record"].split("/")[0], r["metric"])
+                 for r in verdict["regressions"]}
+    assert regressed == {("serving", "p95_ms"), ("serving", "p99_ms")}
+
+
+def test_gate_fails_on_throughput_drop_but_tolerates_small_noise(tmp_path):
+    verdict = run_gate(str(tmp_path / "prev"), str(tmp_path / "cur"))
+    # throughput down 50%: fail; 10% noise on qps: within threshold
+    _write_bench(tmp_path / "prev", qps=1000.0, tps=5000.0)
+    _write_bench(tmp_path / "cur", qps=900.0, tps=2500.0)
+    verdict = run_gate(str(tmp_path / "prev"), str(tmp_path / "cur"),
+                       benches=("serving", "multichain"))
+    assert verdict["status"] == "fail"
+    metrics = {r["metric"] for r in verdict["regressions"]}
+    assert metrics == {"tps_e2e", "tps_steady"}  # the 10% qps dip passes
+
+
+def test_gate_no_baseline_passes_unless_strict(tmp_path):
+    _write_bench(tmp_path / "cur")
+    verdict = run_gate(str(tmp_path / "nope"), str(tmp_path / "cur"),
+                       benches=("serving",))
+    assert verdict["status"] == "no_baseline"
+    strict = run_gate(str(tmp_path / "nope"), str(tmp_path / "cur"),
+                      benches=("serving",), fail_on_missing=True)
+    assert strict["status"] == "fail"
+
+
+def test_gate_new_record_without_baseline_is_reported_not_failed(tmp_path):
+    _write_bench(tmp_path / "prev")
+    _write_bench(tmp_path / "cur")
+    # current grows a record the baseline never measured (new K config)
+    path = tmp_path / "cur" / "BENCH_serving.json"
+    payload = json.loads(path.read_text())
+    payload["records"].append({"kind": "queries", "K": 8, "max_batch": 16,
+                               "qps": 1.0, "p95_ms": 1e9})
+    path.write_text(json.dumps(payload))
+    verdict = run_gate(str(tmp_path / "prev"), str(tmp_path / "cur"),
+                       benches=("serving",))
+    assert verdict["status"] == "pass"
+    assert any("K=8" in m.get("record", "") for m in verdict["missing"])

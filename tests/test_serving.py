@@ -179,6 +179,125 @@ def test_queue_worker_thread_serves(warm_pool):
 
 
 # ---------------------------------------------------------------------------
+# Unified SLO report schema: edge cases
+# ---------------------------------------------------------------------------
+
+
+def _fake_request(workload="w", query_class="fast", *, latency_s=None,
+                  error=None, deadline_met=None, staleness_s=None,
+                  batch_size=None):
+    from repro.serving.queue import Request
+
+    req = Request(workload=workload, query_class=query_class,
+                  xs=np.zeros(1), deadline_s=1.0, submitted_at=0.0)
+    req.latency_s = latency_s
+    req.error = error
+    req.deadline_met = deadline_met
+    req.staleness_s = staleness_s
+    req.batch_size = batch_size
+    return req
+
+
+def test_slo_report_empty_window():
+    """No completed requests: totals are zero, classes is empty, and every
+    schema key is still present (consumers never probe for keys)."""
+    from repro.core.stats import build_slo_report, slo_summary
+
+    report = build_slo_report([]).to_dict()
+    assert report["count"] == 0 and report["errors"] == 0
+    assert report["shed"] == 0 and report["classes"] == {}
+    assert report["admission"] is None and report["recovery"] is None
+    # the raw percentile helper still refuses an empty sample (pinned: an
+    # accidental empty slice should be loud, not silently None)
+    with pytest.raises(ValueError, match="at least one request"):
+        slo_summary([])
+    # a fresh queue reports the same empty-but-complete schema
+    queue = RequestQueue(_tiny_pool(), max_batch=2)
+    assert queue.slo_report()["count"] == 0
+
+
+def test_slo_report_all_requests_shed():
+    """Shed requests complete (count them) but are neither errors nor
+    latency samples: percentiles stay None, deadline_hit_rate stays 0."""
+    from repro.core.stats import build_slo_report
+
+    reqs = [_fake_request(latency_s=0.001, error="shed: overload",
+                          deadline_met=False) for _ in range(5)]
+    report = build_slo_report(reqs).to_dict()
+    assert report["count"] == 5          # they completed, just answerless
+    assert report["errors"] == 0 and report["shed"] == 5
+    entry = report["classes"]["w.fast"]
+    assert entry["count"] == 0 and entry["shed"] == 5
+    assert entry["p50_ms"] is None and entry["p95_ms"] is None
+    assert entry["deadline_hit_rate"] == 0.0
+
+
+def test_slo_report_single_sample_percentiles():
+    """One successful request: every percentile collapses to that sample
+    (no interpolation artifacts, no NaNs)."""
+    from repro.core.stats import build_slo_report
+
+    report = build_slo_report([_fake_request(
+        latency_s=0.012, deadline_met=True, staleness_s=0.5, batch_size=1,
+    )]).to_dict()
+    entry = report["classes"]["w.fast"]
+    assert entry["p50_ms"] == entry["p95_ms"] == entry["p99_ms"]
+    assert entry["p50_ms"] == pytest.approx(12.0)
+    assert entry["mean_ms"] == entry["max_ms"] == pytest.approx(12.0)
+    assert entry["deadline_hit_rate"] == 1.0
+    assert entry["staleness_mean_s"] == entry["staleness_max_s"] == 0.5
+
+
+def test_slo_report_counters_override_and_errors_split():
+    """Router-style submit-time counters override completion-derived
+    admitted/shed, and a counters-only class still gets a row."""
+    from repro.core.stats import build_slo_report
+
+    reqs = [
+        _fake_request(latency_s=0.010, deadline_met=True, batch_size=2),
+        _fake_request(latency_s=0.030, error="RuntimeError: boom",
+                      deadline_met=False),
+    ]
+    report = build_slo_report(
+        reqs,
+        priorities={"fast": 2, "bulk": 0},
+        class_counters={("w", "fast"): {"admitted": 7, "shed": 3},
+                        ("w", "bulk"): {"admitted": 0, "shed": 4}},
+    ).to_dict()
+    fast = report["classes"]["w.fast"]
+    assert fast["count"] == 1 and fast["errors"] == 1
+    assert fast["admitted"] == 7 and fast["shed"] == 3
+    assert fast["priority"] == 2
+    assert fast["deadline_hit_rate"] == 0.5  # failure counts as a miss
+    assert fast["p95_ms"] == pytest.approx(10.0)  # error not a latency sample
+    bulk = report["classes"]["w.bulk"]  # everything shed, nothing completed
+    assert bulk["count"] == 0 and bulk["shed"] == 4
+    assert report["errors"] == 1 and report["shed"] == 7
+
+
+def test_slo_report_deprecated_total_requests_alias():
+    """The pre-unification ``total_requests`` spelling still answers — with
+    a DeprecationWarning — but is not a real key: iteration, ``in``, and
+    JSON serialization see only the canonical schema."""
+    import json
+
+    from repro.core.stats import build_slo_report
+
+    report = build_slo_report([_fake_request(latency_s=0.01,
+                                             deadline_met=True)]).to_dict()
+    with pytest.warns(DeprecationWarning, match="total_requests"):
+        assert report["total_requests"] == report["count"] == 1
+    with pytest.warns(DeprecationWarning):
+        assert report.get("total_requests") == 1
+    assert "total_requests" not in report
+    assert "total_requests" not in json.dumps(report)
+    # unknown keys are still plain KeyErrors / get-defaults, no warning
+    with pytest.raises(KeyError):
+        report["no_such_key"]
+    assert report.get("no_such_key", "fallback") == "fallback"
+
+
+# ---------------------------------------------------------------------------
 # Freshness policy
 # ---------------------------------------------------------------------------
 
@@ -372,7 +491,7 @@ def test_malformed_request_fails_its_batch_not_the_server(warm_pool):
     report = queue.slo_report()
     entry = report["classes"]["bayeslr.predictive"]
     assert entry["errors"] == 1 and entry["deadline_hit_rate"] == 0.0
-    assert "p50_ms" not in entry  # failures don't fabricate latency stats
+    assert entry["p50_ms"] is None  # failures don't fabricate latency stats
 
 
 def test_query_before_refresh_raises():
