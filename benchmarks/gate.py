@@ -23,7 +23,7 @@ import json
 import os
 import sys
 
-BENCHES = ("multichain", "serving", "fleet", "roofline")
+BENCHES = ("multichain", "serving", "fleet", "roofline", "subposterior")
 
 # Metric -> direction. HIGHER: a drop beyond the threshold regresses.
 # LOWER: a rise beyond the threshold regresses. Anything not listed is
@@ -46,7 +46,8 @@ METRIC_DIRECTIONS = {
 # Fields that identify a record across runs (never compared as metrics).
 ID_FIELDS = ("kind", "engine", "name", "kernel", "workload", "transport",
              "path", "backend", "shape", "N", "K", "steps", "replicas",
-             "queries", "rows_per_query", "max_batch", "window", "mode")
+             "queries", "rows_per_query", "max_batch", "window", "mode",
+             "P", "method")
 
 
 def record_key(bench: str, rec: dict) -> str:

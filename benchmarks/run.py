@@ -15,13 +15,13 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig5,fig6,fig9,kernels,roofline,"
-                         "multichain,serving,fleet")
+                         "multichain,serving,fleet,subposterior")
     args = ap.parse_args()
     fast = not args.full
 
     from . import fig4_bayeslr, fig5_sublinear, fig6_jointdpm, fig9_sv
     from . import fleet_bench, kernels_bench, multichain_bench, roofline
-    from . import serving_bench
+    from . import serving_bench, subposterior_bench
 
     benches = {
         "fig5": fig5_sublinear,
@@ -33,6 +33,7 @@ def main() -> None:
         "multichain": multichain_bench,
         "serving": serving_bench,
         "fleet": fleet_bench,
+        "subposterior": subposterior_bench,
     }
     selected = args.only.split(",") if args.only else list(benches)
 

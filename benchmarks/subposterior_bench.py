@@ -1,0 +1,169 @@
+"""Subposterior MCMC benchmark: per-partition throughput + combination error.
+
+Measures the data-parallel subposterior pipeline (:mod:`repro.partition`)
+on the conjugate Gaussian-mean model — the one workload with a closed-form
+posterior, so combination *accuracy* is a measurable alongside throughput:
+
+  * **per-partition throughput** — steady-state transitions/s of one
+    partition's subsampled-MH chain ensemble at P in {1, 2, 4}. Each
+    partition holds N/P observations under the ``p(theta)^(1/P)`` tempered
+    prior; aggregate fleet throughput is P x the per-partition figure
+    (partitions are independent writers).
+  * **combination error** — distance between the recombined draws and the
+    exact conjugate posterior ``N(n xbar/(n+1), I/(n+1))``, for both rules
+    (consensus weighted averaging and Gaussian density-product):
+    ``err_mean_sigma`` = mean error in posterior-std units,
+    ``err_cov_rel`` = worst relative error of the covariance diagonal.
+    These are informational for the perf gate (only ``tps_steady`` gates)
+    but tracked run-over-run in ``BENCH_subposterior.json``.
+
+Reproduction guide: docs/BENCHMARKS.md. Statistical correctness bars live
+in ``tests/test_subposterior.py`` (this bench reuses its model shape).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from .multichain_bench import bench_json_path
+
+_D = 2  # parameter dimension (closed-form posterior is per-coordinate)
+
+
+def _build_full_target(n: int, seed: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import build_target
+
+    theta_true = jnp.asarray([0.7, -0.4])
+    x = theta_true + jax.random.normal(jax.random.key(seed), (n, _D))
+    target = build_target(
+        "gaussian_mean", x, n,
+        prior_logpdf=lambda th: -0.5 * jnp.sum(th ** 2, axis=-1),
+    )
+    xbar = np.asarray(jnp.mean(x, axis=0), np.float64)
+    post_mean = n * xbar / (n + 1.0)
+    post_var = 1.0 / (n + 1.0)
+    return target, post_mean, post_var
+
+
+def _run_partition(target, num_partitions: int, chains: int, burn: int,
+                   keep: int, seed: int, part_index: int):
+    """Burn + timed draw collection for ONE partition's chain ensemble;
+    returns ((K, keep, D) draws, steady transitions/s)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import ChainEnsemble, RandomWalk, SubsampledMHConfig
+
+    n_total = target.num_sections * num_partitions
+    cfg = SubsampledMHConfig(
+        batch_size=min(256, target.num_sections), epsilon=0.01,
+        sampler="stream",
+    )
+    # Subposterior std ~ sqrt(P/(n+1)): scale the RW proposal with the
+    # tempered posterior's width so acceptance stays in the useful band
+    # at every P.
+    sigma = 1.7 * float(np.sqrt(num_partitions / (n_total + 1.0)))
+    ens = ChainEnsemble(target, RandomWalk(sigma), chains, config=cfg)
+    state = ens.init(jnp.zeros(_D))
+    key = jax.random.fold_in(jax.random.key(seed + 1), part_index)
+    state, _, _ = ens.run(None, state, burn,
+                          step_keys=ens.step_keys(key, 0, burn))
+    jax.block_until_ready(state.theta)
+    t0 = time.perf_counter()
+    state, samples, _ = ens.run(None, state, keep,
+                                step_keys=ens.step_keys(key, burn, keep))
+    jax.block_until_ready(state.theta)
+    wall = time.perf_counter() - t0
+    return np.asarray(samples), chains * keep / max(wall, 1e-12)
+
+
+def bench_subposterior(n: int, chains: int, burn: int, keep: int,
+                       partition_counts=(1, 2, 4), seed: int = 0):
+    """The sweep: per-partition tps at each P, plus both combination rules'
+    error against the exact conjugate posterior."""
+    from repro.partition import combine_draws, partition_target
+
+    full_target, post_mean, post_var = _build_full_target(n, seed)
+    post_std = float(np.sqrt(post_var))
+    records = []
+    for num_p in partition_counts:
+        targets = partition_target(full_target, num_p)
+        draws, tps = [], []
+        for p, t in enumerate(targets):
+            d, rate = _run_partition(t, num_p, chains, burn, keep, seed, p)
+            draws.append(d)
+            tps.append(rate)
+        records.append({
+            "kind": "subposterior_run",
+            "P": num_p,
+            "N": n,
+            "K": chains,
+            "steps": keep,
+            "sections_per_partition": n // num_p,
+            "tps_steady": float(np.mean(tps)),
+            "tps_min": float(np.min(tps)),
+            "tps_aggregate": float(np.sum(tps)),
+        })
+        for method in ("consensus", "product"):
+            combined = combine_draws(draws, method, seed=seed)
+            flat = np.asarray(combined, np.float64).reshape(-1, _D)
+            err_mean = float(
+                np.max(np.abs(flat.mean(axis=0) - post_mean)) / post_std
+            )
+            err_cov = float(
+                np.max(np.abs(flat.var(axis=0, ddof=1) / post_var - 1.0))
+            )
+            records.append({
+                "kind": "combine",
+                "P": num_p,
+                "N": n,
+                "K": chains,
+                "method": method,
+                "num_draws": int(flat.shape[0]),
+                "err_mean_sigma": err_mean,
+                "err_cov_rel": err_cov,
+            })
+    return records
+
+
+def main(fast: bool = True):
+    if fast:
+        n, chains, burn, keep = 2048, 4, 300, 400
+    else:
+        n, chains, burn, keep = 8192, 8, 600, 800
+
+    records = bench_subposterior(n, chains, burn, keep)
+    rows_out = []
+    for rec in records:
+        if rec["kind"] == "subposterior_run":
+            rows_out.append((
+                f"subposterior_P{rec['P']}",
+                1e6 / rec["tps_steady"],
+                f"tps={rec['tps_steady']:.0f}"
+                f"_aggregate={rec['tps_aggregate']:.0f}"
+                f"_n_p={rec['sections_per_partition']}",
+            ))
+        else:
+            rows_out.append((
+                f"subposterior_combine_{rec['method']}_P{rec['P']}",
+                rec["err_mean_sigma"],
+                f"err_mean={rec['err_mean_sigma']:.3f}sigma"
+                f"_err_cov={rec['err_cov_rel']:.3f}"
+                f"_draws={rec['num_draws']}",
+            ))
+
+    path = bench_json_path("subposterior")
+    with open(path, "w") as f:
+        json.dump({"bench": "subposterior", "records": records}, f, indent=1)
+    rows_out.append((f"subposterior_json:{path}", 0.0, "machine-readable output"))
+    return rows_out, records
+
+
+if __name__ == "__main__":
+    for name, us, derived in main()[0]:
+        print(f"{name},{us:.1f},{derived}")

@@ -48,6 +48,14 @@ class PartitionedTarget:
     # Name of the registered kernel family (repro.core.target_builder) that
     # built log_local / log_local_ensemble, or None for hand-wired targets.
     family: str | None = None
+    # Optional construction recipe (repro.core.target_builder.TargetSpec):
+    # the family name, the section-pool data arrays, and the (possibly
+    # tempered) prior the builder assembled this target from. Carrying the
+    # recipe is what makes targets *re-buildable* — the dataset partitioner
+    # (repro.partition) slices the pool per subposterior worker, and the
+    # streaming append path concatenates new observations — without any
+    # per-workload code. None for hand-wired or latent-dependent targets.
+    spec: Any | None = None
 
 
 def from_iid_loglik(

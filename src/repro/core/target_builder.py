@@ -79,6 +79,103 @@ def _replicate_round(out: jax.Array) -> jax.Array:
 
 
 @dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    """The re-buildable recipe behind a builder-constructed target.
+
+    Everything :func:`build_target` needs to assemble the target again:
+    the family name, the section-pool arrays (axis 0 = sections), the
+    prior, and ``prior_scale`` — the tempering exponent on the prior,
+    ``p(theta)^(1/P)`` for a P-way subposterior partition (Scott et al.
+    consensus Monte Carlo; "Patterns of Scalable Bayesian Inference"), so
+    the product of the P subposteriors is the full posterior.
+
+    A spec is only attached when ``data`` is concrete arrays (latent-
+    dependent callable pools cannot be sliced/appended structurally).
+    """
+
+    family: str
+    data: Any  # pytree of (N, ...) arrays, sections along axis 0
+    num_sections: int
+    prior_logpdf: Callable[[Params], jax.Array]
+    params_fn: Callable[[Params], Any] | None = None
+    prior_scale: float = 1.0
+
+
+def spec_of(target: PartitionedTarget) -> TargetSpec:
+    """The target's construction recipe, or a clear error for targets that
+    were hand-wired (no family / callable data / explicit log_global)."""
+    if target.spec is None:
+        raise ValueError(
+            "target carries no TargetSpec (hand-wired log_global/log_local, "
+            "callable data, or family=None) — partitioning and streaming "
+            "append need a build_target(...) construction with concrete "
+            "data arrays and prior_logpdf"
+        )
+    return target.spec
+
+
+def build_from_spec(spec: TargetSpec) -> PartitionedTarget:
+    """Re-run the builder on a (possibly sliced/appended/tempered) spec."""
+    return build_target(
+        spec.family,
+        spec.data,
+        spec.num_sections,
+        prior_logpdf=spec.prior_logpdf,
+        params_fn=spec.params_fn,
+        prior_scale=spec.prior_scale,
+    )
+
+
+def _section_count(data: Any) -> int:
+    leaves = jax.tree.leaves(data)
+    if not leaves:
+        return 0
+    counts = {int(leaf.shape[0]) for leaf in leaves}
+    if len(counts) != 1:
+        raise ValueError(
+            f"data leaves disagree on the section axis: {sorted(counts)}"
+        )
+    return counts.pop()
+
+
+def append_observations(target: PartitionedTarget, new_data: Any) -> PartitionedTarget:
+    """A new target whose section pool is ``concat([old, new], axis=0)``.
+
+    The streaming append-only primitive: scoring functions are rebuilt by
+    the same builder path, so the result is *identical* to building the
+    target on the concatenated data from scratch (regression-tested
+    property). An empty append (zero new sections) returns ``target``
+    itself — a bit-for-bit no-op.
+    """
+    spec = spec_of(target)
+    n_new = _section_count(new_data)
+    if n_new == 0:
+        return target
+    old_leaves = jax.tree.structure(spec.data)
+    new_leaves = jax.tree.structure(new_data)
+    if old_leaves != new_leaves:
+        raise ValueError(
+            f"appended data structure {new_leaves} != target data "
+            f"structure {old_leaves}"
+        )
+    def cat(a, b):
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        if a.shape[1:] != b.shape[1:]:
+            raise ValueError(
+                f"appended section shape {b.shape[1:]} != existing "
+                f"{a.shape[1:]}"
+            )
+        return jnp.concatenate([a, b.astype(a.dtype)], axis=0)
+
+    merged = jax.tree.map(cat, spec.data, new_data)
+    return build_from_spec(
+        dataclasses.replace(
+            spec, data=merged, num_sections=spec.num_sections + n_new
+        )
+    )
+
+
+@dataclasses.dataclass(frozen=True)
 class KernelFamily:
     """A local-likelihood family: reference scoring + fused ensemble delta.
 
@@ -196,9 +293,38 @@ def _ce_ensemble_delta(data, table, table_p, idx):
     )
 
 
+def _gm_loglik(data, theta, idx):
+    xg = _gather(data, idx, 1)  # (m, D) or (K, m, D)
+    return -0.5 * jnp.sum((xg - theta[..., None, :]) ** 2, axis=-1)
+
+
+def _gm_delta(data, theta, theta_p, idx):
+    xg = _gather(data, idx, 1)
+    return 0.5 * (
+        jnp.sum((xg - theta[..., None, :]) ** 2, axis=-1)
+        - jnp.sum((xg - theta_p[..., None, :]) ** 2, axis=-1)
+    )
+
+
+def _gm_ensemble_delta(data, theta, theta_p, idx):
+    idx = _shard_round_idx(idx)
+    xg = _gather_sharded(data, idx, 1)  # (K, m, D)
+    out = 0.5 * (
+        jnp.sum((xg - theta[:, None, :]) ** 2, axis=-1)
+        - jnp.sum((xg - theta_p[:, None, :]) ** 2, axis=-1)
+    )
+    return _replicate_round(out)
+
+
 register_family(KernelFamily("logit", _logit_loglik, _logit_delta, _logit_ensemble_delta))
 register_family(KernelFamily("gaussian_ar1", _ar1_loglik, _ar1_delta, _ar1_ensemble_delta))
 register_family(KernelFamily("ce", _ce_loglik, _ce_delta, _ce_ensemble_delta))
+# Unit-variance Gaussian mean model: data = x (N, D), params = theta (D,),
+# per-section factor N(x_i | theta, I) up to the additive constant (only
+# deltas and relative densities matter to MH and the diagnostics). This is
+# the conjugate family the subposterior ground-truth harness runs on: prior
+# N(0, I) gives the closed-form posterior N(n xbar / (n+1), I / (n+1)).
+register_family(KernelFamily("gaussian_mean", _gm_loglik, _gm_delta, _gm_ensemble_delta))
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +342,7 @@ def build_target(
     log_local: Callable[[Params, Params, jax.Array], jax.Array] | None = None,
     log_density: Callable[[Params], jax.Array] | None = None,
     params_fn: Callable[[Params], Any] | None = None,
+    prior_scale: float = 1.0,
 ) -> PartitionedTarget:
     """Construct a :class:`~repro.core.target.PartitionedTarget` from a
     registered kernel family.
@@ -227,6 +354,20 @@ def build_target(
     ``log_global``. With ``family=None`` an explicit ``log_local`` is
     required and no ensemble evaluation is attached — the pass-through for
     targets whose local score matches no registered family.
+
+    ``prior_scale`` tempers the prior to ``prior_scale * log p(theta)`` —
+    the ``p(theta)^(1/P)`` subposterior construction, where each of P
+    data-partition workers carries 1/P of the prior mass so the product of
+    the P subposteriors is the full posterior (:mod:`repro.partition`).
+    With ``prior_scale == 1.0`` (the default) the built closures are
+    *exactly* the untempered ones — no wrapper — which is what keeps the
+    P=1 fleet configuration bit-for-bit identical to the unpartitioned
+    path.
+
+    When ``data`` is concrete arrays and the prior is given, the target
+    carries a :class:`TargetSpec` recipe (``target.spec``) so it can be
+    re-built on a data slice (:func:`repro.partition.partition_target`) or
+    on appended observations (:func:`append_observations`).
 
     Example — the BayesLR target in one call::
 
@@ -244,6 +385,13 @@ def build_target(
     """
     if num_sections is None:
         raise ValueError("num_sections is required")
+    user_prior = prior_logpdf
+    if prior_logpdf is not None and prior_scale != 1.0:
+        scale = float(prior_scale)
+        base_prior = prior_logpdf
+        prior_logpdf = lambda theta: scale * base_prior(theta)
+    elif prior_scale != 1.0:
+        raise ValueError("prior_scale tempering requires prior_logpdf")
     if log_global is None:
         if prior_logpdf is None:
             raise ValueError("pass prior_logpdf or an explicit log_global")
@@ -262,6 +410,18 @@ def build_target(
         )
 
     fam = get_family(family)
+    spec = None
+    if not callable(data) and data is not None and user_prior is not None:
+        # Recipe for partitioning / streaming append: the *untempered* prior
+        # plus the exponent, so re-tempering composes instead of stacking.
+        spec = TargetSpec(
+            family=family,
+            data=data,
+            num_sections=num_sections,
+            prior_logpdf=user_prior,
+            params_fn=params_fn,
+            prior_scale=float(prior_scale),
+        )
     data_fn = data if callable(data) else (lambda theta: data)
     params_fn = params_fn or (lambda theta: theta)
 
@@ -289,4 +449,5 @@ def build_target(
         log_density=log_density,
         log_local_ensemble=log_local_ensemble,
         family=fam.name,
+        spec=spec,
     )

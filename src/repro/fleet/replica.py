@@ -148,6 +148,19 @@ class ReplicaEnsemble:
         values, snap = self.query(spec, xs)
         return values, snap.staleness_s
 
+    def window(self, known_version: int = -1) -> tuple[int, Snapshot | None]:
+        """The replica's current window for combine-at-query: returns
+        ``(version, snapshot)``, or ``(version, None)`` when the caller
+        already holds ``known_version`` — the router's per-lane window
+        cache then skips re-fetching an unchanged window (which, for the
+        process transport, is a full-window pickle)."""
+        with self._lock:
+            if self._dead:
+                raise ReplicaDeadError(f"replica {self.name!r} is down (killed)")
+            if self.version == known_version and self._draws is not None:
+                return self.version, None
+            return self.version, self.snapshot()
+
     def stats(self) -> dict:
         with self._lock:
             return {
@@ -236,6 +249,9 @@ def _replica_worker(conn, name: str, workload_name: str, build_kw: dict,
                 spec = workload.query_specs[query_class]
                 values, snap = replica.query(spec, xs)
                 out = ("ok", values, snap.staleness_s, replica.version)
+            elif cmd == "window":
+                version, snap = replica.window(msg[1])
+                out = ("ok", version, snap)
             elif cmd == "reset":
                 replica.reset()
                 out = ("ok", replica.version)
@@ -347,6 +363,14 @@ class ReplicaProcess:
         del spec  # resolved registry-side in the worker
         out = self._rpc("query", query_class, np.asarray(xs))
         self.version = out[3]
+        return out[1], out[2]
+
+    def window(self, known_version: int = -1) -> tuple[int, Snapshot | None]:
+        """RPC counterpart of :meth:`ReplicaEnsemble.window`: the snapshot
+        crosses the pipe only when ``known_version`` is out of date (numpy
+        windows pickle directly)."""
+        out = self._rpc("window", known_version)
+        self.version = out[1]
         return out[1], out[2]
 
     def stats(self) -> dict:

@@ -27,7 +27,9 @@ from collections import defaultdict, deque
 import numpy as np
 
 from ..core.stats import build_slo_report
+from ..partition.combine import combine_snapshots
 from ..serving.queue import Request
+from ..serving.resident import Snapshot, SnapshotEvaluator
 from .replica import ReplicaDeadError
 from .topology import Fleet, FleetShard
 
@@ -59,7 +61,8 @@ class AdmissionConfig:
 class _Lane:
     """One replica's pending queue."""
 
-    __slots__ = ("shard", "replica", "pending", "served", "dead")
+    __slots__ = ("shard", "replica", "pending", "served", "dead",
+                 "win_version", "win_snap")
 
     def __init__(self, shard: FleetShard, replica):
         self.shard = shard
@@ -71,6 +74,11 @@ class _Lane:
         # surviving lanes. revive() re-admits it once the replica answers
         # pings again (after ReplicaProcess.restart()).
         self.dead = False
+        # Combine-at-query window cache (subposterior workloads only):
+        # the last window this router pulled from the replica and its
+        # version, so an unchanged window never re-crosses the transport.
+        self.win_version = -1
+        self.win_snap: Snapshot | None = None
 
 
 class FleetRouter:
@@ -105,6 +113,27 @@ class FleetRouter:
                 for replica in shard.replicas[:lanes_per_shard]
             ]
             for workload in fleet.workloads()
+        }
+        # Subposterior workloads serve through the combine-at-query path:
+        # per-partition lane groups, a per-workload combined-snapshot cache
+        # keyed by the partition version tuple, and one evaluator per
+        # workload for the combined windows. P=1 workloads never touch any
+        # of this — their serve path is byte-identical to before.
+        self._partitioned: dict[str, int] = {
+            w: fleet.num_partitions(w)
+            for w in fleet.workloads()
+            if fleet.num_partitions(w) > 1
+        }
+        self._partition_lanes: dict[str, dict[int, list[_Lane]]] = {}
+        for workload, num_p in self._partitioned.items():
+            groups: dict[int, list[_Lane]] = {p: [] for p in range(num_p)}
+            for lane in self._lanes[workload]:
+                groups[lane.shard.partition].append(lane)
+            self._partition_lanes[workload] = groups
+        self._combine_lock = threading.Lock()
+        self._combined_cache: dict[str, tuple[tuple, Snapshot]] = {}
+        self._combine_evaluators: dict[str, SnapshotEvaluator] = {
+            w: SnapshotEvaluator(cfg.micro_batch) for w in self._partitioned
         }
         self._lock = threading.Lock()
         self._arrived = threading.Condition(self._lock)
@@ -246,14 +275,91 @@ class FleetRouter:
             source.pending = rest
             return batch
 
+    # -- subposterior combine-at-query --------------------------------------
+
+    def _partition_window(self, workload: str, p: int) -> Snapshot:
+        """The freshest available window for partition ``p``: first live
+        lane that answers, via the version-gated ``window()`` fetch (an
+        unchanged window reuses the lane's cached copy). Dead transports
+        are marked dead and the next lane tried; a partition with no live
+        lane raises — a combined posterior needs *every* partition."""
+        for lane in self._partition_lanes[workload][p]:
+            if lane.dead:
+                continue
+            try:
+                version, snap = lane.replica.window(lane.win_version)
+            except ReplicaDeadError:
+                self._on_lane_death(lane, [])
+                continue
+            if snap is not None:
+                lane.win_version, lane.win_snap = version, snap
+            if lane.win_snap is not None:
+                return lane.win_snap
+        raise ReplicaDeadError(
+            f"no live replica window for workload {workload!r} "
+            f"partition {p}"
+        )
+
+    def _combined_snapshot(self, workload: str) -> Snapshot:
+        """One full-posterior snapshot from the P per-partition windows,
+        cached per partition-version tuple (caller holds ``_combine_lock``).
+        ``steps_done`` of the result is the version sum — the strictly
+        increasing generation key the shared evaluator caches on."""
+        snaps = [
+            self._partition_window(workload, p)
+            for p in range(self._partitioned[workload])
+        ]
+        versions = tuple(s.steps_done for s in snaps)
+        cached = self._combined_cache.get(workload)
+        if cached is not None and cached[0] == versions:
+            return cached[1]
+        combined = combine_snapshots(snaps, self.fleet.config.combine)
+        self._combined_cache[workload] = (versions, combined)
+        return combined
+
+    def _serve_combined(
+        self, workload: str, qclass: str, xs
+    ) -> tuple[np.ndarray, float]:
+        """Serve a batch from the combined subposterior window (the
+        partitioned counterpart of ``lane.replica.serve``)."""
+        spec = self.fleet.spec(workload, qclass)
+        with self._combine_lock:
+            snap = self._combined_snapshot(workload)
+            values = self._combine_evaluators[workload].evaluate(spec, snap, xs)
+        return values, snap.staleness_s
+
+    # -- serving (continued) ------------------------------------------------
+
     def _serve_batch(self, lane: _Lane, batch: list[Request]) -> None:
         workload, qclass = batch[0].workload, batch[0].query_class
         try:
             sizes = [req.xs.shape[0] if req.xs.ndim else 1 for req in batch]
             xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
-            spec = self.fleet.spec(workload, qclass)
-            values, staleness = lane.replica.serve(spec, qclass, xs)
+            if workload in self._partitioned:
+                # Rerouting cannot help a combine that is missing a whole
+                # partition, so a ReplicaDeadError here fails the batch
+                # (the generic handler below) instead of cascading lane
+                # deaths through _on_lane_death.
+                values, staleness = self._serve_combined(workload, qclass, xs)
+            else:
+                spec = self.fleet.spec(workload, qclass)
+                values, staleness = lane.replica.serve(spec, qclass, xs)
         except ReplicaDeadError:
+            if workload in self._partitioned:
+                now = time.monotonic()
+                with self._lock:
+                    for req in batch:
+                        req.error = (
+                            "ReplicaDeadError: a subposterior partition has "
+                            f"no live replica window for {workload!r}"
+                        )
+                        req.latency_s = now - req.submitted_at
+                        req.deadline_met = False
+                        req.batch_size = len(batch)
+                        self._miss_trail.append(True)
+                        req.done.set()
+                    self._completed.extend(batch)
+                return
             # The replica (not the request) failed: the batch is still
             # servable, so reroute it — plus the lane's whole backlog —
             # to the surviving lanes instead of failing it.

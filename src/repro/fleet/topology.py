@@ -29,6 +29,12 @@ from typing import Any, NamedTuple
 
 import jax
 
+from ..partition.combine import METHODS as COMBINE_METHODS
+from ..partition.partitioner import (
+    partition_append_indices,
+    partition_target,
+    take_sections,
+)
 from ..serving.pool import EnsemblePool, ServingConfig
 from ..serving.resident import QuerySpec, ResidentEnsemble
 from ..serving.workloads import ServingWorkload, build_serving_workload
@@ -46,7 +52,13 @@ class FleetConfig:
     fan-out — a no-op on one device); ``transport``: ``"inproc"`` replicas
     share the process (deterministic, cheap — tests/smoke), ``"proc"``
     replicas each get an OS process (the scaling configuration);
-    ``sync_interval_s``: pause between background refresh+broadcast rounds.
+    ``sync_interval_s``: pause between background refresh+broadcast rounds;
+    ``subposterior``: data-parallel partition count P — each workload's
+    observation pool is split into P disjoint stride shards, every writer
+    runs against its local slice under the ``p(theta)^(1/P)`` tempered
+    prior, and the router recombines the per-partition windows at query
+    time with the ``combine`` rule (:mod:`repro.partition`). P=1 is
+    bit-for-bit the unpartitioned fleet.
     """
 
     replicas: int = 2
@@ -59,21 +71,33 @@ class FleetConfig:
     # backend default). One thread per replica is what lets N replicas scale
     # across an M-core host instead of contending for one shared pool.
     replica_threads: int | None = 1
+    subposterior: int = 1  # data partitions P per workload
+    combine: str = "consensus"  # "consensus" | "product" draw combination
 
     def __post_init__(self):
         if self.replicas < 1 or self.shards < 1:
             raise ValueError("replicas and shards must be >= 1")
         if self.transport not in ("inproc", "proc"):
             raise ValueError(f"unknown transport {self.transport!r}")
+        if self.subposterior < 1:
+            raise ValueError(
+                f"subposterior must be >= 1, got {self.subposterior}"
+            )
+        if self.combine not in COMBINE_METHODS:
+            raise ValueError(
+                f"unknown combine method {self.combine!r}; "
+                f"known: {COMBINE_METHODS}"
+            )
 
 
 class FleetShard(NamedTuple):
     """One workload shard: a writer and its read replicas."""
 
-    name: str  # "<workload>@<index>"
+    name: str  # "<workload>@<index>" or "<workload>@p<partition>@<index>"
     workload: str
     writer: ResidentEnsemble
     replicas: tuple
+    partition: int = 0  # data partition this shard's writer samples
 
 
 class Fleet:
@@ -84,6 +108,8 @@ class Fleet:
         self.pool = EnsemblePool(self.config.serving)
         self._workloads: dict[str, ServingWorkload] = {}
         self._shards: dict[str, list[FleetShard]] = {}
+        self._partitions: dict[str, int] = {}  # workload -> P
+        self._data_sizes: dict[str, int] = {}  # workload -> total sections
         self._sync_lock = threading.Lock()
         self.sync_stats = {
             "syncs": 0,
@@ -106,7 +132,15 @@ class Fleet:
     def add_workload(self, name: str, **build_kw) -> list[FleetShard]:
         """Register ``shards`` writers + ``replicas`` replicas for a
         registry workload. ``build_kw`` reaches the workload builder
-        (every shard gets the same data; chain keys differ per shard)."""
+        (every shard gets the same data; chain keys differ per shard).
+
+        With ``config.subposterior = P > 1`` the workload's observation pool
+        is partitioned first and each of the P partitions gets its own
+        ``shards`` writers (P × shards writers total), named
+        ``"<workload>@p<partition>@<index>"``. The P=1 path is untouched —
+        same shard names, same keys, same targets as an unpartitioned
+        fleet.
+        """
         if name in self._shards:
             raise ValueError(f"workload {name!r} already in this fleet")
         cfg = self.config
@@ -115,6 +149,8 @@ class Fleet:
         build_kw.setdefault("seed", scfg.seed)
         base = build_serving_workload(name, **build_kw)
         self._workloads[name] = base
+        if cfg.subposterior > 1:
+            return self._add_partitioned(name, base, build_kw)
         shards: list[FleetShard] = []
         for i in range(cfg.shards):
             shard_name = f"{name}@{i}"  # "@": shard names double as checkpoint file stems
@@ -133,6 +169,57 @@ class Fleet:
             )
             shards.append(FleetShard(shard_name, name, writer, replicas))
         self._shards[name] = shards
+        self._partitions[name] = 1
+        if base.ensemble.target is not None:
+            self._data_sizes[name] = int(base.ensemble.target.num_sections)
+        return shards
+
+    def _add_partitioned(
+        self, name: str, base: ServingWorkload, build_kw: dict
+    ) -> list[FleetShard]:
+        """The subposterior fan-out: P tempered slice targets, each with its
+        own writer group. Raises for workloads whose target carries no
+        :class:`~repro.core.target_builder.TargetSpec` recipe (composite /
+        latent-variable transitions cannot be data-partitioned)."""
+        cfg = self.config
+        scfg = cfg.serving
+        num_p = cfg.subposterior
+        if base.ensemble.target is None:
+            raise ValueError(
+                f"workload {name!r} runs a composite transition with no "
+                "single target; subposterior partitioning needs a "
+                "builder-constructed target"
+            )
+        sub_targets = partition_target(base.ensemble.target, num_p)
+        shards: list[FleetShard] = []
+        for p in range(num_p):
+            for i in range(cfg.shards):
+                shard_name = f"{name}@p{p}@{i}"
+                ensemble = dataclasses.replace(
+                    base.ensemble, target=sub_targets[p]
+                )
+                if cfg.mesh != "auto":
+                    ensemble = dataclasses.replace(ensemble, shard=cfg.mesh)
+                shard_wl = dataclasses.replace(
+                    base, name=shard_name, ensemble=ensemble
+                )
+                # Independent chain trajectories per (partition, shard):
+                # fold the partition in first so partition p shard i never
+                # collides with partition i shard p.
+                key = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.key(scfg.seed), p), i
+                )
+                writer = self.pool.add_workload(shard_wl, key=key)
+                replicas = tuple(
+                    self._make_replica(f"{shard_name}#r{j}", name, build_kw)
+                    for j in range(cfg.replicas)
+                )
+                shards.append(
+                    FleetShard(shard_name, name, writer, replicas, p)
+                )
+        self._shards[name] = shards
+        self._partitions[name] = num_p
+        self._data_sizes[name] = int(base.ensemble.target.num_sections)
         return shards
 
     def _make_replica(self, replica_name: str, workload: str, build_kw: dict):
@@ -159,6 +246,49 @@ class Fleet:
 
     def spec(self, workload: str, query_class: str) -> QuerySpec:
         return self._workloads[workload].query_specs[query_class]
+
+    def num_partitions(self, workload: str) -> int:
+        """Data partitions P the workload was registered with (1 when the
+        fleet is unpartitioned)."""
+        return self._partitions.get(workload, 1)
+
+    # -- streaming append --------------------------------------------------
+
+    def append_observations(self, workload: str, new_data) -> int:
+        """Fold a freshly appended observation chunk into every running
+        writer of ``workload`` (the streaming append-only target mode).
+
+        Unpartitioned (P=1): every shard's writer sees the full chunk —
+        shards sample the same grown posterior. Partitioned: the chunk is
+        routed with :func:`~repro.partition.partitioner.partition_append_indices`,
+        so each partition's slice grows exactly as if the concatenated pool
+        had been stride-partitioned from scratch (no repartitioning, chains
+        keep running). Writers that receive rows reset their staleness
+        clock (:meth:`~repro.serving.resident.ResidentEnsemble.append`), so
+        pre-append windows stop serving as fresh. Returns the number of
+        appended sections.
+        """
+        shards = self._shards[workload]
+        num_p = self._partitions.get(workload, 1)
+        leaves = jax.tree.leaves(new_data)
+        if not leaves:
+            raise ValueError("empty append chunk (no array leaves)")
+        n_new = int(leaves[0].shape[0])
+        if n_new == 0:
+            return 0
+        if num_p == 1:
+            for shard in shards:
+                shard.writer.append(new_data)
+        else:
+            parts = partition_append_indices(
+                self._data_sizes[workload], n_new, num_p
+            )
+            for shard in shards:
+                idx = parts[shard.partition]
+                if idx.shape[0]:
+                    shard.writer.append(take_sections(new_data, idx))
+        self._data_sizes[workload] = self._data_sizes.get(workload, 0) + n_new
+        return n_new
 
     # -- delta streaming ---------------------------------------------------
 

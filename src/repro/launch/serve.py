@@ -29,6 +29,18 @@ control spreads requests across the replica lanes:
 
 (``--devices N`` forces N virtual host devices before JAX initializes —
 one process group hosting the writer mesh and the replicas.)
+
+``--subposterior P`` turns the fleet data-parallel: the observation pool
+is stride-partitioned into P shards, each with its own writer group
+sampling the local slice under the ``p(theta)^(1/P)`` tempered prior, and
+the router recombines the per-partition windows at query time
+(``--combine consensus|product``). ``--stream`` demos the append-only
+target mode: a fresh observation chunk is folded into the *running*
+writers mid-serve (no restart) and the freshness gate refuses the
+pre-append windows:
+
+    python -m repro.launch.serve --subposterior 2 --smoke
+    python -m repro.launch.serve --subposterior 4 --stream --workload bayeslr
 """
 from __future__ import annotations
 
@@ -106,6 +118,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="admission: queue depth before shedding starts")
     fl.add_argument("--max-miss-rate", type=float, default=0.5,
                     help="admission: predicted deadline-miss rate threshold")
+    fl.add_argument("--subposterior", type=int, default=1, metavar="P",
+                    help="data-parallel subposterior MCMC: partition the "
+                         "observations into P shards, run a writer group "
+                         "per shard under the p(theta)^(1/P) tempered "
+                         "prior, recombine draws at query time (implies "
+                         "--fleet; P=1 is the unpartitioned fleet)")
+    fl.add_argument("--combine", default="consensus",
+                    choices=("consensus", "product"),
+                    help="subposterior draw-combination rule: consensus "
+                         "weighted averaging or Gaussian density-product")
+    fl.add_argument("--stream", action="store_true",
+                    help="streaming append-only target demo: mid-serve, "
+                         "append a fresh observation chunk into the running "
+                         "writers (no restart) and prove the staleness "
+                         "gate refuses pre-append windows (implies --fleet)")
     # -- observability (repro.obs) ------------------------------------------
     ob = ap.add_argument_group("observability")
     ob.add_argument("--stats-addr", default=None, metavar="HOST:PORT",
@@ -387,6 +414,8 @@ def _build_fleet(args):
         shards=args.fleet_shards,
         transport=args.replica_transport,
         mesh=mesh,
+        subposterior=args.subposterior,
+        combine=args.combine,
         serving=ServingConfig(
             num_chains=chains,
             refresh_steps=refresh_steps,
@@ -403,7 +432,8 @@ def _build_fleet(args):
     print(f"fleet: workload={args.workload} shards={args.fleet_shards} "
           f"replicas={args.replicas}/shard transport={args.replica_transport} "
           f"mesh={args.mesh} devices={len(jax.devices())} K={chains} "
-          f"refresh={refresh_steps} window={window}")
+          f"refresh={refresh_steps} window={window} "
+          f"subposterior={args.subposterior} combine={args.combine}")
     fleet = Fleet(config)
     fleet.add_workload(args.workload, smoke=smoke, seed=args.seed)
     workload = fleet.workload(args.workload)
@@ -430,7 +460,7 @@ def _build_router(args, fleet, workload):
     )
 
 
-def _compile_lanes(args, fleet, workload):
+def _compile_lanes(args, fleet, workload, router=None):
     """Compile every replica lane's evaluators outside the measured window."""
     wkey = jax.random.key(args.seed + 2)
     for shard in fleet.shards(args.workload):
@@ -439,6 +469,48 @@ def _compile_lanes(args, fleet, workload):
                 wkey, sub = jax.random.split(wkey)
                 spec = workload.query_specs[cls]
                 replica.serve(spec, cls, spec.make_queries(sub, args.rows_per_query))
+    if router is not None and args.subposterior > 1:
+        # Partitioned workloads serve through the router's combined window,
+        # whose evaluator is distinct from the lanes' — warm it too so the
+        # first measured query doesn't pay XLA compile + first combination.
+        for cls in sorted(workload.query_specs):
+            wkey, sub = jax.random.split(wkey)
+            spec = workload.query_specs[cls]
+            router._serve_combined(
+                args.workload, cls, spec.make_queries(sub, args.rows_per_query)
+            )
+
+
+def _stream_append(args, fleet) -> int:
+    """The --stream demo: append a bootstrap-resampled observation chunk
+    into the running writers mid-serve, prove the staleness gate flipped
+    (pre-append windows read as infinitely stale), then pump one
+    refresh+broadcast round so serving continues against the grown
+    posterior. Returns the number of appended rows."""
+    from repro.core import spec_of
+
+    base = fleet.workload(args.workload)
+    if base.ensemble.target is None:
+        raise RuntimeError(
+            f"--stream needs a builder-constructed target; workload "
+            f"{args.workload!r} runs a composite transition"
+        )
+    spec = spec_of(base.ensemble.target)
+    rng = np.random.default_rng(args.seed + 7)
+    n = int(spec.num_sections)
+    k = max(8, n // 16)
+    idx = rng.integers(0, n, size=k)
+    chunk = jax.tree.map(lambda a: np.asarray(a)[idx], spec.data)
+    added = fleet.append_observations(args.workload, chunk)
+    stale = [
+        s.writer.snapshot().staleness_s for s in fleet.shards(args.workload)
+    ]
+    grew = [s for s in stale if not np.isfinite(s)]
+    fleet.pump(args.workload)  # fold the grown targets into fresh windows
+    print(f"STREAM_OK appended={added} rows mid-serve; "
+          f"{len(grew)}/{len(stale)} writer(s) marked stale by the append, "
+          f"refreshed without restart")
+    return added
 
 
 def serve_fleet(args) -> int:
@@ -466,7 +538,7 @@ def serve_fleet(args) -> int:
 
     router = _build_router(args, fleet, workload)
     recorder, stats_server, sampler = _setup_obs(args, source=router)
-    _compile_lanes(args, fleet, workload)
+    _compile_lanes(args, fleet, workload, router)
     if args.background:
         fleet.start()
         router.start_workers()
@@ -475,6 +547,8 @@ def serve_fleet(args) -> int:
     burst = max(2, args.max_batch // 2)
     t0 = time.perf_counter()
     served = 0
+    stream_rows = 0
+    streamed = False
     pending = []
     for i in range(0, num_queries, burst):
         take = min(burst, num_queries - i)
@@ -491,6 +565,9 @@ def serve_fleet(args) -> int:
             served += len(router.drain())
             if (i // burst) % 8 == 7:
                 fleet.pump(args.workload)  # stream fresh deltas mid-serve
+        if args.stream and not streamed and i + burst >= num_queries // 2:
+            stream_rows = _stream_append(args, fleet)
+            streamed = True
         if sampler is not None and (i // burst) % 4 == 3:
             from repro.obs import record_fleet_sync
 
@@ -580,12 +657,15 @@ def serve_fleet(args) -> int:
         print(f"SERVE_FAIL workload={args.workload} fleet=1 "
               f"errors={report['errors']} served={served}")
         return 1
+    # New fields go AFTER parity= so existing CI greps keep matching.
     print(f"SERVE_OK workload={args.workload} fleet=1 "
           f"shards={args.fleet_shards} replicas={args.replicas} "
           f"queries={served} p50_ms={first['p50_ms']:.2f} "
           f"p95_ms={first['p95_ms']:.2f} "
           f"deadline_hit={first['deadline_hit_rate']:.3f} "
-          f"shed={report['shed']} delta_ratio={ratio:.2f} parity={parity}")
+          f"shed={report['shed']} delta_ratio={ratio:.2f} parity={parity} "
+          f"subposterior={args.subposterior} combine={args.combine}"
+          + (f" stream_rows={stream_rows}" if args.stream else ""))
     return 0
 
 
@@ -812,6 +892,11 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
     if args.fleet and args.workload == "lm":
         parser.error("--fleet serves posterior workloads, not the lm demo")
+    if args.subposterior > 1 or args.stream:
+        if args.workload == "lm":
+            parser.error("--subposterior/--stream serve posterior "
+                         "workloads through the fleet, not the lm demo")
+        args.fleet = True  # both modes live in the fleet serve path
     if args.fleet and args.devices:
         # Must land before JAX initializes its backends (importing jax is
         # fine; creating the first array is not) — hence a fresh

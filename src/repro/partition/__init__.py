@@ -1,0 +1,48 @@
+"""Data-parallel subposterior MCMC: partition observations, combine draws.
+
+The scaling axis for datasets beyond one host (ROADMAP): split the N
+observations into P disjoint shards (:mod:`repro.partition.partitioner`),
+run an unmodified subsampled-MH writer fleet per shard against its local
+slice under the tempered prior ``p(theta)^(1/P)``, and recombine the
+per-shard posterior windows at query time in the fleet router
+(:mod:`repro.partition.combine`: consensus weighted averaging or Gaussian
+density-product). Statistical correctness is pinned by the conjugate
+ground-truth harness in ``tests/test_subposterior.py``.
+"""
+from .combine import (
+    METHODS,
+    combine_draws,
+    combine_snapshots,
+    consensus_combine,
+    flatten_draws,
+    product_combine,
+    product_moments,
+    trim_windows,
+    unflatten_draws,
+)
+from .partitioner import (
+    SCHEMES,
+    partition_append_indices,
+    partition_indices,
+    partition_spec,
+    partition_target,
+    take_sections,
+)
+
+__all__ = [
+    "METHODS",
+    "SCHEMES",
+    "combine_draws",
+    "combine_snapshots",
+    "consensus_combine",
+    "flatten_draws",
+    "partition_append_indices",
+    "partition_indices",
+    "partition_spec",
+    "partition_target",
+    "product_combine",
+    "product_moments",
+    "take_sections",
+    "trim_windows",
+    "unflatten_draws",
+]

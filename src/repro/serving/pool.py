@@ -46,6 +46,12 @@ class FreshnessPolicy:
     serves. A window too short to split (fewer than 4 draws per chain)
     counts as stale, so the gate forces refreshes until the resident has
     both depth and mixing.
+
+    Staleness is measured against the last *state change*, not only the
+    last draw-refresh: a streaming data append
+    (:meth:`ResidentEnsemble.append`) marks the window infinitely stale, so
+    the ``max_staleness_s`` gate never serves a pre-append posterior as
+    fresh no matter how recently it was refreshed.
     """
 
     max_staleness_s: float = 30.0
@@ -193,6 +199,16 @@ class EnsemblePool:
         """Bring every resident to a servable snapshot (initial burn)."""
         for name in self.names():
             self.ensure_fresh(name)
+
+    # -- streaming append --------------------------------------------------
+
+    def append_observations(self, name: str, new_data) -> int:
+        """Fold newly appended observations into ``name``'s running chains
+        (see :meth:`ResidentEnsemble.append`). The resident's staleness
+        clock resets to "never refreshed", so the next freshness-checked
+        query refuses the pre-append window and refreshes against the grown
+        posterior before serving. Returns the number of sections added."""
+        return self._residents[name].append(new_data)
 
     # -- queries -----------------------------------------------------------
 

@@ -284,6 +284,54 @@ class ResidentEnsemble:
                 self._last_refresh = time.monotonic()
         return n
 
+    # -- streaming append --------------------------------------------------
+
+    def append(self, new_data) -> int:
+        """Fold newly appended observations into the *running* chains.
+
+        The streaming append-only target mode: the ensemble's target is
+        rebuilt on ``concat([old, new])`` via its
+        :class:`~repro.core.target_builder.TargetSpec` recipe (identical to
+        a from-scratch build on the concatenated pool — tested property),
+        while ``theta`` and ``steps_done`` carry over, so the next
+        :meth:`refresh` continues the *same* resumable step-key schedule
+        against the grown posterior — no restart, no re-burn-in from
+        ``theta0``. Returns the number of sections added.
+
+        Sampler state and (when scheduled) controller state are shaped by
+        ``num_sections``, so they are re-initialized for the grown pool
+        (the controller re-adapts over the next refreshes). The pre-append
+        window is kept servable but marked infinitely stale
+        (``_last_refresh = None``): the freshness policy's
+        ``max_staleness_s`` gate then refuses to serve pre-append
+        posteriors as fresh until a refresh folds the new data in.
+
+        An empty append is a bit-for-bit no-op: same target object, state,
+        window, and staleness clock.
+        """
+        from ..core.target_builder import append_observations
+
+        with self._refresh_lock:
+            if self.ensemble.target is None:
+                raise ValueError(
+                    f"resident {self.name!r} runs a composite transition "
+                    "with no single appendable target"
+                )
+            new_target = append_observations(self.ensemble.target, new_data)
+            if new_target is self.ensemble.target:
+                return 0
+            added = new_target.num_sections - self.ensemble.target.num_sections
+            new_ensemble = dataclasses.replace(self.ensemble, target=new_target)
+            with self._lock:
+                theta = self._state.theta
+            fresh = new_ensemble.init(theta, batched=True)
+            jax.block_until_ready(fresh.theta)
+            with self._lock:
+                self.ensemble = new_ensemble
+                self._state = fresh
+                self._last_refresh = None  # pre-append window is not fresh
+        return int(added)
+
     # -- snapshots ---------------------------------------------------------
 
     def snapshot(self) -> Snapshot:

@@ -76,6 +76,73 @@ def lm_setup():
 
 
 @pytest.fixture(scope="session")
+def conjugate_posterior():
+    """The subposterior ground-truth harness: a D=2 conjugate Gaussian-mean
+    model (prior N(0, I), x_i ~ N(theta, I)) whose exact posterior is
+    ``N(n xbar / (n+1), I/(n+1))``, plus a memoized ``run(P)`` that returns
+    the P per-partition subsampled-MH windows (each (K, W, D)) sampled
+    against the stride-partitioned, prior-tempered slice targets.
+
+    Session-scoped and lazy: each P's chains run once, shared by every
+    statistical test. ``run(1)`` is the unpartitioned reference chain.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import (
+        ChainEnsemble,
+        RandomWalk,
+        SubsampledMHConfig,
+        build_target,
+    )
+    from repro.partition import partition_target
+
+    n, d, chains, burn, keep, seed = 768, 2, 4, 250, 350, 3
+    theta_true = jnp.asarray([0.6, -0.3])
+    x = theta_true + jax.random.normal(jax.random.key(seed), (n, d))
+    target = build_target(
+        "gaussian_mean", x, n,
+        prior_logpdf=lambda th: -0.5 * jnp.sum(th ** 2, axis=-1),
+    )
+    xbar = np.asarray(jnp.mean(x, axis=0), np.float64)
+    cache = {}
+
+    def run(num_partitions):
+        if num_partitions not in cache:
+            draws = []
+            for p, t in enumerate(partition_target(target, num_partitions)):
+                cfg = SubsampledMHConfig(
+                    batch_size=min(128, t.num_sections), epsilon=0.005,
+                    sampler="stream",
+                )
+                # proposal scaled to the subposterior width sqrt(P/(n+1))
+                sigma = 1.7 * float(np.sqrt(num_partitions / (n + 1.0)))
+                ens = ChainEnsemble(t, RandomWalk(sigma), chains, config=cfg)
+                state = ens.init(jnp.zeros(d))
+                key = jax.random.fold_in(jax.random.key(seed + 1), p)
+                state, _, _ = ens.run(
+                    None, state, burn, step_keys=ens.step_keys(key, 0, burn)
+                )
+                state, samples, _ = ens.run(
+                    None, state, keep, step_keys=ens.step_keys(key, burn, keep)
+                )
+                draws.append(np.asarray(samples))
+            cache[num_partitions] = draws
+        return cache[num_partitions]
+
+    return {
+        "n": n,
+        "d": d,
+        "chains": chains,
+        "target": target,
+        "data": x,
+        "post_mean": n * xbar / (n + 1.0),
+        "post_var": 1.0 / (n + 1.0),
+        "run": run,
+    }
+
+
+@pytest.fixture(scope="session")
 def gaussian_target_factory():
     """Memoized conjugate-Gaussian targets keyed by (n, seed): returns
     (PartitionedTarget, posterior_mean, posterior_std)."""
