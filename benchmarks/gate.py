@@ -36,6 +36,7 @@ METRIC_DIRECTIONS = {
     "transitions_per_sec": HIGHER,
     "tps_mesh_2d": HIGHER,
     "gflops": HIGHER,
+    "achieved_frac_peak": HIGHER,
     "p50_ms": LOWER,
     "p95_ms": LOWER,
     "p99_ms": LOWER,
@@ -47,7 +48,7 @@ METRIC_DIRECTIONS = {
 ID_FIELDS = ("kind", "engine", "name", "kernel", "workload", "transport",
              "path", "backend", "shape", "N", "K", "steps", "replicas",
              "queries", "rows_per_query", "max_batch", "window", "mode",
-             "P", "method")
+             "P", "method", "precision")
 
 
 def record_key(bench: str, rec: dict) -> str:

@@ -2,8 +2,12 @@
 
 On this CPU container the Pallas kernels run in interpret mode (not
 representative of TPU latency), so we report (a) wall time of the pure-jnp
-reference (the CPU-executable path), and (b) the derived HBM-traffic ratio
-naive/fused — the quantity the kernel actually optimizes on TPU.
+reference (the CPU-executable path), (b) the derived HBM-traffic ratio
+naive/fused — the quantity the kernel actually optimizes on TPU — and
+(c) the steady-state stochvol pgibbs+MH cycle at each sweep dispatch mode
+(``opaque`` legacy vmap, ``compat`` fused scan with the legacy RNG stream,
+``fused`` fast-RNG scan), whose fused/opaque speedup is the headline the
+perf issue gates on.
 """
 from __future__ import annotations
 
@@ -51,7 +55,48 @@ def main(fast: bool = True):
         us = _time(f, x, y, w1, w2) * 1e6
         # pair-fused kernel reads x once instead of twice
         rows.append((f"kernel_logitdelta_N{n}", us, "x_reads_fused=2->1"))
+    rows.extend(_bench_sv_cycle(fast))
     return rows, None
+
+
+def _bench_sv_cycle(fast: bool = True):
+    """Steady-state stochvol pgibbs+MH cycle per sweep dispatch mode.
+
+    Warm-up run compiles and settles the caches; the timed window then
+    measures `steps` full cycles (particle-Gibbs sweep + the two
+    subsampled-MH parameter moves) across the K-chain ensemble. The
+    `sweep_speedup_fused_vs_opaque` row is the acceptance headline."""
+    from repro.core.ensemble import ChainEnsemble
+    from repro.experiments import stochvol
+
+    s, t, p, k, steps = (200, 10, 25, 4, 20) if fast else (400, 20, 50, 8, 40)
+    data = stochvol.synth(jax.random.key(0), num_series=s, length=t)
+    theta0 = stochvol.init_theta(data.obs)
+    rows, ms = [], {}
+    for sweep in ("opaque", "compat", "fused"):
+        cyc = stochvol.make_inference_cycle(
+            data.obs, num_particles=p, sweep=sweep
+        )
+        ens = ChainEnsemble(
+            num_chains=k, transition=cyc, collect=stochvol._collect_params
+        )
+        state = ens.init(theta0)
+        state, _, _ = ens.run(jax.random.key(1), state, 2)  # compile + warm
+        jax.block_until_ready(state.theta)
+        t0 = time.perf_counter()
+        state, _, _ = ens.run(jax.random.key(2), state, steps)
+        jax.block_until_ready(state.theta)
+        ms[sweep] = (time.perf_counter() - t0) / steps * 1e3
+        rows.append((
+            f"sv_cycle_{sweep}_S{s}_T{t}_P{p}_K{k}", ms[sweep] * 1e3,
+            f"ms_per_cycle={ms[sweep]:.1f}",
+        ))
+    rows.append((
+        "sweep_speedup_fused_vs_opaque", ms["opaque"] / ms["fused"],
+        f"speedup={ms['opaque'] / ms['fused']:.2f}x"
+        f"_compat={ms['opaque'] / ms['compat']:.2f}x",
+    ))
+    return rows
 
 
 if __name__ == "__main__":

@@ -15,7 +15,9 @@ posterior, so combination *accuracy* is a measurable alongside throughput:
     ``err_mean_sigma`` = mean error in posterior-std units,
     ``err_cov_rel`` = worst relative error of the covariance diagonal.
     These are informational for the perf gate (only ``tps_steady`` gates)
-    but tracked run-over-run in ``BENCH_subposterior.json``.
+    but tracked run-over-run in ``BENCH_subposterior.json``. At P=1 both
+    rules are the identity on the single partition's draws, so one
+    ``method="passthrough"`` record stands in for the redundant pair.
 
 Reproduction guide: docs/BENCHMARKS.md. Statistical correctness bars live
 in ``tests/test_subposterior.py`` (this bench reuses its model shape).
@@ -109,8 +111,15 @@ def bench_subposterior(n: int, chains: int, burn: int, keep: int,
             "tps_min": float(np.min(tps)),
             "tps_aggregate": float(np.sum(tps)),
         })
-        for method in ("consensus", "product"):
-            combined = combine_draws(draws, method, seed=seed)
+        # P=1: both rules degenerate to returning the single partition's
+        # draws unchanged — one "passthrough" record instead of two
+        # duplicate combine runs.
+        methods = ("passthrough",) if num_p == 1 else ("consensus", "product")
+        for method in methods:
+            combined = combine_draws(
+                draws, "consensus" if method == "passthrough" else method,
+                seed=seed,
+            )
             flat = np.asarray(combined, np.float64).reshape(-1, _D)
             err_mean = float(
                 np.max(np.abs(flat.mean(axis=0) - post_mean)) / post_std

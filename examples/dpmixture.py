@@ -26,6 +26,8 @@ def main(smoke: bool = False):
         n, n_test, replicas, cycles, w_moves = 4000, 1000, 4, 30, 10
     data = jointdpm.synth(jax.random.key(0), n=n, n_test=n_test)
 
+    from repro.kernels import ops
+    print(ops.dispatch_summary())
     print(f"jointDPM N={n}: {replicas} replicas x {cycles} cycles of "
           f"(mh-alpha, gibbs-z, {w_moves} subsampled-mh-w moves)")
     t0 = time.perf_counter()

@@ -28,6 +28,8 @@ def main(smoke: bool = False):
         n, d, chains, steps = 20_000, 8, 16, 1200
     data = bayeslr.synth_mnist_like(jax.random.key(0), n_train=n, n_test=500, d=d)
 
+    from repro.kernels import ops
+    print(ops.dispatch_summary())
     print(f"BayesLR N={n}, D={d}: {chains} subsampled-MH chains x {steps} steps "
           f"(masked-continuation + adaptive scheduling)")
     t0 = time.perf_counter()

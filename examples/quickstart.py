@@ -30,6 +30,8 @@ def main(smoke: bool = False):
     w0 = jnp.zeros(d)
     prop = RandomWalk(0.03)
 
+    from repro.kernels import ops
+    print(ops.dispatch_summary())
     print(f"Bayesian logistic regression, N={n}, D={d} (paper Sec 4.1 scale)")
     print("\n--- Sec 3.3 safeguard (trial run) ---")
     print(trial_run_report(jax.random.key(1), w0, target, prop, num_trials=10))

@@ -30,6 +30,9 @@ def main(smoke: bool = False):
                           phi=true_phi, sigma=true_sigma)
     n = data.obs.size
 
+    from repro.kernels import ops
+    print(ops.dispatch_summary()
+          + f" sweep={stochvol.resolve_sweep()}")
     print(f"stochvol S={series} T={length} ({n} transition factors): "
           f"{chains} chains x {iters} cycles of (pgibbs, mh-phi, mh-sigma2)")
     t0 = time.perf_counter()

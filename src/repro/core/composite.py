@@ -70,11 +70,21 @@ class SweepOp:
     ``fn(key, theta) -> theta``, or ``fn(key, theta) -> (theta, info)`` with
     ``has_info=True`` (the info pytree is recorded per step under this op's
     name, like the MH ops' :class:`~repro.core.subsampled_mh.SubsampledMHInfo`).
+
+    ``batched_fn(keys, theta) -> theta`` (optional) is the natively
+    chain-batched form: ``keys`` carries a leading chain axis and every
+    ``theta`` leaf a matching one. When set, the ensemble's composite runner
+    calls it instead of ``jax.vmap(fn)`` — for sweeps that restructure the
+    chain axis themselves (e.g. the fused particle-Gibbs scan in
+    :mod:`repro.kernels.pgibbs`, which advances the whole K x S x P slab per
+    time step). It must be semantically ``jax.vmap(fn)``; the single-chain
+    ``fn`` remains the sequential twin the bit-for-bit contracts anchor on.
     """
 
     fn: Callable
     name: str | None = None
     has_info: bool = False
+    batched_fn: Callable | None = None
 
 
 @dataclasses.dataclass(frozen=True)

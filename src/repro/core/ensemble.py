@@ -773,7 +773,7 @@ class ChainEnsemble:
                 )
                 comps.append(("mh", trans, op.cfg))
             else:
-                comps.append(("sweep", op.fn, op.has_info))
+                comps.append(("sweep", op.fn, op.has_info, op.batched_fn))
 
         def run_all(step_keys, theta, samplers, ctrl, num_steps):
             del ctrl, num_steps  # composite cycles run unscheduled
@@ -798,8 +798,13 @@ class ChainEnsemble:
                         theta, new_s[i], info = trans(k_i, theta, samplers[i], eps, meff)
                         infos[names[i]] = info
                     else:
-                        _, fn, has_info = comp
-                        out = jax.vmap(fn)(k_i, theta)
+                        _, fn, has_info, batched_fn = comp
+                        # a natively chain-batched sweep (fused pgibbs scan)
+                        # replaces the opaque per-chain vmap when provided
+                        if batched_fn is not None:
+                            out = batched_fn(k_i, theta)
+                        else:
+                            out = jax.vmap(fn)(k_i, theta)
                         if has_info:
                             theta, infos[names[i]] = out
                         else:

@@ -11,6 +11,7 @@ that distinguishes this paper from iid-austerity (Sec. 3.2 Remark).
 """
 from __future__ import annotations
 
+import os
 from typing import NamedTuple
 
 import jax
@@ -22,8 +23,28 @@ from ..core.subsampled_mh import SubsampledMHConfig
 from ..core.target import PartitionedTarget
 from ..core.target_builder import build_target
 from ..inference.smc import csmc
+from ..kernels.pgibbs import batched_pgibbs_sweep, pgibbs_sweep_fused
 
 _LOG2PI = 1.8378770664093453
+
+#: Sweep implementations for :func:`make_inference_cycle`.
+#: "fused"  — the time-major fused scan (repro.kernels.pgibbs), fast RNG
+#:            stream (statistically validated, not bitwise vs opaque);
+#: "compat" — the fused scan reproducing the opaque path bit for bit;
+#: "opaque" — the legacy per-series vmapped csmc.
+SWEEP_MODES = ("fused", "compat", "opaque")
+SWEEP_ENV_VAR = "REPRO_SWEEP"
+
+
+def resolve_sweep(sweep: str = "auto") -> str:
+    """``auto`` defers to ``$REPRO_SWEEP`` and defaults to ``fused``."""
+    if sweep == "auto":
+        sweep = os.environ.get(SWEEP_ENV_VAR, "fused")
+    if sweep not in SWEEP_MODES:
+        raise ValueError(
+            f"unknown sweep mode {sweep!r}; expected 'auto' or one of {SWEEP_MODES}"
+        )
+    return sweep
 
 
 class SVParams(NamedTuple):
@@ -81,8 +102,11 @@ def _trans_logpdf(h_t, h_prev, phi, sigma2):
 
 
 def _obs_logpdf(x_t, h_t):
-    # x_t ~ N(0, exp(h_t)) i.e. std = exp(h_t/2)
-    return -0.5 * (x_t * x_t * jnp.exp(-h_t) + h_t + _LOG2PI)
+    # x_t ~ N(0, exp(h_t)) i.e. std = exp(h_t/2); single definition shared
+    # with the fused pgibbs sweep's particle weights
+    from ..kernels.ref import sv_obs_loglik
+
+    return sv_obs_loglik(x_t, h_t)
 
 
 # -- partitioned targets ------------------------------------------------------
@@ -208,30 +232,60 @@ def make_inference_cycle(
     num_particles: int = 25,
     sampler: str = "fy",
     permute_key: jax.Array | None = None,
+    sweep: str = "auto",
 ) -> CycleOp:
     """The paper's Sec-4.3 program as a composite cycle:
 
         [infer (cycle ((pgibbs h ...) (subsampled_mh phi ...)
                        (subsampled_mh sig ...)) 1)]
 
-    — one opaque particle-Gibbs sweep over the latent paths, then per-variable
+    — one particle-Gibbs sweep over the latent paths, then per-variable
     subsampled-MH moves on phi and sigma^2 whose local sections are the
     transition factors of the *current* paths (``theta["h"]``). The same
     cycle object drives :func:`run_posterior_sequential` and the K-chain
     :func:`run_posterior_ensemble`, which is what makes them bit-for-bit
     comparable.
+
+    ``sweep`` picks the sweep implementation (see :data:`SWEEP_MODES`): the
+    default resolves to the fused time-major scan of
+    :mod:`repro.kernels.pgibbs`, which shares the AR(1) propagate/clip
+    arithmetic with the ``gaussian_ar1`` delta kernel of the adjacent MH
+    rounds and advances all chains' series in one scan. ``"compat"`` is the
+    fused layout with the legacy RNG stream (bit-for-bit vs ``"opaque"``).
     """
     s, t_len = obs.shape
     target = make_joint_param_target(s, t_len, permute_key)
     cfg = SubsampledMHConfig(batch_size=batch_size, epsilon=epsilon, sampler=sampler)
+    sweep = resolve_sweep(sweep)
 
-    def pg_sweep(key, theta):
-        h = pgibbs_sweep(key, obs, theta["h"],
-                         SVParams(theta["phi"], theta["sigma2"]), num_particles)
-        return {**theta, "h": h}
+    if sweep == "opaque":
+        def pg_sweep(key, theta):
+            h = pgibbs_sweep(key, obs, theta["h"],
+                             SVParams(theta["phi"], theta["sigma2"]), num_particles)
+            return {**theta, "h": h}
+
+        sweep_op = SweepOp(pg_sweep, name="pgibbs")
+    else:
+        rng_mode = "fast" if sweep == "fused" else "compat"
+
+        def pg_single(key, theta):
+            h = pgibbs_sweep_fused(
+                key, obs, theta["h"], theta["phi"], theta["sigma2"],
+                num_particles=num_particles, mode=rng_mode,
+            )
+            return {**theta, "h": h}
+
+        def pg_batched(keys, theta):
+            h = batched_pgibbs_sweep(
+                keys, obs, theta["h"], theta["phi"], theta["sigma2"],
+                num_particles=num_particles, mode=rng_mode,
+            )
+            return {**theta, "h": h}
+
+        sweep_op = SweepOp(pg_single, name="pgibbs", batched_fn=pg_batched)
 
     return cycle([
-        SweepOp(pg_sweep, name="pgibbs"),
+        sweep_op,
         SubsampledMHOp(target, SingleLeafRW("phi", sigma_phi), cfg, name="phi"),
         SubsampledMHOp(target, SingleLeafRW("sigma2", sigma_sig), cfg, name="sigma2"),
     ])

@@ -13,6 +13,23 @@ engine's ``fused_kernels`` knob:
 
 The legacy spellings ``mode="kernel"`` / ``mode="ref"`` are deprecated
 aliases for ``always`` / ``never`` and emit a ``DeprecationWarning``.
+
+Orthogonal to dispatch, every wrapper takes a **precision** mode for the
+gather/delta data path:
+
+  ``precision="fp32"``  exact float32 end to end — bit-for-bit the
+                        pre-precision behaviour, and the tested fallback;
+  ``precision="bf16"``  the gathered data slabs (and matmul operands) are
+                        cast to bfloat16 before the kernel, halving the
+                        bytes the memory-bound delta rounds move; every
+                        kernel still *accumulates* in float32
+                        (``preferred_element_type``/explicit upcasts), so
+                        downstream Welford statistics stay fp32;
+  ``precision="auto"``  defers to ``$REPRO_PRECISION``, defaulting to fp32.
+
+Block sizes are consulted from :mod:`repro.kernels.autotune` when tuning is
+enabled (explicit ``tile_*`` kwargs always win); ``REPRO_AUTOTUNE=0`` pins
+the shipped defaults.
 """
 from __future__ import annotations
 
@@ -20,8 +37,9 @@ import os
 import warnings
 
 import jax
+import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .batched_loglik import batched_logit_delta as _batched_logit_delta_kernel
 from .fused_ce import batched_fused_ce as _batched_fused_ce_kernel
 from .fused_ce import fused_ce as _fused_ce_kernel
@@ -31,6 +49,9 @@ from .logit_loglik import logit_delta as _logit_delta_kernel
 MODES = ("auto", "always", "never")
 _DEPRECATED_ALIASES = {"kernel": "always", "ref": "never"}
 ENV_VAR = "REPRO_FUSED"
+
+PRECISIONS = ("auto", "fp32", "bf16")
+PRECISION_ENV_VAR = "REPRO_PRECISION"
 
 
 def _on_tpu() -> bool:
@@ -67,46 +88,109 @@ def use_kernel(mode: str = "auto") -> bool:
     return _on_tpu()
 
 
-def fused_ce(h, table, targets, *, mode: str = "auto", **kw):
+def resolve_precision(precision: str = "auto") -> str:
+    """Resolve a precision mode to the concrete ``fp32``/``bf16`` path;
+    ``auto`` defers to ``$REPRO_PRECISION`` and defaults to exact fp32."""
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"unknown precision {precision!r}; expected one of {PRECISIONS}"
+        )
+    if precision == "auto":
+        env = os.environ.get(PRECISION_ENV_VAR, "fp32")
+        if env not in ("fp32", "bf16"):
+            raise ValueError(
+                f"${PRECISION_ENV_VAR}={env!r}; expected 'fp32' or 'bf16'"
+            )
+        return env
+    return precision
+
+
+def _bf16(*arrays):
+    return tuple(a.astype(jnp.bfloat16) for a in arrays)
+
+
+def _tiles(family: str, shape, kw: dict) -> dict:
+    """Autotuned block sizes for the kernel path — explicit tile kwargs win."""
+    if any(k.startswith("tile_") for k in kw):
+        return kw
+    merged = dict(autotune.tiles_for(family, tuple(int(d) for d in shape)))
+    merged.update(kw)
+    return merged
+
+
+def dispatch_summary() -> str:
+    """One attribution line for example/bench/serve logs: which path the
+    auto dispatch takes right now, at what precision, with tuning on/off."""
+    path = "pallas" + ("" if _on_tpu() else "-interpret") if use_kernel() else "ref"
+    return (
+        f"kernels: dispatch={path} ({ENV_VAR}={os.environ.get(ENV_VAR, 'auto')}) "
+        f"precision={resolve_precision()} "
+        f"autotune={'on' if autotune.enabled() else 'off'} "
+        f"backend={jax.default_backend()}"
+    )
+
+
+def fused_ce(h, table, targets, *, mode: str = "auto", precision: str = "auto",
+             **kw):
     """Per-token log-likelihood over a large vocab.
 
     mode: "auto" (kernel on TPU, ref elsewhere), "always" (force Pallas,
     interpret=True off-TPU), "never" (pure-jnp reference).
     """
+    if resolve_precision(precision) == "bf16":
+        h, table = _bf16(h, table)
     if not use_kernel(mode):
         return ref.fused_ce_ref(h, table, targets)
+    kw = _tiles("fused_ce", (h.shape[0], h.shape[1], table.shape[0]), kw)
     return _fused_ce_kernel(h, table, targets, interpret=not _on_tpu(), **kw)
 
 
-def batched_fused_ce(h, table, targets, *, mode: str = "auto", **kw):
+def batched_fused_ce(h, table, targets, *, mode: str = "auto",
+                     precision: str = "auto", **kw):
     """Ensemble-batched (K, T) per-token log-likelihood — one call per
     multi-chain round of the LM likelihood (table shared or per-chain)."""
+    if resolve_precision(precision) == "bf16":
+        h, table = _bf16(h, table)
     if not use_kernel(mode):
         return ref.batched_fused_ce_ref(h, table, targets)
+    v = table.shape[0] if table.ndim == 2 else table.shape[1]
+    kw = _tiles("batched_fused_ce", h.shape + (v,), kw)
     return _batched_fused_ce_kernel(h, table, targets, interpret=not _on_tpu(), **kw)
 
 
-def logit_delta(x, y, w_cur, w_prop, *, mode: str = "auto", **kw):
+def logit_delta(x, y, w_cur, w_prop, *, mode: str = "auto",
+                precision: str = "auto", **kw):
     """Fused BayesLR pair-evaluation of the MH local-section deltas."""
+    if resolve_precision(precision) == "bf16":
+        x, w_cur, w_prop = _bf16(x, w_cur, w_prop)
     if not use_kernel(mode):
         return ref.logit_delta_ref(x, y, w_cur, w_prop)
+    kw = _tiles("logit_delta", x.shape, kw)
     return _logit_delta_kernel(x, y, w_cur, w_prop, interpret=not _on_tpu(), **kw)
 
 
-def batched_logit_delta(xg, yg, w_cur, w_prop, *, mode: str = "auto", **kw):
+def batched_logit_delta(xg, yg, w_cur, w_prop, *, mode: str = "auto",
+                        precision: str = "auto", **kw):
     """Ensemble-batched (K, m) BayesLR delta block — one call per multi-chain
     sequential-test round."""
+    if resolve_precision(precision) == "bf16":
+        xg, w_cur, w_prop = _bf16(xg, w_cur, w_prop)
     if not use_kernel(mode):
         return ref.batched_logit_delta_ref(xg, yg, w_cur, w_prop)
+    kw = _tiles("batched_loglik", xg.shape, kw)
     return _batched_logit_delta_kernel(xg, yg, w_cur, w_prop, interpret=not _on_tpu(), **kw)
 
 
 def batched_gaussian_ar1_delta(xt, xp, phi_cur, s2_cur, phi_prop, s2_prop,
-                               *, mode: str = "auto", **kw):
+                               *, mode: str = "auto", precision: str = "auto",
+                               **kw):
     """Ensemble-batched (K, m) AR(1) transition-factor delta block (the
     stochvol sig/phi local sections)."""
+    if resolve_precision(precision) == "bf16":
+        xt, xp = _bf16(xt, xp)
     if not use_kernel(mode):
         return ref.batched_gaussian_ar1_delta_ref(xt, xp, phi_cur, s2_cur, phi_prop, s2_prop)
+    kw = _tiles("gaussian_ar1", xt.shape, kw)
     return _batched_gaussian_ar1_kernel(
         xt, xp, phi_cur, s2_cur, phi_prop, s2_prop, interpret=not _on_tpu(), **kw
     )

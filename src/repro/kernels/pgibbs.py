@@ -1,0 +1,187 @@
+"""Fused particle-Gibbs sweep: every chain x series in ONE time-major scan.
+
+The stochvol cycle's latent-path update was an *opaque* vmapped op — per
+chain, per series, an independent :func:`repro.inference.smc.csmc` (its own
+forward scan, its own backward ancestry scan, its own per-particle key
+splits). This module restructures the sweep so a single ``lax.scan`` over
+time advances the whole (K chains, S series, P particles) slab per step,
+sharing the AR(1) transition arithmetic (:func:`repro.kernels.ref
+.ar1_propagate`) with the adjacent MH rounds' ``gaussian_ar1`` delta kernel.
+
+Two numeric modes:
+
+``mode="compat"``
+    Bit-for-bit identical to ``vmap(vmap(csmc))`` (the opaque path): the
+    per-series key chains, per-particle proposal keys, and conditional
+    multinomial (Gumbel-categorical) resampling draws are reproduced
+    exactly — only the loop structure changes. This is the regression
+    anchor: the fused layout proves itself against the sequential twin.
+
+``mode="fast"``
+    Same conditional-SMC algorithm (slot-0 retained particle, conditional
+    multinomial resampling, ancestral trace-back — Andrieu et al. 2010) but
+    with slab-granular randomness: ONE normal draw of shape (S, P) per
+    chain-step instead of S*P individually-keyed draws behind 2 rounds of
+    key splitting, and inverse-CDF multinomial resampling (S*P uniforms +
+    a binary search over the P-bin CDF) instead of Gumbel-max (S*P*P
+    gumbels). Distributionally identical transitions, different streams —
+    validated statistically against the compat mode / conjugate harness
+    (tests/test_pgibbs_fused.py), not bitwise.
+
+Pure VPU/scan work — there is no matmul to tile, so this is a fused-scan
+kernel rather than a ``pallas_call`` (the Pallas grid machinery would add
+per-step launch overhead to what XLA already fuses into one loop body; see
+docs/ARCHITECTURE.md "Fused pgibbs dataflow").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ar1_propagate, sv_obs_loglik
+
+MODES = ("fast", "compat")
+
+
+def _take_p(arr: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather along the trailing particle axis: arr (..., P), idx (..., P)
+    or (...,) -> same-rank-as-idx result."""
+    if idx.ndim == arr.ndim:
+        return jnp.take_along_axis(arr, idx, axis=-1)
+    return jnp.take_along_axis(arr, idx[..., None], axis=-1)[..., 0]
+
+
+@functools.partial(jax.jit, static_argnames=("num_particles", "mode", "obs_logpdf"))
+def batched_pgibbs_sweep(
+    keys: jax.Array,  # (K,) per-chain step keys
+    obs: jax.Array,  # (S, T) observed series, shared across chains
+    h: jax.Array,  # (K, S, T) retained latent paths (the reference particles)
+    phi: jax.Array,  # (K,) AR(1) persistence per chain
+    s2: jax.Array,  # (K,) AR(1) innovation variance per chain
+    *,
+    num_particles: int,
+    mode: str = "fast",
+    obs_logpdf: Callable | None = None,  # elementwise (x, h) -> log weight
+    h0: float = 0.0,
+) -> jax.Array:
+    """One conditional-SMC sweep for all K chains' S series at once.
+
+    Returns the new retained paths (K, S, T). ``obs_logpdf`` defaults to the
+    stochastic-volatility observation factor (:func:`repro.kernels.ref
+    .sv_obs_loglik`); any elementwise ``(x, h) -> logp`` works.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown pgibbs mode {mode!r}; expected one of {MODES}")
+    logpdf = obs_logpdf if obs_logpdf is not None else sv_obs_loglik
+    k, s, t_len = h.shape
+    p = num_particles
+    phi_b = phi[:, None, None]  # broadcast (K, 1, 1) against (K, S, P)
+    s2_b = s2[:, None, None]
+    xs_t = jnp.moveaxis(obs, -1, 0)  # (T, S)
+    href_t = jnp.moveaxis(h, -1, 0)  # (T, K, S)
+
+    if mode == "compat":
+        # Reproduce vmap(vmap(csmc)) exactly: a (K, S) lattice of per-series
+        # key chains, per-particle proposal keys, Gumbel-categorical
+        # multinomial resampling. split/normal/categorical under vmap
+        # produce the same bits as the per-series calls they replace.
+        series_keys = jax.vmap(lambda ck: jax.random.split(ck, s))(keys)  # (K, S)
+
+        def step(carry, inp):
+            h_prev, skeys = carry  # (K, S, P), (K, S) keys
+            x_t, h_ref_t = inp  # (S,), (K, S)
+            trip = jax.vmap(jax.vmap(lambda kk: jax.random.split(kk, 3)))(skeys)
+            skeys_n, k_prop, k_res = trip[..., 0], trip[..., 1], trip[..., 2]
+            prop_keys = jax.vmap(jax.vmap(lambda kk: jax.random.split(kk, p)))(
+                k_prop
+            )  # (K, S, P) keys
+            noise = jax.vmap(jax.vmap(jax.vmap(
+                lambda kk: jax.random.normal(kk, ())
+            )))(prop_keys)
+            h_t = ar1_propagate(h_prev, noise, phi_b, s2_b)
+            h_t = h_t.at[..., 0].set(h_ref_t)
+            logw = logpdf(x_t[None, :, None], h_t)
+            anc = jax.vmap(jax.vmap(
+                lambda kk, lw: jax.random.categorical(kk, lw, shape=(p,))
+            ))(k_res, logw)
+            anc = anc.at[..., 0].set(0)
+            h_next = _take_p(h_t, anc)
+            return (h_next, skeys_n), (h_t, anc, logw)
+
+        h_init = jnp.full((k, s, p), h0, obs.dtype)
+        (_, end_keys), (hs, ancs, logws) = jax.lax.scan(
+            step, (h_init, series_keys), (xs_t, href_t)
+        )
+        pick = jax.vmap(jax.vmap(lambda kk: jax.random.split(kk, 2)))(end_keys)
+        b_last = jax.vmap(jax.vmap(jax.random.categorical))(
+            pick[..., 1], logws[-1]
+        )  # (K, S)
+    else:
+        # fast: slab-granular randomness — one (S, P) normal and one (S, P)
+        # uniform block per chain-step, inverse-CDF multinomial resampling.
+        def step(carry, inp):
+            h_prev, ckeys = carry  # (K, S, P), (K,) keys
+            x_t, h_ref_t = inp
+            trip = jax.vmap(lambda kk: jax.random.split(kk, 3))(ckeys)
+            ckeys_n, k_prop, k_res = trip[:, 0], trip[:, 1], trip[:, 2]
+            noise = jax.vmap(lambda kk: jax.random.normal(kk, (s, p)))(k_prop)
+            h_t = ar1_propagate(h_prev, noise, phi_b, s2_b)
+            h_t = h_t.at[..., 0].set(h_ref_t)
+            logw = logpdf(x_t[None, :, None], h_t)
+            # conditional multinomial via inverse CDF: O(P log P) per series
+            # instead of Gumbel-max's O(P^2); slot 0 stays pinned to the
+            # retained lineage.
+            cdf = jnp.cumsum(jax.nn.softmax(logw, axis=-1), axis=-1)
+            u = jax.vmap(lambda kk: jax.random.uniform(kk, (s, p)))(k_res)
+            anc = jax.vmap(jax.vmap(
+                lambda c, uu: jnp.searchsorted(c, uu)
+            ))(cdf, u).astype(jnp.int32)
+            anc = jnp.minimum(anc, p - 1).at[..., 0].set(0)
+            h_next = _take_p(h_t, anc)
+            return (h_next, ckeys_n), (h_t, anc, logw)
+
+        h_init = jnp.full((k, s, p), h0, obs.dtype)
+        (_, end_keys), (hs, ancs, logws) = jax.lax.scan(
+            step, (h_init, keys), (xs_t, href_t)
+        )
+        pick = jax.vmap(lambda kk: jax.random.split(kk, 2))(end_keys)
+        b_last = jax.vmap(
+            lambda kk, lw: jax.random.categorical(kk, lw, axis=-1)
+        )(pick[:, 1], logws[-1])  # (K, S)
+
+    # Shared backward ancestral trace: one scan for the whole (K, S) lattice.
+    def back(b, t):
+        h_t = _take_p(hs[t], b)
+        b_prev = jnp.where(t > 0, _take_p(ancs[t - 1], b), 0)
+        return b_prev, h_t
+
+    _, traj_rev = jax.lax.scan(back, b_last, jnp.arange(t_len - 1, -1, -1))
+    return jnp.moveaxis(traj_rev[::-1], 0, -1)  # (T, K, S) -> (K, S, T)
+
+
+def pgibbs_sweep_fused(
+    key: jax.Array,
+    obs: jax.Array,  # (S, T)
+    h: jax.Array,  # (S, T)
+    phi: jax.Array,
+    s2: jax.Array,
+    *,
+    num_particles: int,
+    mode: str = "fast",
+    obs_logpdf: Callable | None = None,
+    h0: float = 0.0,
+) -> jax.Array:
+    """Single-chain wrapper over :func:`batched_pgibbs_sweep` (K = 1).
+
+    Bitwise equal to ``batched_pgibbs_sweep(key[None], ...)[0]`` by
+    construction, which is what makes the sequential cycle twin and the
+    K-chain ensemble runner bit-for-bit comparable.
+    """
+    out = batched_pgibbs_sweep(
+        key[None], obs, h[None], jnp.asarray(phi)[None], jnp.asarray(s2)[None],
+        num_particles=num_particles, mode=mode, obs_logpdf=obs_logpdf, h0=h0,
+    )
+    return out[0]

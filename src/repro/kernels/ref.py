@@ -59,6 +59,28 @@ def batched_logit_delta_ref(
     return -jnp.logaddexp(0.0, -yg * z_p) + jnp.logaddexp(0.0, -yg * z_c)
 
 
+def ar1_propagate(h_prev: jax.Array, noise: jax.Array,
+                  phi: jax.Array, s2: jax.Array) -> jax.Array:
+    """Shared AR(1) transition sample: ``phi * h_prev + sqrt(clip(s2)) * z``.
+
+    The *sampling* twin of :func:`gaussian_ar1_delta_ref`'s density math —
+    the particle-Gibbs sweep (:mod:`repro.kernels.pgibbs`) propagates
+    particles with exactly the clip/scale arithmetic the MH delta kernel
+    scores them with, so sweep and adjacent MH rounds share one definition
+    of the transition factor.
+    """
+    return phi * h_prev + jnp.sqrt(jnp.clip(s2, 1e-12, None)) * noise
+
+
+_LOG2PI = 1.8378770664093453
+
+
+def sv_obs_loglik(x: jax.Array, h: jax.Array) -> jax.Array:
+    """Stochastic-volatility observation factor log N(x | 0, exp(h)):
+    the particle weight of the pgibbs sweep (elementwise over any batch)."""
+    return -0.5 * (x * x * jnp.exp(-h) + h + _LOG2PI)
+
+
 def gaussian_ar1_delta_ref(
     xt: jax.Array, xp: jax.Array,
     phi_cur: jax.Array, s2_cur: jax.Array,

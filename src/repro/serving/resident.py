@@ -140,26 +140,37 @@ class SnapshotEvaluator:
         self._flat_cache = None
 
     def _evaluator(self, spec: QuerySpec):
-        # "mean" reduces over the draw axis on device: only (mb,) per chunk
-        # crosses to the host instead of the (S, mb) per-draw matrix — the
-        # matrix is memory-bound numpy work that would otherwise dominate a
-        # replica's serve path. Per-row results are unchanged by padding or
-        # chunking (the compiled reduction shape is fixed at (S, mb)), so
-        # the exact-equality batching contracts hold as before.
-        reduce_mean = spec.aggregate == "mean"
-        cache_key = (spec.fn, reduce_mean)
+        # Both aggregates reduce over the draw axis on device: only (mb,)
+        # per chunk crosses to the host instead of the (S, mb) per-draw
+        # matrix — the matrix is memory-bound host work that would otherwise
+        # dominate a replica's serve path (for quantiles it was a python
+        # loop of np.quantile calls per row on top of the transfer).
+        # Per-row results are unchanged by padding or chunking (the compiled
+        # reduction shape is fixed at (S, mb), and both reductions are
+        # column-independent), so the exact-equality batching contracts hold.
+        cache_key = (spec.fn, spec.aggregate)
         fn = self._eval_cache.get(cache_key)
         if fn is None:
-            if reduce_mean:
+            if spec.aggregate == "mean":
                 fn = jax.jit(
                     lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(
                         draws, xs
                     ).mean(axis=0)
                 )
-            else:
-                fn = jax.jit(
-                    lambda draws, xs: jax.vmap(spec.fn, in_axes=(0, None))(draws, xs)
-                )
+            else:  # quantile: xs[b] carries the level for row b up front
+
+                def _quantile(draws, xs):
+                    per_draw = jax.vmap(spec.fn, in_axes=(0, None))(
+                        draws, xs
+                    )  # (S, mb)
+                    levels = jnp.clip(
+                        xs.reshape(xs.shape[0], -1)[:, 0], 0.0, 1.0
+                    ).astype(per_draw.dtype)
+                    return jax.vmap(jnp.quantile, in_axes=(1, 0))(
+                        per_draw, levels
+                    )
+
+                fn = jax.jit(_quantile)
             self._eval_cache[cache_key] = fn
         return fn
 
@@ -182,24 +193,16 @@ class SnapshotEvaluator:
             self._flat_cache = (gen, flat)
         evaluator = self._evaluator(spec)
         b, mb = xs.shape[0], self.micro_batch
-        mean_path = spec.aggregate == "mean"
         vals = []
         for start in range(0, b, mb):
             chunk = xs[start:start + mb]
             pad = mb - chunk.shape[0]
             if pad:
                 chunk = np.concatenate([chunk, np.repeat(chunk[-1:], pad, axis=0)])
-            v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (S, mb) | (mb,)
+            v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (mb,)
             keep = slice(None, mb - pad) if pad else slice(None)
-            vals.append(v[keep] if mean_path else v[:, keep])
-        if mean_path:
-            return np.concatenate(vals, axis=0).astype(np.float64)
-        per_draw = np.concatenate(vals, axis=1)  # (S, B)
-        # quantile: xs[b] is the level for row b
-        levels = np.clip(np.asarray(xs, np.float64).reshape(b, -1)[:, 0], 0.0, 1.0)
-        return np.array(
-            [np.quantile(per_draw[:, i], levels[i]) for i in range(b)]
-        )
+            vals.append(v[keep])
+        return np.concatenate(vals, axis=0).astype(np.float64)
 
 
 class ResidentEnsemble:

@@ -155,12 +155,28 @@ def make_ppl_workload(
         config=SubsampledMHConfig(batch_size=min(batch_size, n), epsilon=epsilon),
     )
     make_queries = row_sampler(np.asarray(x))
+    def _level_sampler(qkey: jax.Array, n_rows: int) -> np.ndarray:
+        return np.asarray(
+            jax.random.uniform(qkey, (n_rows,), minval=0.05, maxval=0.95)
+        )
+
     specs = {
         "predictive": QuerySpec(
             fn=lambda wd, xs: jax.nn.sigmoid(xs @ wd),
             aggregate="mean",
             make_queries=make_queries,
             name="predictive",
+        ),
+        # posterior quantiles of the coefficient norm — request rows are
+        # quantile levels; the whole (S, mb) -> (mb,) reduction runs on
+        # device inside SnapshotEvaluator
+        "wnorm_quantile": QuerySpec(
+            fn=lambda wd, xs: jnp.broadcast_to(
+                jnp.linalg.norm(wd), xs.shape
+            ),
+            aggregate="quantile",
+            make_queries=_level_sampler,
+            name="wnorm_quantile",
         ),
     }
     return ServingWorkload(

@@ -1,0 +1,181 @@
+"""The ops dispatch matrix: ref vs Pallas(interpret) across kernel
+families × precision modes × autotune on/off, plus the fp32 bit-for-bit
+regression, the deprecated-alias warning path, and the bf16
+sequential-test decision-flip bound."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops, ref
+
+
+def _mk_fused_ce():
+    k1, k2, k3 = jax.random.split(jax.random.key(0), 3)
+    h = 0.5 * jax.random.normal(k1, (12, 8))
+    tab = 0.5 * jax.random.normal(k2, (40, 8))
+    tgt = jax.random.randint(k3, (12,), 0, 40)
+    return (h, tab, tgt)
+
+
+def _mk_batched_fused_ce():
+    k1, k2, k3 = jax.random.split(jax.random.key(1), 3)
+    h = 0.5 * jax.random.normal(k1, (2, 8, 8))
+    tab = 0.5 * jax.random.normal(k2, (40, 8))
+    tgt = jax.random.randint(k3, (2, 8), 0, 40)
+    return (h, tab, tgt)
+
+
+def _mk_logit_delta():
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(2), 4)
+    x = jax.random.normal(k1, (33, 5))
+    y = jnp.where(jax.random.bernoulli(k2, 0.5, (33,)), 1.0, -1.0)
+    return (x, y, jax.random.normal(k3, (5,)), jax.random.normal(k4, (5,)))
+
+
+def _mk_batched_logit_delta():
+    k1, k2, k3, k4 = jax.random.split(jax.random.key(3), 4)
+    xg = jax.random.normal(k1, (3, 20, 5))
+    yg = jnp.where(jax.random.bernoulli(k2, 0.5, (3, 20)), 1.0, -1.0)
+    return (xg, yg, jax.random.normal(k3, (3, 5)), jax.random.normal(k4, (3, 5)))
+
+
+def _mk_ar1():
+    k1, k2 = jax.random.split(jax.random.key(4))
+    xt = jax.random.normal(k1, (3, 20))
+    xp = jax.random.normal(k2, (3, 20))
+    phi = jnp.asarray([0.9, 0.5, -0.3])
+    s2 = jnp.asarray([0.02, 0.5, 1.1])
+    return (xt, xp, phi, s2, phi * 0.95, s2 * 1.05)
+
+
+FAMILIES = {
+    "fused_ce": (ops.fused_ce, _mk_fused_ce),
+    "batched_fused_ce": (ops.batched_fused_ce, _mk_batched_fused_ce),
+    "logit_delta": (ops.logit_delta, _mk_logit_delta),
+    "batched_loglik": (ops.batched_logit_delta, _mk_batched_logit_delta),
+    "gaussian_ar1": (ops.batched_gaussian_ar1_delta, _mk_ar1),
+}
+
+
+@pytest.fixture(scope="module")
+def tune_dir(tmp_path_factory):
+    # one shared on-disk cache for the whole matrix: later cases exercise
+    # the disk-cache hit path, not just the first-measure path
+    return str(tmp_path_factory.mktemp("autotune"))
+
+
+@pytest.mark.parametrize("family", sorted(FAMILIES))
+@pytest.mark.parametrize("precision", ["fp32", "bf16"])
+@pytest.mark.parametrize("tuned", [False, True])
+def test_dispatch_parity_matrix(family, precision, tuned, tune_dir, monkeypatch):
+    if tuned:
+        monkeypatch.setenv(autotune.ENV_VAR, "1")
+        monkeypatch.setenv(autotune.DIR_ENV_VAR, tune_dir)
+    else:
+        monkeypatch.setenv(autotune.ENV_VAR, "0")
+    fn, mk = FAMILIES[family]
+    args = mk()
+    got = fn(*args, mode="always", precision=precision)  # interpret on CPU
+    want = fn(*args, mode="never", precision=precision)
+    assert got.dtype == jnp.float32  # fp32 accumulation on every path
+    tol = 1e-5 if precision == "fp32" else 1e-1
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_autotune_cache_written_and_reused(tune_dir, monkeypatch):
+    monkeypatch.setenv(autotune.ENV_VAR, "1")
+    monkeypatch.setenv(autotune.DIR_ENV_VAR, tune_dir)
+    tiles = autotune.tiles_for("gaussian_ar1", (3, 20))
+    assert "tile_m" in tiles
+    # second consult must come from cache (identical result)
+    assert autotune.tiles_for("gaussian_ar1", (3, 20)) == tiles
+    import json
+    import os
+
+    path = os.path.join(tune_dir, f"{jax.default_backend()}.json")
+    assert os.path.exists(path)
+    with open(path) as f:
+        disk = json.load(f)
+    key = autotune.cache_key("gaussian_ar1", (3, 20), jax.default_backend())
+    assert disk[key]["tiles"] == tiles
+
+
+def test_autotune_disabled_returns_defaults(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_VAR, "0")
+    assert autotune.tiles_for("logit_delta", (100, 8)) == \
+        autotune.DEFAULT_TILES["logit_delta"]
+    with pytest.raises(KeyError):
+        autotune.tiles_for("nope", (8,))
+
+
+def test_fp32_default_is_bitwise_ref_and_kernel(monkeypatch):
+    # precision="auto" with no env must be the exact pre-precision fp32
+    # behaviour on both dispatch paths
+    monkeypatch.delenv(ops.PRECISION_ENV_VAR, raising=False)
+    monkeypatch.setenv(autotune.ENV_VAR, "0")
+    xg, yg, w1, w2 = _mk_batched_logit_delta()
+    got_ref = ops.batched_logit_delta(xg, yg, w1, w2, mode="never")
+    want_ref = ref.batched_logit_delta_ref(xg, yg, w1, w2)
+    assert np.array_equal(np.asarray(got_ref), np.asarray(want_ref))
+
+    from repro.kernels.batched_loglik import batched_logit_delta as kern
+
+    got_k = ops.batched_logit_delta(xg, yg, w1, w2, mode="always")
+    want_k = kern(xg, yg, w1, w2, interpret=True)
+    assert np.array_equal(np.asarray(got_k), np.asarray(want_k))
+
+
+def test_deprecated_alias_warns():
+    args = _mk_ar1()
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        out = ops.batched_gaussian_ar1_delta(*args, mode="ref")
+    want = ref.batched_gaussian_ar1_delta_ref(*args)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+    with pytest.warns(DeprecationWarning):
+        assert ops.normalize_mode("kernel") == "always"
+
+
+def test_resolve_precision_validation(monkeypatch):
+    assert ops.resolve_precision("fp32") == "fp32"
+    assert ops.resolve_precision("bf16") == "bf16"
+    monkeypatch.setenv(ops.PRECISION_ENV_VAR, "bf16")
+    assert ops.resolve_precision("auto") == "bf16"
+    monkeypatch.setenv(ops.PRECISION_ENV_VAR, "fp16")
+    with pytest.raises(ValueError):
+        ops.resolve_precision("auto")
+    with pytest.raises(ValueError):
+        ops.resolve_precision("double")
+
+
+def test_dispatch_summary_smoke():
+    line = ops.dispatch_summary()
+    assert "dispatch=" in line and "precision=" in line and "autotune=" in line
+
+
+def test_bf16_decision_flip_rate_bounded():
+    # the mixed-precision acceptance bar: across many sequential-test-style
+    # accept/reject rounds on the AR(1) delta, the bf16 data path may flip
+    # only a small fraction of decisions relative to exact fp32
+    k, m, rounds = 8, 256, 50
+    rng = np.random.default_rng(0)
+    flips = total = 0
+    for r in range(rounds):
+        xt = jnp.asarray(rng.standard_normal((k, m)) * 0.3, jnp.float32)
+        xp = jnp.asarray(rng.standard_normal((k, m)) * 0.3, jnp.float32)
+        phi = jnp.asarray(rng.uniform(0.5, 0.99, k), jnp.float32)
+        s2 = jnp.asarray(rng.uniform(0.01, 0.2, k), jnp.float32)
+        phi_p = phi + jnp.asarray(rng.normal(0, 0.02, k), jnp.float32)
+        s2_p = s2 * jnp.asarray(rng.uniform(0.9, 1.1, k), jnp.float32)
+        logu = jnp.asarray(np.log(rng.uniform(size=k)), jnp.float32)
+        d32 = ops.batched_gaussian_ar1_delta(
+            xt, xp, phi, s2, phi_p, s2_p, precision="fp32")
+        d16 = ops.batched_gaussian_ar1_delta(
+            xt, xp, phi, s2, phi_p, s2_p, precision="bf16")
+        acc32 = np.asarray(jnp.sum(d32, axis=1) > logu)
+        acc16 = np.asarray(jnp.sum(d16, axis=1) > logu)
+        flips += int((acc32 != acc16).sum())
+        total += k
+    assert flips / total <= 0.05
