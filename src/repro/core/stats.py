@@ -232,6 +232,45 @@ def tail_latency_summary(rounds, percentiles=(50, 90, 99)) -> dict:
     return out
 
 
+def stage_latency_breakdown(spans) -> dict:
+    """Per-stage latency tables from closed trace spans.
+
+    The request-path counterpart of :func:`tail_latency_summary`: spans
+    (plain dicts from :mod:`repro.obs.trace` carrying ``stage``/``dur_s``)
+    are grouped by stage tag — queue wait vs batch assembly vs device eval
+    vs combine — and each stage gets count/mean/p50/p95/max/total in
+    milliseconds. This is what the stats endpoint's ``/stages`` view
+    returns, answering "where did the latency go" without re-reading the
+    raw spans stream.
+    """
+    by_stage: dict[str, list[float]] = {}
+    traces = set()
+    for span in spans:
+        dur = span.get("dur_s")
+        stage = span.get("stage")
+        if not isinstance(dur, (int, float)) or stage is None:
+            continue
+        by_stage.setdefault(str(stage), []).append(float(dur) * 1e3)
+        if span.get("trace_id") is not None:
+            traces.add(span["trace_id"])
+    stages = {}
+    for stage, ms in sorted(by_stage.items()):
+        arr = np.asarray(ms, np.float64)
+        stages[stage] = {
+            "count": int(arr.size),
+            "mean_ms": float(arr.mean()),
+            "p50_ms": float(np.percentile(arr, 50)),
+            "p95_ms": float(np.percentile(arr, 95)),
+            "max_ms": float(arr.max()),
+            "total_ms": float(arr.sum()),
+        }
+    return {
+        "span_count": int(sum(len(v) for v in by_stage.values())),
+        "trace_count": len(traces),
+        "stages": stages,
+    }
+
+
 def slo_summary(latencies_s, deadlines_s=None, percentiles=(50, 95, 99)) -> dict:
     """Service-level summary of per-request latencies (seconds).
 

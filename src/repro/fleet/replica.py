@@ -27,6 +27,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from ..obs.trace import new_span_id, span_close, span_open
 from ..serving.resident import QuerySpec, Snapshot, SnapshotEvaluator
 from .delta import SnapshotDelta, apply_delta, wire_bytes
 
@@ -129,7 +130,12 @@ class ReplicaEnsemble:
             )
 
     def query(
-        self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
+        self,
+        spec: QuerySpec,
+        xs,
+        *,
+        snapshot: Snapshot | None = None,
+        span_sink: list | None = None,
     ) -> tuple[np.ndarray, Snapshot]:
         if self._dead:
             raise ReplicaDeadError(f"replica {self.name!r} is down (killed)")
@@ -138,15 +144,22 @@ class ReplicaEnsemble:
             raise RuntimeError(
                 f"replica {self.name!r} has no window yet; sync a delta first"
             )
-        return self._evaluator.evaluate(spec, snap, xs), snap
+        return self._evaluator.evaluate(spec, snap, xs, span_sink=span_sink), snap
 
-    def serve(self, spec: QuerySpec, query_class: str, xs) -> tuple[np.ndarray, float]:
-        """The router-facing entry: returns ``(values, staleness_s)``.
-        ``query_class`` is unused in-process (the spec is passed directly);
-        the process transport resolves it registry-side instead."""
+    def serve(self, spec: QuerySpec, query_class: str, xs, trace=None):
+        """The router-facing entry: returns ``(values, staleness_s)``, or —
+        when the router passes ``trace=(trace_id, parent_span_id)`` —
+        ``(values, staleness_s, spans)`` with the replica's own
+        ``replica_serve`` span and its ``device_eval`` child, already keyed
+        to the caller's trace. ``query_class`` is unused in-process (the
+        spec is passed directly); the process transport resolves it
+        registry-side instead."""
         del query_class
-        values, snap = self.query(spec, xs)
-        return values, snap.staleness_s
+        if trace is None:
+            values, snap = self.query(spec, xs)
+            return values, snap.staleness_s
+        values, snap, spans = _traced_query(self, spec, xs, trace)
+        return values, snap.staleness_s, spans
 
     def window(self, known_version: int = -1) -> tuple[int, Snapshot | None]:
         """The replica's current window for combine-at-query: returns
@@ -200,6 +213,30 @@ class ReplicaEnsemble:
         pass
 
 
+def _traced_query(replica: ReplicaEnsemble, spec: QuerySpec, xs, trace):
+    """Run a replica query under a ``replica_serve`` span with its
+    ``device_eval`` child, both keyed to ``trace = (trace_id,
+    parent_span_id)``. Returns ``(values, snap, spans)`` — closed, fully
+    linked span dicts ready to :meth:`Tracer.emit` (for the process
+    transport they pickle back over the pipe first)."""
+    trace_id, parent_id = trace
+    serve_span = span_open(trace_id, f"replica_serve:{replica.name}",
+                           "replica_serve", parent_id=parent_id,
+                           replica=replica.name)
+    sink: list = []
+    values, snap = replica.query(spec, xs, span_sink=sink)
+    span_close(serve_span, version=replica.version)
+    spans = [serve_span]
+    for raw in sink:
+        raw = dict(raw)
+        raw["trace_id"] = trace_id
+        if raw.get("span_id") is None:
+            raw["span_id"] = new_span_id()
+        raw["parent_id"] = serve_span["span_id"]
+        spans.append(raw)
+    return values, snap, spans
+
+
 # ---------------------------------------------------------------------------
 # Process-group transport
 # ---------------------------------------------------------------------------
@@ -245,10 +282,18 @@ def _replica_worker(conn, name: str, workload_name: str, build_kw: dict,
                 version = replica.apply_delta(msg[1], nbytes=msg[2])
                 out = ("ok", version)
             elif cmd == "query":
-                _, query_class, xs = msg
+                # 3-tuple = untraced (the wire format predating tracing);
+                # a 4th element carries (trace_id, parent_span_id) and asks
+                # for this replica's spans back in a 5-tuple reply.
+                _, query_class, xs, *rest = msg
+                trace = rest[0] if rest else None
                 spec = workload.query_specs[query_class]
-                values, snap = replica.query(spec, xs)
-                out = ("ok", values, snap.staleness_s, replica.version)
+                if trace is None:
+                    values, snap = replica.query(spec, xs)
+                    out = ("ok", values, snap.staleness_s, replica.version)
+                else:
+                    values, snap, spans = _traced_query(replica, spec, xs, trace)
+                    out = ("ok", values, snap.staleness_s, replica.version, spans)
             elif cmd == "window":
                 version, snap = replica.window(msg[1])
                 out = ("ok", version, snap)
@@ -359,11 +404,20 @@ class ReplicaProcess:
         out = self._rpc("reset")
         self.version = out[1]
 
-    def serve(self, spec, query_class: str, xs) -> tuple[np.ndarray, float]:
+    def serve(self, spec, query_class: str, xs, trace=None):
+        """Same contract as :meth:`ReplicaEnsemble.serve`: 2-tuple
+        ``(values, staleness_s)``, or a 3-tuple with the worker's spans
+        when ``trace`` is passed (the spans are built in the worker
+        process — their ``pid`` is the replica's — and ride back inside
+        the query reply)."""
         del spec  # resolved registry-side in the worker
-        out = self._rpc("query", query_class, np.asarray(xs))
+        if trace is None:
+            out = self._rpc("query", query_class, np.asarray(xs))
+            self.version = out[3]
+            return out[1], out[2]
+        out = self._rpc("query", query_class, np.asarray(xs), tuple(trace))
         self.version = out[3]
-        return out[1], out[2]
+        return out[1], out[2], out[4]
 
     def window(self, known_version: int = -1) -> tuple[int, Snapshot | None]:
         """RPC counterpart of :meth:`ReplicaEnsemble.window`: the snapshot

@@ -93,10 +93,15 @@ class FleetRouter:
         max_batch: int | None = None,
         default_deadline_s: float | None = None,
         lanes_per_shard: int | None = None,
+        tracer=None,
     ):
         self.fleet = fleet
         self.priorities = dict(priorities or {})
         self.admission = admission or AdmissionConfig()
+        # Optional repro.obs.trace.Tracer — same span taxonomy as the
+        # RequestQueue, plus replica_serve spans shipped back from replica
+        # processes and combine spans on the subposterior path.
+        self.tracer = tracer
         cfg = fleet.config.serving
         self.max_batch = int(max_batch or cfg.max_batch)
         self.default_deadline_s = (
@@ -202,6 +207,13 @@ class FleetRouter:
             deadline_s=self.default_deadline_s if deadline_s is None else deadline_s,
             submitted_at=time.monotonic(),
         )
+        if self.tracer is not None:
+            root = self.tracer.new_trace(
+                f"request:{workload}.{query_class}", "request",
+                workload=workload, query_class=query_class, request_id=req.id,
+            )
+            req.trace_id = root["trace_id"]
+            req.trace = {"root": root}
         with self._arrived:
             counters = self._counters[(workload, query_class)]
             floor = self._shed_floor_locked()
@@ -216,6 +228,7 @@ class FleetRouter:
                 req.batch_size = 0
                 counters["shed"] += 1
                 self._completed.append(req)
+                self._finish_req_trace(req, shed=True)
                 req.done.set()
                 return req
             counters["admitted"] += 1
@@ -229,12 +242,35 @@ class FleetRouter:
                 req.deadline_met = False
                 req.batch_size = 0
                 self._completed.append(req)
+                self._finish_req_trace(req)
                 req.done.set()
                 return req
+            if req.trace is not None:
+                req.trace["queue"] = self.tracer.start(
+                    req.trace_id, "queue_wait", "queue_wait",
+                    parent_id=req.trace["root"]["span_id"],
+                )
             lane = min(lanes, key=lambda l: (len(l.pending), l.served))
             lane.pending.append(req)
             self._arrived.notify_all()
         return req
+
+    def _finish_req_trace(self, req: Request, **tags) -> None:
+        """Close a completing request's open spans (root + any still-open
+        queue_wait)."""
+        if self.tracer is None or not req.trace:
+            return
+        if "queue" in req.trace:
+            self.tracer.finish(req.trace.pop("queue"))
+        root = req.trace.pop("root", None)
+        if root is not None:
+            self.tracer.finish(
+                root,
+                error=req.error,
+                deadline_met=req.deadline_met,
+                batch_size=req.batch_size,
+                **tags,
+            )
 
     @property
     def pending_count(self) -> int:
@@ -273,7 +309,11 @@ class FleetRouter:
                 else:
                     rest.append(req)
             source.pending = rest
-            return batch
+        if self.tracer is not None:
+            for req in batch:
+                if req.trace and "queue" in req.trace:
+                    self.tracer.finish(req.trace.pop("queue"))
+        return batch
 
     # -- subposterior combine-at-query --------------------------------------
 
@@ -318,33 +358,78 @@ class FleetRouter:
         return combined
 
     def _serve_combined(
-        self, workload: str, qclass: str, xs
+        self, workload: str, qclass: str, xs, trace=None
     ) -> tuple[np.ndarray, float]:
         """Serve a batch from the combined subposterior window (the
-        partitioned counterpart of ``lane.replica.serve``)."""
+        partitioned counterpart of ``lane.replica.serve``). ``trace =
+        (trace_id, parent_span_id)`` wraps the window-gather + combine in a
+        ``combine`` span with the evaluator's ``device_eval`` span nested
+        under it."""
         spec = self.fleet.spec(workload, qclass)
+        combine_span = sink = None
+        if trace is not None and self.tracer is not None:
+            combine_span = self.tracer.start(
+                trace[0], f"combine:{workload}", "combine",
+                parent_id=trace[1], partitions=self._partitioned[workload],
+            )
+            sink = []
         with self._combine_lock:
             snap = self._combined_snapshot(workload)
-            values = self._combine_evaluators[workload].evaluate(spec, snap, xs)
+            values = self._combine_evaluators[workload].evaluate(
+                spec, snap, xs, span_sink=sink
+            )
+        if combine_span is not None:
+            self.tracer.finish(combine_span)
+            if sink:
+                self.tracer.adopt(sink, trace[0],
+                                  parent_id=combine_span["span_id"])
         return values, snap.staleness_s
 
     # -- serving (continued) ------------------------------------------------
 
     def _serve_batch(self, lane: _Lane, batch: list[Request]) -> None:
         workload, qclass = batch[0].workload, batch[0].query_class
+        # Batch-level spans hang off the batch head's trace (same convention
+        # as RequestQueue._serve_batch); the replica leg is traced by the
+        # replica itself — in its own process for the proc transport — and
+        # its spans ride back inside the query reply.
+        head = batch[0].trace if self.tracer is not None else None
+        trace = (head["root"]["trace_id"], head["root"]["span_id"]) \
+            if head else None
+        asm = None
         try:
+            if trace is not None:
+                asm = self.tracer.start(
+                    trace[0], "batch_assembly", "assembly",
+                    parent_id=trace[1], batch_size=len(batch),
+                    lane=lane.replica.name,
+                )
             sizes = [req.xs.shape[0] if req.xs.ndim else 1 for req in batch]
             xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
+            if asm is not None:
+                self.tracer.finish(asm, rows=int(xs.shape[0]))
+                asm = None
             if workload in self._partitioned:
                 # Rerouting cannot help a combine that is missing a whole
                 # partition, so a ReplicaDeadError here fails the batch
                 # (the generic handler below) instead of cascading lane
                 # deaths through _on_lane_death.
-                values, staleness = self._serve_combined(workload, qclass, xs)
+                values, staleness = self._serve_combined(
+                    workload, qclass, xs, trace=trace
+                )
             else:
                 spec = self.fleet.spec(workload, qclass)
-                values, staleness = lane.replica.serve(spec, qclass, xs)
+                if trace is None:
+                    values, staleness = lane.replica.serve(spec, qclass, xs)
+                else:
+                    values, staleness, spans = lane.replica.serve(
+                        spec, qclass, xs, trace=trace
+                    )
+                    for span in spans:
+                        self.tracer.emit(span)
         except ReplicaDeadError:
+            if asm is not None:
+                self.tracer.finish(asm, error="ReplicaDeadError")
             if workload in self._partitioned:
                 now = time.monotonic()
                 with self._lock:
@@ -357,16 +442,20 @@ class FleetRouter:
                         req.deadline_met = False
                         req.batch_size = len(batch)
                         self._miss_trail.append(True)
+                        self._finish_req_trace(req)
                         req.done.set()
                     self._completed.extend(batch)
                 return
             # The replica (not the request) failed: the batch is still
             # servable, so reroute it — plus the lane's whole backlog —
-            # to the surviving lanes instead of failing it.
+            # to the surviving lanes instead of failing it. Root spans stay
+            # open; the serving lane closes them when the request finishes.
             self._on_lane_death(lane, batch)
             return
         except Exception as e:  # noqa: BLE001 — fail the requests, not the server
             now = time.monotonic()
+            if asm is not None:
+                self.tracer.finish(asm, error=type(e).__name__)
             with self._lock:
                 for req in batch:
                     req.error = f"{type(e).__name__}: {e}"
@@ -374,6 +463,7 @@ class FleetRouter:
                     req.deadline_met = False
                     req.batch_size = len(batch)
                     self._miss_trail.append(True)
+                    self._finish_req_trace(req)
                     req.done.set()
                 self._completed.extend(batch)
             return
@@ -388,6 +478,7 @@ class FleetRouter:
                 req.staleness_s = staleness
                 req.batch_size = len(batch)
                 self._miss_trail.append(not req.deadline_met)
+                self._finish_req_trace(req)
                 req.done.set()
             lane.served += len(batch)
             self._completed.extend(batch)
@@ -416,6 +507,7 @@ class FleetRouter:
                     req.deadline_met = False
                     req.batch_size = 0
                     self._miss_trail.append(True)
+                    self._finish_req_trace(req)
                     req.done.set()
                 self._completed.extend(stranded)
                 return

@@ -148,6 +148,14 @@ def build_parser() -> argparse.ArgumentParser:
                          "mid-load; prints SOAK_OK with recovery counters")
     ob.add_argument("--soak-seconds", type=float, default=None,
                     help="soak load duration (default: 6 smoke, 30 full)")
+    ob.add_argument("--trace-dir", default=None,
+                    help="end-to-end request tracing: tee every span to "
+                         "<dir>/spans.jsonl and export a Chrome/Perfetto "
+                         "<dir>/trace.json on exit (prints TRACE_OK)")
+    ob.add_argument("--profile-dir", default=None,
+                    help="capture one jax.profiler trace of the first "
+                         "writer refresh into this directory (no-op when "
+                         "the profiler is unavailable)")
     # -- legacy LM decoding flags (only read under --workload lm) ----------
     lm = ap.add_argument_group("lm decoding demo (--workload lm)")
     lm.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
@@ -165,22 +173,71 @@ def build_parser() -> argparse.ArgumentParser:
 
 
 def _setup_obs(args, source=None):
-    """Recorder + optional HTTP stats endpoint + SLO sampler for a serve
-    run, or (None, None, None) when no observability flag is set."""
-    if not (args.stats_addr is not None or args.obs_dir or args.soak):
-        return None, None, None
-    from repro.obs import Recorder, SLOSampler, StatsServer
+    """Recorder + optional HTTP stats endpoint + SLO sampler + tracer for a
+    serve run, or (None, None, None, None) when no observability flag is
+    set."""
+    if not (args.stats_addr is not None or args.obs_dir or args.soak
+            or args.trace_dir or args.profile_dir):
+        return None, None, None, None
+    from repro.obs import Recorder, SLOSampler, StatsServer, Tracer
 
     recorder = Recorder(
         args.obs_dir,
         meta={"workload": args.workload, "argv": sys.argv[1:]},
     )
+    tracer = None
+    if args.trace_dir:
+        tracer = Tracer(
+            recorder=recorder,
+            jsonl_path=os.path.join(args.trace_dir, "spans.jsonl"),
+        )
+        print(f"trace: spans tee to {args.trace_dir}/spans.jsonl")
     server = None
     if args.stats_addr is not None:
-        server = StatsServer(recorder, args.stats_addr)
+        server = StatsServer(recorder, args.stats_addr, tracer=tracer)
         print(f"stats: live rollup at {server.url}")
     sampler = SLOSampler(recorder, source) if source is not None else None
-    return recorder, server, sampler
+    return recorder, server, sampler, tracer
+
+
+def _obs_num_sections(ensemble):
+    """``num_sections`` of a serving ensemble's target(s), in the shape
+    :func:`repro.obs.record_transition_cost` wants: an int for a
+    builder-constructed single target, a per-op dict for a composite
+    ``cycle()`` transition, None when nothing is subsampled."""
+    if ensemble.target is not None:
+        return int(ensemble.target.num_sections)
+    transition = getattr(ensemble, "transition", None)
+    if transition is not None and hasattr(transition, "mh_ops"):
+        names = transition.names
+        return {
+            names[i]: int(op.target.num_sections)
+            for i, op in transition.mh_ops
+        }
+    return None
+
+
+def _record_transition_cost(recorder, workload_name, snap, num_sections):
+    from repro.obs import record_transition_cost
+
+    record_transition_cost(
+        recorder, workload_name, snap.summary, num_sections=num_sections
+    )
+
+
+def _record_profile(recorder, args, resident) -> None:
+    """Note a completed ``--profile-dir`` capture on the ``profile`` stream
+    (no record when the one-shot capture never fired)."""
+    if recorder is None or resident is None:
+        return
+    captured = getattr(resident, "last_profile_dir", None)
+    if captured:
+        recorder.record("profile", {
+            "workload": args.workload,
+            "capture_dir": captured,
+            "tool": "jax.profiler",
+        })
+        print(f"profile: jax.profiler capture in {captured}")
 
 
 def _stats_selfcheck(server) -> bool:
@@ -199,22 +256,50 @@ def _stats_selfcheck(server) -> bool:
         "req_per_s" in slo_last and "p95_ms" in slo_last
         and "shed" in slo_last and "staleness_s" in snap_last
     )
+    sublinear = ""
+    try:
+        with urllib.request.urlopen(server.url.rstrip("/") + "/sublinear",
+                                    timeout=10) as resp:
+            sub = _json.loads(resp.read())
+        frac = sub.get("frac_data_touched", {}).get("mean") \
+            if isinstance(sub.get("frac_data_touched"), dict) else None
+        if frac is not None:
+            sublinear = f" frac_data_touched={frac:.4f}"
+    except Exception:  # noqa: BLE001 — the sublinear view is informational
+        pass
     line = "STATS_OK" if ok else "STATS_FAIL"
     print(f"{line} url={server.url} streams={sorted(streams)} "
           f"req_per_s={slo_last.get('req_per_s', float('nan')):.0f} "
           f"p95_ms={slo_last.get('p95_ms', float('nan')):.2f} "
           f"shed={slo_last.get('shed', 'n/a')} "
-          f"staleness_s={snap_last.get('staleness_s', float('nan')):.3f}")
+          f"staleness_s={snap_last.get('staleness_s', float('nan')):.3f}"
+          f"{sublinear}")
     return ok
 
 
-def _teardown_obs(recorder, server) -> None:
+def _teardown_obs(recorder, server, tracer=None, trace_dir=None) -> None:
     if server is not None:
         server.close()
+    if tracer is not None:
+        if trace_dir:
+            _export_trace(tracer, trace_dir)
+        tracer.close()
     if recorder is not None:
         path = recorder.close()
         if path:
             print(f"obs: metric streams + summary in {recorder.dir}")
+
+
+def _export_trace(tracer, trace_dir) -> None:
+    """Write the Chrome/Perfetto export next to the spans tee and print the
+    TRACE_OK line CI greps (and uploads as an artifact)."""
+    from repro.obs.trace import export_chrome_trace
+
+    spans = tracer.spans()
+    out = export_chrome_trace(spans, os.path.join(trace_dir, "trace.json"))
+    n_traces = len({s.get("trace_id") for s in spans if s.get("trace_id")})
+    print(f"TRACE_OK spans={len(spans)} traces={n_traces} "
+          f"dropped={tracer.dropped} export={out}")
 
 
 # ---------------------------------------------------------------------------
@@ -268,6 +353,9 @@ def serve_posterior(args) -> int:
           f"max_staleness={args.max_staleness_s}s")
     pool = EnsemblePool(config)
     pool.add_workload(args.workload, smoke=smoke, seed=args.seed)
+    if args.profile_dir:
+        # One-shot: the first refresh (inside warm()) lands the capture.
+        pool.resident(args.workload).arm_profile(args.profile_dir)
     workload = pool.workload(args.workload)
     print(f"target: {workload.description}; request classes: "
           f"{sorted(workload.query_specs)}")
@@ -298,7 +386,9 @@ def serve_posterior(args) -> int:
 
     queue = RequestQueue(pool, max_batch=args.max_batch,
                          default_deadline_s=args.deadline_ms / 1e3)
-    recorder, stats_server, sampler = _setup_obs(args, source=queue)
+    recorder, stats_server, sampler, tracer = _setup_obs(args, source=queue)
+    queue.tracer = tracer
+    num_sections = _obs_num_sections(resident.ensemble)
     classes = sorted(workload.query_specs)
     qkey = jax.random.key(args.seed + 1)
     t0 = time.perf_counter()
@@ -317,8 +407,10 @@ def serve_posterior(args) -> int:
             sampler.sample()
             from repro.obs import record_snapshot
 
-            record_snapshot(recorder, args.workload,
-                            pool.resident(args.workload).snapshot())
+            snap_now = pool.resident(args.workload).snapshot()
+            record_snapshot(recorder, args.workload, snap_now)
+            _record_transition_cost(recorder, args.workload, snap_now,
+                                    num_sections)
     wall = time.perf_counter() - t0
     report = queue.slo_report()
 
@@ -372,9 +464,11 @@ def serve_posterior(args) -> int:
 
         snap = pool.resident(args.workload).snapshot()
         record_adaptation(recorder, args.workload, snap.summary)
+        _record_transition_cost(recorder, args.workload, snap, num_sections)
+        _record_profile(recorder, args, pool.resident(args.workload))
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
-        _teardown_obs(recorder, stats_server)
+        _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
 
     first = next(
         (e for e in report["classes"].values() if e.get("count")), None
@@ -527,6 +621,8 @@ def serve_fleet(args) -> int:
             restored = fleet.restore(args.ckpt_dir)
             print(f"restored warm fleet from {args.ckpt_dir} (step {restored})")
 
+    if args.profile_dir:
+        fleet.shards(args.workload)[0].writer.arm_profile(args.profile_dir)
     t0 = time.perf_counter()
     fleet.warm()
     warm_s = time.perf_counter() - t0
@@ -537,7 +633,9 @@ def serve_fleet(args) -> int:
           f"{[r.version for r in shard0.replicas]}")
 
     router = _build_router(args, fleet, workload)
-    recorder, stats_server, sampler = _setup_obs(args, source=router)
+    recorder, stats_server, sampler, tracer = _setup_obs(args, source=router)
+    router.tracer = tracer
+    num_sections = _obs_num_sections(shard0.writer.ensemble)
     _compile_lanes(args, fleet, workload, router)
     if args.background:
         fleet.start()
@@ -573,6 +671,8 @@ def serve_fleet(args) -> int:
 
             sampler.sample()
             record_fleet_sync(recorder, fleet)
+            _record_transition_cost(recorder, args.workload,
+                                    shard0.writer.snapshot(), num_sections)
     if args.background:
         for req in pending:
             req.done.wait(timeout=60.0)
@@ -593,6 +693,8 @@ def serve_fleet(args) -> int:
         snap = shard0.writer.snapshot()
         record_snapshot(recorder, args.workload, snap)
         record_adaptation(recorder, args.workload, snap.summary)
+        _record_transition_cost(recorder, args.workload, snap, num_sections)
+        _record_profile(recorder, args, shard0.writer)
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
     report = router.slo_report()
@@ -637,7 +739,7 @@ def serve_fleet(args) -> int:
     if not np.array_equal(np.asarray(w_vals), np.asarray(r_vals)):
         print(f"PARITY FAIL: replica vs writer max|delta|={err:.3g} "
               f"(writer v{w_snap.steps_done}, replica v{shard0.replicas[0].version})")
-        _teardown_obs(recorder, stats_server)
+        _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
         fleet.close()
         return 1
     parity = "ok(bitexact)"
@@ -647,7 +749,7 @@ def serve_fleet(args) -> int:
     if args.ckpt_dir:
         path = fleet.save(args.ckpt_dir)
         print(f"saved warm fleet to {path}")
-    _teardown_obs(recorder, stats_server)
+    _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
     fleet.close()
 
     first = next((e for e in report["classes"].values() if e.get("count")), None)
@@ -687,11 +789,15 @@ def serve_soak(args) -> int:
     # Killing a replica must leave a live lane in its shard.
     args.replicas = max(args.replicas, 2)
     fleet, workload, classes = _build_fleet(args)
+    if args.profile_dir:
+        fleet.shards(args.workload)[0].writer.arm_profile(args.profile_dir)
     fleet.warm()
     shard0 = fleet.shards(args.workload)[0]
     victim = shard0.replicas[-1]
     router = _build_router(args, fleet, workload)
-    recorder, stats_server, sampler = _setup_obs(args, source=router)
+    recorder, stats_server, sampler, tracer = _setup_obs(args, source=router)
+    router.tracer = tracer
+    num_sections = _obs_num_sections(shard0.writer.ensemble)
     _compile_lanes(args, fleet, workload)
     top = workload.default_class
     print(f"soak: {soak_s:.0f}s mixed-class load "
@@ -748,7 +854,10 @@ def serve_soak(args) -> int:
         if sampler is not None and now - last_sample >= max(soak_s / 12, 0.25):
             sampler.sample()
             record_fleet_sync(recorder, fleet)
-            record_snapshot(recorder, args.workload, shard0.writer.snapshot())
+            snap_now = shard0.writer.snapshot()
+            record_snapshot(recorder, args.workload, snap_now)
+            _record_transition_cost(recorder, args.workload, snap_now,
+                                    num_sections)
             last_sample = now
 
     for req in pending:
@@ -758,7 +867,11 @@ def serve_soak(args) -> int:
     if sampler is not None:
         sampler.sample()
         record_fleet_sync(recorder, fleet)
-        record_snapshot(recorder, args.workload, shard0.writer.snapshot())
+        snap_final = shard0.writer.snapshot()
+        record_snapshot(recorder, args.workload, snap_final)
+        _record_transition_cost(recorder, args.workload, snap_final,
+                                num_sections)
+        _record_profile(recorder, args, shard0.writer)
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
     report = router.slo_report()
@@ -814,7 +927,7 @@ def serve_soak(args) -> int:
     if not stats_ok:
         failures.append("stats endpoint self-check failed")
 
-    _teardown_obs(recorder, stats_server)
+    _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
     fleet.close()
     if failures:
         print(f"SOAK_FAIL workload={args.workload} " + "; ".join(failures))

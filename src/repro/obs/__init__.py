@@ -1,18 +1,25 @@
-"""Observability: per-run metric streams, rollups, and the live stats endpoint.
+"""Observability: metric streams, request traces, rollups, live endpoint.
 
 The recording layer over the serving/fleet stack (see docs/OBSERVABILITY.md):
 
     signal sources ──▶ sources.py adapters ──▶ Recorder ──▶ <run>/<stream>.jsonl
      slo_report()        SLOSampler              │             summary.json
      Snapshot            record_snapshot         └─▶ rollup() ──▶ StatsServer
-     sync_stats          record_fleet_sync                        (HTTP JSON)
-     run_timed           make_on_block
-     adaptation trace    record_adaptation
+     sync_stats          record_fleet_sync                        (HTTP JSON:
+     run_timed           make_on_block                             /  /spans
+     adaptation trace    record_adaptation                         /stages
+     SubsampledMHInfo    record_transition_cost                    /sublinear)
+    request path     ──▶ trace.Tracer spans  ──▶ spans stream + ring
+     (queue/router/replica/evaluator)            └─▶ Chrome trace export
+    bench artifacts  ──▶ history.HistoryStore (ring of last N runs,
+                          read by benchmarks/gate.py --trend)
 
 Front-end: ``python -m repro.launch.serve --stats-addr 127.0.0.1:8787
---obs-dir /tmp/obs``; regression gating over the recorded benchmark
-artifacts lives in ``benchmarks/gate.py``.
+--obs-dir /tmp/obs --trace-dir /tmp/trace``; trace export via
+``python -m repro.obs.trace --export ...``; trend gating over the recorded
+benchmark artifacts lives in ``benchmarks/gate.py``.
 """
+from .history import HistoryStore
 from .recorder import Recorder, json_default
 from .server import StatsServer
 from .sources import (
@@ -21,15 +28,23 @@ from .sources import (
     record_adaptation,
     record_fleet_sync,
     record_snapshot,
+    record_transition_cost,
 )
+from .trace import Tracer, chrome_trace_events, span_close, span_open
 
 __all__ = [
+    "HistoryStore",
     "Recorder",
     "SLOSampler",
     "StatsServer",
+    "Tracer",
+    "chrome_trace_events",
     "json_default",
     "make_on_block",
     "record_adaptation",
     "record_fleet_sync",
     "record_snapshot",
+    "record_transition_cost",
+    "span_close",
+    "span_open",
 ]

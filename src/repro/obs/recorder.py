@@ -8,8 +8,9 @@ in the serving front-end — plus ``meta.json`` at start and ``summary.json``
 a wall-clock ``t`` and a run-relative ``rel_s`` stamp, so streams from one
 run can be joined on time.
 
-The rollup is maintained incrementally (count / mean / min / max / last per
-numeric field per stream) and is cheap to read at any moment — it is what
+The rollup is maintained incrementally (count / mean / min / max / last
+plus streaming P² p50/p95 per numeric field per stream) and is cheap to
+read at any moment — it is what
 the ``serve --stats-addr`` HTTP endpoint returns while the run is live, and
 what ``summary.json`` freezes at the end.
 
@@ -51,10 +52,93 @@ def _as_scalar(value) -> float | None:
     return None
 
 
-class _FieldAgg:
-    """Streaming count/sum/min/max/last for one numeric field."""
+class _P2Quantile:
+    """Jain & Chlamtac's P² streaming quantile estimator (5 markers).
 
-    __slots__ = ("count", "total", "min", "max", "last")
+    O(1) memory per field: below 5 observations the exact sorted-buffer
+    quantile is returned; from the 5th on, the marker heights track the
+    target quantile with piecewise-parabolic adjustment. This is what lets
+    the rollup report latency tails without re-reading the raw JSONL."""
+
+    __slots__ = ("p", "q", "n", "np_", "dn", "_buf")
+
+    def __init__(self, p: float):
+        self.p = float(p)
+        self._buf: list[float] = []
+        self.q: list[float] | None = None
+
+    def add(self, x: float) -> None:
+        if self.q is None:
+            self._buf.append(x)
+            if len(self._buf) == 5:
+                self._buf.sort()
+                p = self.p
+                self.q = list(self._buf)
+                self.n = [0.0, 1.0, 2.0, 3.0, 4.0]
+                self.np_ = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]
+                self.dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+            return
+        q, n = self.q, self.n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x < q[1]:
+            k = 0
+        elif x < q[2]:
+            k = 1
+        elif x < q[3]:
+            k = 2
+        elif x <= q[4]:
+            k = 3
+        else:
+            q[4] = x
+            k = 3
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        for i in range(5):
+            self.np_[i] += self.dn[i]
+        for i in (1, 2, 3):
+            d = self.np_[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1.0) or \
+                    (d <= -1.0 and n[i - 1] - n[i] < -1.0):
+                d = 1.0 if d > 0 else -1.0
+                qi = self._parabolic(i, d)
+                if not q[i - 1] < qi < q[i + 1]:
+                    qi = self._linear(i, d)
+                q[i] = qi
+                n[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self.q, self.n
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+        )
+
+    def _linear(self, i: int, d: float) -> float:
+        d = int(d)
+        q, n = self.q, self.n
+        return q[i] + d * (q[i + d] - q[i]) / (n[i + d] - n[i])
+
+    def value(self) -> float:
+        if self.q is not None:
+            return self.q[2]
+        s = sorted(self._buf)
+        if not s:
+            return 0.0
+        idx = self.p * (len(s) - 1)
+        lo = int(idx)
+        frac = idx - lo
+        if lo + 1 >= len(s):
+            return s[-1]
+        return s[lo] + (s[lo + 1] - s[lo]) * frac
+
+
+class _FieldAgg:
+    """Streaming count/sum/min/max/last + P² tail quantiles for one
+    numeric field."""
+
+    __slots__ = ("count", "total", "min", "max", "last", "q50", "q95")
 
     def __init__(self):
         self.count = 0
@@ -62,6 +146,8 @@ class _FieldAgg:
         self.min = float("inf")
         self.max = float("-inf")
         self.last = 0.0
+        self.q50 = _P2Quantile(0.5)
+        self.q95 = _P2Quantile(0.95)
 
     def add(self, v: float) -> None:
         self.count += 1
@@ -69,14 +155,21 @@ class _FieldAgg:
         self.min = min(self.min, v)
         self.max = max(self.max, v)
         self.last = v
+        self.q50.add(v)
+        self.q95.add(v)
 
     def summary(self) -> dict:
+        # count/mean/min/max/last are byte-identical to the pre-quantile
+        # rollup; p50/p95 are additive keys (dashboards keying on the
+        # original five fields are unaffected).
         return {
             "count": self.count,
             "mean": self.total / max(self.count, 1),
             "min": self.min,
             "max": self.max,
             "last": self.last,
+            "p50": self.q50.value(),
+            "p95": self.q95.value(),
         }
 
 

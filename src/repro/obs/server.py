@@ -1,12 +1,29 @@
-"""Live stats endpoint: the recorder's rollup over HTTP.
+"""Live stats endpoint: the recorder's rollup (and trace views) over HTTP.
 
 A :class:`StatsServer` binds a tiny :class:`ThreadingHTTPServer` on a
-daemon thread and answers every GET with the owning
-:class:`repro.obs.Recorder`'s current :meth:`rollup` as JSON — what
-``serve --stats-addr host:port`` exposes so a dashboard (or ``curl``) can
-watch req/s, latency tails, shed counts, and snapshot staleness while the
-service is under load. Port 0 binds an ephemeral port (tests); the bound
-address is in :attr:`url`.
+daemon thread and answers GETs with JSON — what ``serve --stats-addr
+host:port`` exposes so a dashboard (or ``curl``) can watch the service
+while it is under load. Port 0 binds an ephemeral port (tests); the bound
+address is in :attr:`url`. Paths:
+
+====================  =====================================================
+path                  payload
+====================  =====================================================
+``/``                 the owning :meth:`repro.obs.Recorder.rollup` —
+                      req/s, latency tails (incl. streaming p50/p95),
+                      shed counts, snapshot staleness
+``/spans``            the attached :class:`repro.obs.trace.Tracer`'s
+                      in-memory span ring (newest ``max_spans``)
+``/stages``           per-stage latency breakdown of those spans (queue
+                      wait vs batch assembly vs device eval vs combine;
+                      :func:`repro.core.stats.stage_latency_breakdown`)
+``/sublinear``        the live "fraction of data touched per transition"
+                      rollup from the ``transition_cost`` stream, with the
+                      per-op breakdown for ``cycle()`` transitions
+====================  =====================================================
+
+Any other path falls back to the full rollup, so pre-tracing dashboards
+keep working unchanged.
 """
 from __future__ import annotations
 
@@ -17,18 +34,58 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from .recorder import Recorder, json_default
 
 
-class StatsServer:
-    """Serve ``recorder.rollup()`` as JSON on every GET."""
+def _sublinear_view(rollup: dict) -> dict:
+    """The ``/sublinear`` payload from a rollup: overall and per-op
+    ``frac_data_touched`` aggregates of the ``transition_cost`` stream."""
+    stream = rollup.get("streams", {}).get("transition_cost")
+    if not stream:
+        return {"available": False, "samples": 0}
+    fields = stream.get("fields", {})
+    suffix = ".frac_data_touched"
+    per_op = {
+        key[: -len(suffix)]: agg
+        for key, agg in fields.items()
+        if key.endswith(suffix)
+    }
+    return {
+        "available": True,
+        "samples": stream.get("count", 0),
+        "frac_data_touched": fields.get("frac_data_touched"),
+        "per_op": per_op,
+        "last": stream.get("last", {}),
+    }
 
-    def __init__(self, recorder: Recorder, addr: str = "127.0.0.1:0"):
+
+class StatsServer:
+    """Serve ``recorder.rollup()`` (plus trace views) as JSON over GET."""
+
+    def __init__(self, recorder: Recorder, addr: str = "127.0.0.1:0",
+                 tracer=None):
         host, _, port = addr.partition(":")
         recorder_ref = recorder
+        tracer_ref = tracer
 
         class _Handler(BaseHTTPRequestHandler):
             def do_GET(self):  # noqa: N802 — http.server API
-                body = json.dumps(
-                    recorder_ref.rollup(), default=json_default
-                ).encode()
+                path = self.path.split("?", 1)[0].rstrip("/") or "/"
+                if path == "/spans":
+                    spans = tracer_ref.spans() if tracer_ref else []
+                    payload = {
+                        "spans": spans,
+                        "count": len(spans),
+                        "dropped": tracer_ref.dropped if tracer_ref else 0,
+                    }
+                elif path == "/stages":
+                    from ..core.stats import stage_latency_breakdown
+
+                    payload = stage_latency_breakdown(
+                        tracer_ref.spans() if tracer_ref else []
+                    )
+                elif path == "/sublinear":
+                    payload = _sublinear_view(recorder_ref.rollup())
+                else:
+                    payload = recorder_ref.rollup()
+                body = json.dumps(payload, default=json_default).encode()
                 self.send_response(200)
                 self.send_header("Content-Type", "application/json")
                 self.send_header("Content-Length", str(len(body)))

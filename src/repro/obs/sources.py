@@ -15,6 +15,8 @@ stream                source
 ``adaptation``        :func:`record_adaptation` — epsilon/batch/sigma traces
 ``fleet``             :func:`record_fleet_sync` — delta-vs-full byte accounting
 ``refresh``           :func:`make_on_block` — per-block transition throughput
+``transition_cost``   :func:`record_transition_cost` — fraction of data
+                      touched per transition (the live sublinear evidence)
 ====================  =====================================================
 """
 from __future__ import annotations
@@ -61,9 +63,19 @@ class SLOSampler:
         }
         if self._prev is not None:
             dt = now - self._prev[0]
-            rec["req_per_s"] = (
-                (report["count"] - self._prev[1]) / dt if dt > 0 else 0.0
-            )
+            delta = report["count"] - self._prev[1]
+            if delta < 0:
+                # The source's completion counters went backwards — a
+                # router rebuild or pool restart reset them. A negative
+                # delta would poison the req_per_s aggregates, so clamp to
+                # zero and leave an explicit marker record instead.
+                self.recorder.record(self.stream, {
+                    "counter_reset": True,
+                    "count_before": self._prev[1],
+                    "count_after": report["count"],
+                })
+                delta = 0
+            rec["req_per_s"] = delta / dt if dt > 0 else 0.0
         self._prev = (now, report["count"])
         admission = report.get("admission")
         if admission:
@@ -166,6 +178,56 @@ def record_fleet_sync(recorder: Recorder, fleet, stream: str = "fleet") -> dict:
             min(shard["replica_versions"]) if shard["replica_versions"] else 0
         )
     rec["sync_errors"] = len(report["errors"])
+    return recorder.record(stream, rec)
+
+
+def record_transition_cost(recorder: Recorder, name: str, summary: dict,
+                           num_sections=None,
+                           stream: str = "transition_cost") -> dict | None:
+    """One ``transition_cost`` record from a snapshot's ``summary``: the
+    live sublinear-cost evidence, per refresh block.
+
+    ``summary`` is what :func:`repro.core.stats.ensemble_summary` returns
+    (already on every :class:`~repro.serving.resident.Snapshot`), either a
+    single-op dict carrying ``mean_n_evaluated_overall`` or — for
+    ``cycle()`` transitions — a dict of such summaries keyed by component
+    op name. ``num_sections`` is the partitioned target's section count
+    (an ``{op_name: count}`` dict for composites); when known, each op's
+    ``frac_data_touched`` = sections evaluated / sections total is the
+    paper's headline ratio — strictly below 1.0 means the transition is
+    genuinely sublinear. The top-level ``frac_data_touched`` of a
+    composite record is the mean across its subsampled ops."""
+    def one(prefix: str, s: dict, ns) -> float | None:
+        ne = s.get("mean_n_evaluated_overall")
+        if not isinstance(ne, (int, float)):
+            return None
+        rec[f"{prefix}mean_n_evaluated"] = float(ne)
+        if isinstance(s.get("mean_rounds_overall"), (int, float)):
+            rec[f"{prefix}mean_rounds"] = float(s["mean_rounds_overall"])
+        if ns:
+            rec[f"{prefix}num_sections"] = int(ns)
+            frac = float(ne) / float(ns)
+            rec[f"{prefix}frac_data_touched"] = frac
+            return frac
+        return None
+
+    rec: dict = {"workload": name}
+    if "mean_n_evaluated_overall" in summary:
+        one("", summary, num_sections)
+    else:  # composite: {op_name: ensemble_summary}
+        fracs = []
+        for op, s in summary.items():
+            if not isinstance(s, dict):
+                continue
+            ns = num_sections.get(op) if isinstance(num_sections, dict) \
+                else num_sections
+            frac = one(f"{op}.", s, ns)
+            if frac is not None:
+                fracs.append(frac)
+        if fracs:
+            rec["frac_data_touched"] = float(np.mean(fracs))
+    if len(rec) == 1:  # no subsampled op anywhere — nothing to record
+        return None
     return recorder.record(stream, rec)
 
 

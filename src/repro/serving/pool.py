@@ -219,17 +219,21 @@ class EnsemblePool:
         xs,
         *,
         snapshot: Snapshot | None = None,
+        span_sink: list | None = None,
     ) -> tuple[np.ndarray, Snapshot]:
         """Freshness-checked posterior-functional evaluation.
 
         Returns ``(values, snapshot_used)``; pass an explicit ``snapshot``
         (e.g. pinned by the request queue for a whole batch) to skip the
-        freshness round-trip.
+        freshness round-trip. ``span_sink`` collects the evaluator's raw
+        ``device_eval`` trace span when the caller is tracing.
         """
         spec = self.spec(name, query_class)
         if snapshot is None:
             snapshot = self.ensure_fresh(name)
-        return self._residents[name].query(spec, xs, snapshot=snapshot)
+        return self._residents[name].query(
+            spec, xs, snapshot=snapshot, span_sink=span_sink
+        )
 
     # -- lifecycle ---------------------------------------------------------
 

@@ -53,6 +53,9 @@ class Request:
     deadline_met: bool | None = None
     staleness_s: float | None = None
     batch_size: int | None = None
+    # -- tracing (set by a tracer-enabled queue/router at submit) --
+    trace_id: str | None = None
+    trace: dict | None = None  # open spans: {"root": ..., "queue": ...}
     done: threading.Event = dataclasses.field(default_factory=threading.Event)
 
     def result(self, timeout_s: float | None = None) -> np.ndarray:
@@ -72,8 +75,14 @@ class RequestQueue:
         *,
         max_batch: int | None = None,
         default_deadline_s: float | None = None,
+        tracer=None,
     ):
         self.pool = pool
+        # Optional repro.obs.trace.Tracer: when set, every request carries
+        # a trace (root span at submit, queue_wait until batched, one
+        # assembly + device_eval span per batch). Tracing off = zero new
+        # work on the request path.
+        self.tracer = tracer
         self.max_batch = int(max_batch or pool.config.max_batch)
         self.default_deadline_s = (
             pool.config.default_deadline_s
@@ -103,6 +112,17 @@ class RequestQueue:
             deadline_s=self.default_deadline_s if deadline_s is None else deadline_s,
             submitted_at=time.monotonic(),
         )
+        if self.tracer is not None:
+            root = self.tracer.new_trace(
+                f"request:{workload}.{query_class}", "request",
+                workload=workload, query_class=query_class, request_id=req.id,
+            )
+            queue_span = self.tracer.start(
+                root["trace_id"], "queue_wait", "queue_wait",
+                parent_id=root["span_id"],
+            )
+            req.trace_id = root["trace_id"]
+            req.trace = {"root": root, "queue": queue_span}
         with self._arrived:
             self._pending.append(req)
             self._arrived.notify()
@@ -135,29 +155,55 @@ class RequestQueue:
                 else:
                     rest.append(req)
             self._pending = rest
-            return batch
+        if self.tracer is not None:
+            for req in batch:
+                if req.trace and "queue" in req.trace:
+                    self.tracer.finish(req.trace.pop("queue"))
+        return batch
 
     def _serve_batch(self, batch: list[Request]) -> None:
         name, qclass = batch[0].workload, batch[0].query_class
+        # Batch-level spans hang off the batch head's trace: assembly
+        # covers concat + snapshot pinning; the evaluator's device_eval
+        # span is adopted after the query returns.
+        head = batch[0].trace if self.tracer is not None else None
+        asm = None
+        sink: list | None = [] if head else None
         try:
+            if head:
+                asm = self.tracer.start(
+                    head["root"]["trace_id"], "batch_assembly", "assembly",
+                    parent_id=head["root"]["span_id"], batch_size=len(batch),
+                )
             # The concatenate is inside the try: one malformed request (e.g.
             # mismatched row width) must fail its batch, not the serve loop.
             sizes = [req.xs.shape[0] if req.xs.ndim else 1 for req in batch]
             xs = np.concatenate([np.atleast_1d(req.xs) for req in batch], axis=0)
             # One fresh snapshot serves the whole batch (consistent draws).
             snap = self.pool.ensure_fresh(name)
-            values, snap = self.pool.query(name, qclass, xs, snapshot=snap)
+            if asm is not None:
+                self.tracer.finish(asm, rows=int(xs.shape[0]))
+                asm = None
+            values, snap = self.pool.query(
+                name, qclass, xs, snapshot=snap, span_sink=sink
+            )
         except Exception as e:  # noqa: BLE001 — fail the requests, not the server
             now = time.monotonic()
+            if asm is not None:
+                self.tracer.finish(asm, error=type(e).__name__)
             for req in batch:
                 req.error = f"{type(e).__name__}: {e}"
                 req.latency_s = now - req.submitted_at
                 req.deadline_met = False
                 req.batch_size = len(batch)
+                self._finish_trace(req)
                 req.done.set()
             with self._lock:
                 self._completed.extend(batch)
             return
+        if head and sink:
+            self.tracer.adopt(sink, head["root"]["trace_id"],
+                              parent_id=head["root"]["span_id"])
         now = time.monotonic()
         offset = 0
         for req, size in zip(batch, sizes):
@@ -167,9 +213,27 @@ class RequestQueue:
             req.deadline_met = req.latency_s <= req.deadline_s
             req.staleness_s = snap.staleness_s
             req.batch_size = len(batch)
+            self._finish_trace(req)
             req.done.set()
         with self._lock:
             self._completed.extend(batch)
+
+    def _finish_trace(self, req: Request) -> None:
+        """Close a completing request's open spans (root + any still-open
+        queue_wait, e.g. when the batch failed before _take_batch closed
+        it)."""
+        if self.tracer is None or not req.trace:
+            return
+        if "queue" in req.trace:
+            self.tracer.finish(req.trace.pop("queue"))
+        root = req.trace.pop("root", None)
+        if root is not None:
+            self.tracer.finish(
+                root,
+                error=req.error,
+                deadline_met=req.deadline_met,
+                batch_size=req.batch_size,
+            )
 
     def drain(self) -> list[Request]:
         """Serve every pending request (batched) on the calling thread;

@@ -26,7 +26,9 @@ queries always see *some* recent snapshot instead of waiting on MCMC.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import os
 import threading
 import time
 from typing import Any, Callable, NamedTuple
@@ -174,9 +176,17 @@ class SnapshotEvaluator:
             self._eval_cache[cache_key] = fn
         return fn
 
-    def evaluate(self, spec: QuerySpec, snap: Snapshot, xs) -> np.ndarray:
+    def evaluate(self, spec: QuerySpec, snap: Snapshot, xs,
+                 span_sink: list | None = None) -> np.ndarray:
         """Evaluate ``spec`` over every draw of ``snap`` on request rows
-        ``xs``; returns the aggregated (B,) values."""
+        ``xs``; returns the aggregated (B,) values.
+
+        ``span_sink``, when given, receives one raw ``device_eval`` trace
+        span (a plain dict — no trace_id yet; the caller's Tracer adopts
+        it) covering the device-side work: window upload + every
+        micro-batched evaluator call. Kept dependency-free on purpose:
+        replica worker processes ship these dicts back over the pipe."""
+        t_open = time.monotonic()
         xs = np.asarray(xs)
         if xs.ndim == 0:
             xs = xs[None]
@@ -202,7 +212,21 @@ class SnapshotEvaluator:
             v = np.asarray(evaluator(flat, jnp.asarray(chunk)))  # (mb,)
             keep = slice(None, mb - pad) if pad else slice(None)
             vals.append(v[keep])
-        return np.concatenate(vals, axis=0).astype(np.float64)
+        out = np.concatenate(vals, axis=0).astype(np.float64)
+        if span_sink is not None:
+            span_sink.append({
+                "trace_id": None,
+                "span_id": None,
+                "parent_id": None,
+                "name": f"device_eval:{spec.name or spec.aggregate}",
+                "stage": "device_eval",
+                "start_s": t_open,
+                "dur_s": time.monotonic() - t_open,
+                "pid": os.getpid(),
+                "rows": int(b),
+                "draws": int(snap.num_draws),
+            })
+        return out
 
 
 class ResidentEnsemble:
@@ -246,6 +270,11 @@ class ResidentEnsemble:
         self._evaluator = SnapshotEvaluator(micro_batch)
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        # One-shot jax.profiler capture: arm_profile() points the NEXT
+        # refresh at a directory; last_profile_dir records where the
+        # capture landed (None until one has happened).
+        self._profile_dir: str | None = None
+        self.last_profile_dir: str | None = None
 
     # -- refresh -----------------------------------------------------------
 
@@ -256,6 +285,26 @@ class ResidentEnsemble:
     @property
     def state(self) -> EnsembleState:
         return self._state
+
+    def arm_profile(self, profile_dir: str) -> None:
+        """Capture a ``jax.profiler`` trace of the *next* refresh block
+        into ``profile_dir`` (one-shot; re-arm for another capture). The
+        capture is best-effort: an unavailable or failing profiler leaves
+        refresh untouched — what ``serve --profile-dir`` relies on."""
+        self._profile_dir = profile_dir
+
+    def _profile_ctx(self):
+        """A context manager wrapping one refresh run: the armed one-shot
+        ``jax.profiler.trace`` capture, or a no-op. Never raises."""
+        profile_dir, self._profile_dir = self._profile_dir, None
+        if profile_dir is None:
+            return contextlib.nullcontext(), None
+        try:
+            from jax import profiler as jax_profiler
+
+            return jax_profiler.trace(profile_dir), profile_dir
+        except Exception:  # noqa: BLE001 — profiling must never break serving
+            return contextlib.nullcontext(), None
 
     def refresh(self, num_steps: int | None = None) -> int:
         """Advance every chain ``num_steps`` (default ``refresh_steps``)
@@ -275,8 +324,26 @@ class ResidentEnsemble:
             with self._lock:
                 state, steps_done = self._state, self._steps_done
             sk = self.ensemble.step_keys(self._base_key, steps_done, n)
-            state, samples, infos = self.ensemble.run(None, state, n, step_keys=sk)
-            jax.block_until_ready(state.theta)
+            ctx, profiled = self._profile_ctx()
+            try:
+                with ctx:
+                    state, samples, infos = self.ensemble.run(
+                        None, state, n, step_keys=sk
+                    )
+                    jax.block_until_ready(state.theta)
+            except Exception:
+                if profiled is None:
+                    raise
+                # The profiler context itself failed (e.g. a second trace
+                # already active): redo the block unprofiled — the capture
+                # is best-effort, the refresh is not.
+                profiled = None
+                state, samples, infos = self.ensemble.run(
+                    None, state, n, step_keys=sk
+                )
+                jax.block_until_ready(state.theta)
+            if profiled is not None:
+                self.last_profile_dir = profiled
             draws = _window_append(self._draws, samples, self.window)
             last_infos = jax.tree.map(np.asarray, infos)
             with self._lock:
@@ -363,13 +430,19 @@ class ResidentEnsemble:
     # -- queries -----------------------------------------------------------
 
     def query(
-        self, spec: QuerySpec, xs, *, snapshot: Snapshot | None = None
+        self,
+        spec: QuerySpec,
+        xs,
+        *,
+        snapshot: Snapshot | None = None,
+        span_sink: list | None = None,
     ) -> tuple[np.ndarray, Snapshot]:
         """Evaluate ``spec`` on request rows ``xs`` against a snapshot.
 
         Returns ``(values (B,), snapshot_used)``; the evaluation itself is
         the shared :class:`SnapshotEvaluator` (fixed-shape micro-batching,
-        per-snapshot device cache).
+        per-snapshot device cache). ``span_sink`` collects the raw
+        ``device_eval`` trace span when the caller is tracing.
         """
         snap = snapshot if snapshot is not None else self.snapshot()
         if snap.draws is None:
@@ -377,7 +450,7 @@ class ResidentEnsemble:
                 f"resident {self.name!r} has no draws yet; refresh() first "
                 "(or serve through EnsemblePool, which enforces freshness)"
             )
-        return self._evaluator.evaluate(spec, snap, xs), snap
+        return self._evaluator.evaluate(spec, snap, xs, span_sink=span_sink), snap
 
     # -- background refresh ------------------------------------------------
 

@@ -50,8 +50,11 @@ def test_recorder_streams_roundtrip(tmp_path):
     slo = roll["streams"]["slo"]
     assert slo["count"] == 2 and slo["last"]["count"] == 3
     agg = slo["fields"]["p95_ms"]
-    assert agg == {"count": 2, "mean": 20.0, "min": 10.0, "max": 30.0,
-                   "last": 30.0}
+    # The pre-tail-quantile keys stay byte-compatible...
+    assert {k: agg[k] for k in ("count", "mean", "min", "max", "last")} == {
+        "count": 2, "mean": 20.0, "min": 10.0, "max": 30.0, "last": 30.0}
+    # ...and the streaming tails ride alongside (exact below 5 samples).
+    assert agg["p50"] == 20.0 and agg["p95"] == pytest.approx(29.0)
     # JSONL round-trips and carries both time stamps
     back = rec.read_stream("slo")
     assert [r["count"] for r in back] == [1, 3]
@@ -330,3 +333,285 @@ def test_gate_new_record_without_baseline_is_reported_not_failed(tmp_path):
                        benches=("serving",))
     assert verdict["status"] == "pass"
     assert any("K=8" in m.get("record", "") for m in verdict["missing"])
+
+
+# ---------------------------------------------------------------------------
+# Streaming tail quantiles (P^2) in the rollup field aggregates
+# ---------------------------------------------------------------------------
+
+
+def test_p2_quantiles_track_numpy_percentiles():
+    rec = Recorder()
+    xs = np.random.default_rng(3).normal(loc=5.0, scale=2.0, size=4000)
+    for x in xs:
+        rec.record("lat", {"ms": float(x)})
+    agg = rec.rollup()["streams"]["lat"]["fields"]["ms"]
+    # Streaming estimates stay within a few percent of the exact tails
+    # while the aggregator holds O(1) state (5 markers per quantile).
+    assert agg["p50"] == pytest.approx(np.percentile(xs, 50), abs=0.15)
+    assert agg["p95"] == pytest.approx(np.percentile(xs, 95), abs=0.25)
+    assert agg["count"] == len(xs)
+    rec.close()
+
+
+def test_p2_quantiles_exact_below_five_samples():
+    rec = Recorder()
+    for v in (3.0, 1.0, 2.0):
+        rec.record("s", {"v": v})
+    agg = rec.rollup()["streams"]["s"]["fields"]["v"]
+    assert agg["p50"] == 2.0  # exact sorted-buffer interpolation
+    assert agg["p95"] == pytest.approx(np.percentile([1.0, 2.0, 3.0], 95))
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# SLOSampler counter-reset handling
+# ---------------------------------------------------------------------------
+
+
+def test_slo_sampler_clamps_negative_rate_on_counter_reset():
+    rec = Recorder()
+    src = _FakeSource()
+    sampler = SLOSampler(rec, src)
+    src.count = 100
+    sampler.sample()
+    src.count = 150
+    assert sampler.sample()["req_per_s"] > 0
+    # The source restarts (fleet failover): its completed counter resets.
+    src.count = 10
+    reset_rec = sampler.sample()
+    assert reset_rec["req_per_s"] == 0.0  # clamped, never negative
+    fields = rec.rollup()["streams"]["slo"]["fields"]
+    assert fields["counter_reset"]["count"] == 1  # exactly one marker record
+    assert fields["count_before"]["last"] == 150.0
+    assert fields["count_after"]["last"] == 10.0
+    # The very next interval reports a sane positive rate again.
+    src.count = 30
+    assert sampler.sample()["req_per_s"] > 0
+    rec.close()
+
+
+def test_slo_sampler_counter_reset_marker_lands_on_stream(tmp_path):
+    rec = Recorder(str(tmp_path), run_id="reset")
+    src = _FakeSource()
+    sampler = SLOSampler(rec, src)
+    src.count = 50
+    sampler.sample()
+    src.count = 5  # reset
+    out = sampler.sample()
+    assert out["req_per_s"] == 0.0
+    records = rec.read_stream("slo")
+    resets = [r for r in records if r.get("counter_reset")]
+    assert len(resets) == 1
+    assert resets[0]["count_before"] == 50 and resets[0]["count_after"] == 5
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# Sublinear-evidence telemetry (transition_cost stream)
+# ---------------------------------------------------------------------------
+
+
+def test_record_transition_cost_single_op():
+    from repro.obs import record_transition_cost
+
+    rec = Recorder()
+    summary = {"accept_rate_overall": 0.4, "mean_n_evaluated_overall": 12.5,
+               "mean_rounds_overall": 2.0}
+    out = record_transition_cost(rec, "bayeslr", summary, num_sections=100)
+    assert out["frac_data_touched"] == pytest.approx(0.125)
+    assert out["frac_data_touched"] < 1.0  # the sublinear evidence
+    assert out["mean_n_evaluated"] == 12.5
+    assert out["num_sections"] == 100
+    last = rec.rollup()["streams"]["transition_cost"]["last"]
+    assert last["workload"] == "bayeslr"
+    rec.close()
+
+
+def test_record_transition_cost_composite_per_op_breakdown():
+    from repro.obs import record_transition_cost
+
+    rec = Recorder()
+    summary = {
+        "theta": {"mean_n_evaluated_overall": 10.0, "mean_rounds_overall": 1.5},
+        "z": {"mean_n_evaluated_overall": 40.0},
+        "sweep": {"accept_rate_overall": 1.0},  # no subsampling info
+    }
+    out = record_transition_cost(
+        rec, "jointdpm", summary, num_sections={"theta": 100, "z": 80}
+    )
+    assert out["theta.frac_data_touched"] == pytest.approx(0.1)
+    assert out["z.frac_data_touched"] == pytest.approx(0.5)
+    assert out["frac_data_touched"] == pytest.approx(0.3)  # mean over ops
+    assert "sweep.frac_data_touched" not in out
+    rec.close()
+
+
+def test_record_transition_cost_skips_unsubsampled_summary():
+    from repro.obs import record_transition_cost
+
+    rec = Recorder()
+    assert record_transition_cost(rec, "w", {"accept_rate_overall": 1.0}) is None
+    assert record_transition_cost(rec, "w", {}) is None
+    assert "transition_cost" not in rec.rollup()["streams"]
+    rec.close()
+
+
+# ---------------------------------------------------------------------------
+# StatsServer paths: /spans, /stages, /sublinear
+# ---------------------------------------------------------------------------
+
+
+def test_stats_server_spans_stages_and_sublinear_paths():
+    from repro.obs import Tracer, record_transition_cost
+
+    rec = Recorder()
+    tracer = Tracer(recorder=rec)
+    root = tracer.new_trace("request:w.q", workload="w")
+    child = tracer.start(root["trace_id"], "queue_wait", "queue_wait",
+                         parent_id=root["span_id"])
+    tracer.finish(child)
+    tracer.finish(root)
+    record_transition_cost(rec, "w", {"mean_n_evaluated_overall": 5.0},
+                           num_sections=50)
+    server = StatsServer(rec, "127.0.0.1:0", tracer=tracer)
+    try:
+        base = server.url.rstrip("/")
+        with urllib.request.urlopen(base + "/spans", timeout=10) as resp:
+            spans = json.loads(resp.read())
+        assert spans["count"] == 2 and spans["dropped"] == 0
+        assert {s["stage"] for s in spans["spans"]} == {"request", "queue_wait"}
+        with urllib.request.urlopen(base + "/stages", timeout=10) as resp:
+            stages = json.loads(resp.read())
+        assert set(stages["stages"]) == {"request", "queue_wait"}
+        assert stages["trace_count"] == 1
+        assert stages["stages"]["request"]["mean_ms"] >= \
+            stages["stages"]["queue_wait"]["mean_ms"]
+        with urllib.request.urlopen(base + "/sublinear", timeout=10) as resp:
+            sub = json.loads(resp.read())
+        assert sub["available"] is True
+        assert sub["frac_data_touched"]["mean"] == pytest.approx(0.1)
+        assert sub["frac_data_touched"]["mean"] < 1.0
+        # unknown paths keep serving the full rollup (back-compat)
+        with urllib.request.urlopen(base + "/", timeout=10) as resp:
+            roll = json.loads(resp.read())
+        assert "streams" in roll
+    finally:
+        server.close()
+        rec.close()
+
+
+def test_stats_server_sublinear_unavailable_without_stream():
+    rec = Recorder()
+    server = StatsServer(rec, "127.0.0.1:0")
+    try:
+        with urllib.request.urlopen(server.url.rstrip("/") + "/sublinear",
+                                    timeout=10) as resp:
+            sub = json.loads(resp.read())
+        assert sub["available"] is False
+        with urllib.request.urlopen(server.url.rstrip("/") + "/stages",
+                                    timeout=10) as resp:
+            stages = json.loads(resp.read())
+        assert stages["span_count"] == 0  # no tracer attached: empty view
+    finally:
+        server.close()
+        rec.close()
+
+
+# ---------------------------------------------------------------------------
+# HistoryStore — the append-only run ring benchmarks/gate.py --trend reads
+# ---------------------------------------------------------------------------
+
+
+def test_history_store_appends_and_prunes_ring(tmp_path):
+    from repro.obs import HistoryStore
+
+    store = HistoryStore(str(tmp_path / "hist"), capacity=3)
+    for i in range(5):
+        art = tmp_path / f"run{i}"
+        _write_bench(art, qps=1000.0 + i)
+        (art / "GATE_verdict.json").write_text(json.dumps({"status": "pass"}))
+        store.append(str(art), run_id=f"r{i}")
+    assert len(store) == 3  # ring pruned to capacity
+    ids = [r["id"] for r in store.runs()]
+    assert all(any(f"r{i}" in rid for i in (2, 3, 4)) for rid in ids)
+    # stored artifacts round-trip through gate.load_records
+    newest = store.last(1)[0]
+    recs = gate.load_records(store.run_dir(newest["id"]), "serving")
+    assert recs and any(r["qps"] == 1004.0 for r in recs.values())
+    assert os.path.exists(
+        os.path.join(store.run_dir(newest["id"]), "GATE_verdict.json"))
+
+
+def test_history_store_refuses_empty_and_rebuilds_index(tmp_path):
+    from repro.obs import HistoryStore
+
+    store = HistoryStore(str(tmp_path / "hist"))
+    with pytest.raises(FileNotFoundError):
+        store.append(str(tmp_path / "empty"))
+    art = tmp_path / "run"
+    _write_bench(art)
+    store.append(str(art), run_id="only")
+    # corrupt index: the store rebuilds from the run directories on disk
+    (tmp_path / "hist" / "index.json").write_text("{not json")
+    rebuilt = HistoryStore(str(tmp_path / "hist"))
+    assert len(rebuilt) == 1
+    assert "only" in rebuilt.runs()[0]["id"]
+    rebuilt.append(str(art), run_id="second")  # next_seq survived the rebuild
+    assert len(rebuilt) == 2
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/gate.py --trend — history-backed median + drift gating
+# ---------------------------------------------------------------------------
+
+
+def _trend_run(tmp_path, hist, name, **bench_kw):
+    cur = tmp_path / name
+    _write_bench(cur, **bench_kw)
+    code = gate.main(["--trend", "--history", str(hist), "--current", str(cur),
+                      "--benches", "serving,multichain"])
+    verdict = json.loads((cur / "GATE_verdict.json").read_text())
+    return code, verdict
+
+
+def test_trend_gate_no_baseline_then_passes_against_history(tmp_path):
+    hist = tmp_path / "hist"
+    code, verdict = _trend_run(tmp_path, hist, "r0")
+    assert code == 0 and verdict["status"] == "no_baseline"
+    assert verdict["appended_run"] is not None  # first run seeds the store
+    for i, (qps, p95) in enumerate([(1010.0, 19.8), (995.0, 20.1),
+                                    (1005.0, 20.0)], start=1):
+        code, verdict = _trend_run(tmp_path, hist, f"r{i}", qps=qps, p95=p95)
+        assert code == 0 and verdict["status"] == "pass"
+    # >= 3-run history now: the pass was judged against a real median
+    assert verdict["history_runs"] >= 3
+    assert verdict["checked"] > 0
+
+
+def test_trend_gate_fails_on_median_regression_and_keeps_history_clean(tmp_path):
+    hist = tmp_path / "hist"
+    for i, qps in enumerate([1000.0, 1005.0, 995.0]):
+        code, _ = _trend_run(tmp_path, hist, f"r{i}", qps=qps)
+        assert code == 0
+    code, verdict = _trend_run(tmp_path, hist, "bad", qps=600.0)  # -40%
+    assert code == 1 and verdict["status"] == "fail"
+    assert any(r["metric"] == "qps" for r in verdict["regressions"])
+    assert verdict["appended_run"] is None  # failures never join the baseline
+    from repro.obs import HistoryStore
+
+    assert len(HistoryStore(str(hist))) == 3
+
+
+def test_trend_gate_catches_monotone_drift_below_single_run_threshold(tmp_path):
+    hist = tmp_path / "hist"
+    # each step ~ -5%: never trips the 15% single-run gate...
+    for i, qps in enumerate([1000.0, 950.0, 900.0, 860.0]):
+        code, _ = _trend_run(tmp_path, hist, f"r{i}", qps=qps)
+        assert code == 0
+    # ...but the cumulative monotone slide does.
+    code, verdict = _trend_run(tmp_path, hist, "slide", qps=820.0)
+    assert code == 1
+    drifts = [r for r in verdict["regressions"] if r.get("kind") == "drift"]
+    assert drifts and drifts[0]["metric"] == "qps"
+    assert drifts[0]["regression"] > 0.15
