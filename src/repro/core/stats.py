@@ -494,3 +494,52 @@ def jarque_bera(x: np.ndarray) -> tuple[float, float]:
     jb = n / 6.0 * (skew**2 + kurt**2 / 4.0)
     # chi2(2) survival = exp(-jb/2)
     return float(jb), float(np.exp(-jb / 2.0))
+
+
+# ---------------------------------------------------------------------------
+# Streaming anomaly / SLO-burn math (shared by repro.obs.alerts)
+# ---------------------------------------------------------------------------
+
+
+class EwmaState(NamedTuple):
+    """Exponentially weighted mean/variance for streaming z-scores.
+
+    ``count`` is the number of observations folded in; ``mean``/``var`` are
+    the EWMA first and second central moments (West's recurrence). A fresh
+    state is ``EwmaState(0, 0.0, 0.0)``.
+    """
+
+    count: int
+    mean: float
+    var: float
+
+
+def ewma_update(state: EwmaState, x: float, alpha: float = 0.3) -> EwmaState:
+    """Fold one observation into an :class:`EwmaState`.
+
+    The first observation initializes the mean exactly (no bias toward
+    zero); variance starts at 0 and inflates as spread is observed.
+    """
+    if state.count == 0:
+        return EwmaState(1, float(x), 0.0)
+    diff = float(x) - state.mean
+    incr = alpha * diff
+    mean = state.mean + incr
+    var = (1.0 - alpha) * (state.var + diff * incr)
+    return EwmaState(state.count + 1, mean, var)
+
+
+def ewma_zscore(state: EwmaState, x: float, min_sigma: float = 1e-9) -> float:
+    """The z-score of ``x`` against an EWMA state's mean/sigma (0.0 until
+    the state has seen at least two observations)."""
+    if state.count < 2:
+        return 0.0
+    sigma = max(state.var, 0.0) ** 0.5
+    return (float(x) - state.mean) / max(sigma, min_sigma)
+
+
+def burn_rate(bad_fraction: float, budget: float) -> float:
+    """SLO error-budget burn rate: observed bad fraction over the allowed
+    bad fraction. 1.0 burns the budget exactly at the sustainable pace;
+    >1 exhausts it early (e.g. 14.4 = a 30-day budget gone in ~2 days)."""
+    return float(bad_fraction) / max(float(budget), 1e-12)

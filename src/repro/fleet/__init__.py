@@ -11,7 +11,10 @@ The scale-out layer over :mod:`repro.serving` (see docs/ARCHITECTURE.md):
                                     checkpoints, 2-d mesh runs)
 
 Front-end: ``python -m repro.launch.serve --fleet --workload bayeslr``.
+Closing the loop, :mod:`.autoscale` turns the recorded admission/SLO
+signals back into replica adds/retires (``--autoscale``).
 """
+from .autoscale import AutoScaleConfig, AutoScaler
 from .delta import SnapshotDelta, apply_delta, make_delta, payload_nbytes, wire_bytes
 from .replica import ReplicaDeadError, ReplicaEnsemble, ReplicaProcess
 from .router import AdmissionConfig, FleetRouter
@@ -19,6 +22,8 @@ from .topology import Fleet, FleetConfig, FleetShard
 
 __all__ = [
     "AdmissionConfig",
+    "AutoScaleConfig",
+    "AutoScaler",
     "Fleet",
     "FleetConfig",
     "FleetRouter",

@@ -339,7 +339,10 @@ class ReplicaProcess:
         self.name = name
         self.version = 0
         self.bytes_sent = 0
-        self._lock = threading.Lock()
+        # Re-entrant: restart() holds it across close() + _spawn() (close
+        # acquires it again for the stop handshake) so no concurrent _rpc
+        # can interleave with the fresh pipe's "ready" handshake.
+        self._lock = threading.RLock()
         self._workload_name = workload_name
         self._build_kw = dict(build_kw or {})
         self._micro_batch = micro_batch
@@ -458,10 +461,20 @@ class ReplicaProcess:
     def restart(self) -> None:
         """Respawn the worker in place (fresh interpreter, empty window at
         version 0 — the next sync full-resyncs it). The surrounding lane /
-        fleet objects keep their references valid across the bounce."""
-        self.close(timeout_s=1.0)
-        self.version = 0
-        self._spawn()
+        fleet objects keep their references valid across the bounce.
+
+        Holds the RPC lock for the whole bounce: otherwise a concurrent
+        ``_rpc`` (e.g. the fleet's background delta-sync thread) can grab
+        the *new* pipe between ``_spawn`` assigning ``self._conn`` and the
+        handshake read, consume the worker's ``("ready", ...)`` message,
+        and leave its own reply for the handshake to misread. A caller
+        blocked in ``_rpc`` on the old pipe fails fast (EOF on the killed
+        process -> ReplicaDeadError) and releases the lock, so this cannot
+        deadlock."""
+        with self._lock:
+            self.close(timeout_s=1.0)
+            self.version = 0
+            self._spawn()
 
     def close(self, timeout_s: float = 10.0) -> None:
         proc, conn = self._proc, self._conn

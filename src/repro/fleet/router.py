@@ -62,7 +62,7 @@ class _Lane:
     """One replica's pending queue."""
 
     __slots__ = ("shard", "replica", "pending", "served", "dead",
-                 "win_version", "win_snap")
+                 "retired", "inflight", "win_version", "win_snap")
 
     def __init__(self, shard: FleetShard, replica):
         self.shard = shard
@@ -74,6 +74,12 @@ class _Lane:
         # surviving lanes. revive() re-admits it once the replica answers
         # pings again (after ReplicaProcess.restart()).
         self.dead = False
+        # Set by detach_lane (autoscaler scale-down): a clean retirement —
+        # the lane takes no new batches, its worker thread exits, and
+        # detach waits for `inflight` (batches mid-serve) to drain before
+        # the replica may be closed.
+        self.retired = False
+        self.inflight = 0
         # Combine-at-query window cache (subposterior workloads only):
         # the last window this router pulled from the replica and its
         # version, so an unchanged window never re-crosses the transport.
@@ -151,6 +157,7 @@ class FleetRouter:
         self._rerouted = 0
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._max_wait_s = 0.002
 
     # -- admission ---------------------------------------------------------
 
@@ -291,7 +298,7 @@ class FleetRouter:
         interchangeable, and stealing keeps the tail from being set by the
         slowest replica's private queue."""
         with self._lock:
-            if lane.dead:
+            if lane.dead or lane.retired:
                 return []
             source = lane
             if not source.pending:
@@ -388,6 +395,15 @@ class FleetRouter:
     # -- serving (continued) ------------------------------------------------
 
     def _serve_batch(self, lane: _Lane, batch: list[Request]) -> None:
+        with self._lock:
+            lane.inflight += 1
+        try:
+            self._serve_batch_inner(lane, batch)
+        finally:
+            with self._lock:
+                lane.inflight -= 1
+
+    def _serve_batch_inner(self, lane: _Lane, batch: list[Request]) -> None:
         workload, qclass = batch[0].workload, batch[0].query_class
         # Batch-level spans hang off the batch head's trace (same convention
         # as RequestQueue._serve_batch); the replica leg is traced by the
@@ -517,6 +533,81 @@ class FleetRouter:
                 self._rerouted += 1
             self._arrived.notify_all()
 
+    # -- runtime lane scaling ----------------------------------------------
+
+    def attach_lane(self, shard: FleetShard, replica) -> None:
+        """Add a serving lane for a runtime-spawned replica (the scale-up
+        actuation; pair of :meth:`repro.fleet.Fleet.add_replica`).
+
+        The lane joins the workload's least-loaded selection immediately;
+        when background workers are running it gets its own serving thread,
+        so attach works mid-load without a router restart."""
+        lane = _Lane(shard, replica)
+        with self._arrived:
+            self._lanes[shard.workload].append(lane)
+            groups = self._partition_lanes.get(shard.workload)
+            if groups is not None:
+                groups[shard.partition].append(lane)
+            spawn = bool(self._threads)
+            self._arrived.notify_all()
+        if spawn:
+            self._spawn_worker(lane)
+
+    def detach_lane(self, workload: str, replica_name: str,
+                    timeout_s: float = 30.0) -> bool:
+        """Cleanly retire one lane without dropping requests (the
+        scale-down actuation; call **before**
+        :meth:`repro.fleet.Fleet.remove_replica` closes the replica).
+
+        The lane is removed from the routing set, its backlog is rerouted
+        to the surviving lanes (or failed, only if none remain — the
+        min-replica bound upstream prevents that), its worker thread exits,
+        and this method blocks until any batch the lane is serving right
+        now has completed, so the caller may close the replica the moment
+        it returns. Returns False when no live lane matches."""
+        with self._arrived:
+            lanes = self._lanes[workload]
+            lane = next(
+                (l for l in lanes if l.replica.name == replica_name), None
+            )
+            if lane is None:
+                return False
+            lane.retired = True
+            stranded = lane.pending
+            lane.pending = []
+            lanes.remove(lane)
+            groups = self._partition_lanes.get(workload)
+            if groups is not None and lane in groups[lane.shard.partition]:
+                groups[lane.shard.partition].remove(lane)
+            live = [l for l in lanes if not l.dead]
+            if stranded and live:
+                for req in stranded:
+                    target = min(live, key=lambda l: (len(l.pending), l.served))
+                    target.pending.append(req)
+                    self._rerouted += 1
+            elif stranded:
+                now = time.monotonic()
+                for req in stranded:
+                    req.error = (
+                        f"ReplicaDeadError: no live replica lanes for "
+                        f"workload {workload!r}"
+                    )
+                    req.latency_s = now - req.submitted_at
+                    req.deadline_met = False
+                    req.batch_size = 0
+                    self._miss_trail.append(True)
+                    self._finish_req_trace(req)
+                    req.done.set()
+                self._completed.extend(stranded)
+            self._arrived.notify_all()
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            with self._lock:
+                if not lane.inflight:
+                    return True
+            time.sleep(0.005)
+        return True  # timed out waiting; caller's close() will surface it
+
     def revive(self) -> int:
         """Re-admit dead lanes whose replica answers pings again (after a
         :meth:`ReplicaProcess.restart` + resync); returns how many."""
@@ -556,37 +647,41 @@ class FleetRouter:
 
     # -- background workers ------------------------------------------------
 
+    def _lane_loop(self, lane: _Lane) -> None:
+        while not self._stop.is_set() and not lane.retired:
+            with self._arrived:
+                if not lane.pending:
+                    self._arrived.wait(timeout=0.02)
+            if self._max_wait_s:
+                time.sleep(self._max_wait_s)  # let a batch accumulate first
+            # One take AFTER the linger: _take_batch already caps at
+            # max_batch and keeps the batch single-class (a second take
+            # could return a different class, and truncating a merged
+            # batch would orphan popped requests).
+            batch = self._take_batch(lane)
+            if batch:
+                self._serve_batch(lane, batch)
+
+    def _spawn_worker(self, lane: _Lane) -> None:
+        t = threading.Thread(
+            target=self._lane_loop, args=(lane,),
+            name=f"route-{lane.replica.name}", daemon=True,
+        )
+        t.start()
+        self._threads.append(t)
+
     def start_workers(self, max_wait_s: float = 0.002) -> None:
         """One serving thread per replica lane — with process-transport
         replicas each lane's RPC blocks GIL-free, so lanes genuinely serve
-        in parallel."""
+        in parallel. Lanes attached later (:meth:`attach_lane`) get their
+        own worker on attach."""
         if self._threads:
             return
         self._stop.clear()
-
-        def loop(lane: _Lane):
-            while not self._stop.is_set():
-                with self._arrived:
-                    if not lane.pending:
-                        self._arrived.wait(timeout=0.02)
-                if max_wait_s:
-                    time.sleep(max_wait_s)  # let a batch accumulate first
-                # One take AFTER the linger: _take_batch already caps at
-                # max_batch and keeps the batch single-class (a second take
-                # could return a different class, and truncating a merged
-                # batch would orphan popped requests).
-                batch = self._take_batch(lane)
-                if batch:
-                    self._serve_batch(lane, batch)
-
+        self._max_wait_s = max_wait_s
         for lanes in self._lanes.values():
             for lane in lanes:
-                t = threading.Thread(
-                    target=loop, args=(lane,),
-                    name=f"route-{lane.replica.name}", daemon=True,
-                )
-                t.start()
-                self._threads.append(t)
+                self._spawn_worker(lane)
 
     def stop_workers(self, timeout_s: float = 30.0) -> None:
         self._stop.set()

@@ -110,6 +110,12 @@ class Fleet:
         self._shards: dict[str, list[FleetShard]] = {}
         self._partitions: dict[str, int] = {}  # workload -> P
         self._data_sizes: dict[str, int] = {}  # workload -> total sections
+        # Replica construction inputs, kept for runtime scale-out: the
+        # workload builder kwargs add_replica re-plays, and a per-shard
+        # monotonic name counter so a retired replica's name is never
+        # reused (lane/trace history stays unambiguous).
+        self._build_kw: dict[str, dict] = {}
+        self._replica_seq: dict[str, int] = {}
         self._sync_lock = threading.Lock()
         self.sync_stats = {
             "syncs": 0,
@@ -149,6 +155,7 @@ class Fleet:
         build_kw.setdefault("seed", scfg.seed)
         base = build_serving_workload(name, **build_kw)
         self._workloads[name] = base
+        self._build_kw[name] = dict(build_kw)
         if cfg.subposterior > 1:
             return self._add_partitioned(name, base, build_kw)
         shards: list[FleetShard] = []
@@ -167,6 +174,7 @@ class Fleet:
                 self._make_replica(f"{shard_name}#r{j}", name, build_kw)
                 for j in range(cfg.replicas)
             )
+            self._replica_seq[shard_name] = cfg.replicas
             shards.append(FleetShard(shard_name, name, writer, replicas))
         self._shards[name] = shards
         self._partitions[name] = 1
@@ -214,6 +222,7 @@ class Fleet:
                     self._make_replica(f"{shard_name}#r{j}", name, build_kw)
                     for j in range(cfg.replicas)
                 )
+                self._replica_seq[shard_name] = cfg.replicas
                 shards.append(
                     FleetShard(shard_name, name, writer, replicas, p)
                 )
@@ -251,6 +260,76 @@ class Fleet:
         """Data partitions P the workload was registered with (1 when the
         fleet is unpartitioned)."""
         return self._partitions.get(workload, 1)
+
+    def replica_count(self, workload: str) -> int:
+        """Live replica total across the workload's shards."""
+        return sum(len(s.replicas) for s in self._shards[workload])
+
+    # -- runtime scaling ---------------------------------------------------
+
+    def add_replica(self, workload: str, shard_index: int = 0):
+        """Spawn one more read replica on a running shard (what the
+        autoscaler actuates through).
+
+        The replica is built exactly like its launch-time siblings (same
+        transport, same builder kwargs, the shard's next never-reused
+        ``#rN`` name), the shard entry is swapped for one whose ``replicas``
+        tuple includes it, and one :meth:`sync_shard` round seeds it — a
+        version-0 replica receives the full window, so it serves bit-exact
+        with the writer before this method returns. The background sync
+        loop re-reads its shard every round, so subsequent deltas reach the
+        newcomer without a restart. Returns ``(shard, replica)`` with the
+        updated shard — hand both to
+        :meth:`repro.fleet.FleetRouter.attach_lane` to start routing to it.
+        """
+        shards = self._shards[workload]
+        shard = shards[shard_index]
+        seq = self._replica_seq.get(shard.name, len(shard.replicas))
+        self._replica_seq[shard.name] = seq + 1
+        replica = self._make_replica(
+            f"{shard.name}#r{seq}", workload, self._build_kw.get(workload, {})
+        )
+        new_shard = shard._replace(replicas=shard.replicas + (replica,))
+        shards[shard_index] = new_shard
+        self.sync_shard(new_shard)  # join resync: version 0 -> full window
+        return new_shard, replica
+
+    def remove_replica(self, workload: str, replica_name: str | None = None):
+        """Retire one replica (the scale-down actuation): drop it from its
+        shard's broadcast set, then close its transport.
+
+        Detach its router lane **first** (:meth:`FleetRouter.detach_lane`
+        reroutes the backlog and waits out the in-flight batch) — this
+        method closes the replica immediately after unlinking it. With no
+        ``replica_name`` the newest replica of the first shard is retired.
+        Each shard keeps at least one replica. Returns the retired
+        replica's name."""
+        shards = self._shards[workload]
+        if replica_name is None:
+            shard_index, shard = 0, shards[0]
+            replica = shard.replicas[-1]
+        else:
+            for shard_index, shard in enumerate(shards):
+                replica = next(
+                    (r for r in shard.replicas if r.name == replica_name),
+                    None,
+                )
+                if replica is not None:
+                    break
+            else:
+                raise KeyError(
+                    f"no replica {replica_name!r} in workload {workload!r}"
+                )
+        if len(shard.replicas) <= 1:
+            raise ValueError(
+                f"cannot remove the last replica of shard {shard.name!r}"
+            )
+        remaining = tuple(r for r in shard.replicas if r is not replica)
+        with self._sync_lock:  # never yank a replica mid-broadcast
+            shards[shard_index] = shard._replace(replicas=remaining)
+        self._shard_errors.pop(f"{shard.name}/{replica.name}", None)
+        replica.close()
+        return replica.name
 
     # -- streaming append --------------------------------------------------
 
@@ -375,10 +454,16 @@ class Fleet:
         if self._threads:
             return
         self._stop.clear()
-        for shards in self._shards.values():
-            for shard in shards:
-                def loop(shard=shard):
+        for name, shards in self._shards.items():
+            for idx, shard in enumerate(shards):
+                def loop(name=name, idx=idx):
                     while not self._stop.is_set():
+                        # Re-read the shard entry every round: add_replica /
+                        # remove_replica swap it for one with an updated
+                        # replicas tuple, and a loop pinned to the launch-
+                        # time NamedTuple would never broadcast to a
+                        # runtime-attached replica.
+                        shard = self._shards[name][idx]
                         try:
                             shard.writer.refresh()
                             self.sync_shard(shard)

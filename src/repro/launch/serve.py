@@ -128,6 +128,16 @@ def build_parser() -> argparse.ArgumentParser:
                     choices=("consensus", "product"),
                     help="subposterior draw-combination rule: consensus "
                          "weighted averaging or Gaussian density-product")
+    fl.add_argument("--autoscale", action="store_true",
+                    help="closed-loop replica autoscaling: a control loop "
+                         "over the recorded admission/SLO signals adds "
+                         "replicas under overload and retires them after "
+                         "quiesce (fleet/soak modes; implies --fleet)")
+    fl.add_argument("--autoscale-max", type=int, default=None,
+                    help="autoscaler replica ceiling per workload "
+                         "(default: launch replicas + 2)")
+    fl.add_argument("--autoscale-cooldown", type=float, default=2.0,
+                    help="seconds between autoscaler actuations")
     fl.add_argument("--stream", action="store_true",
                     help="streaming append-only target demo: mid-serve, "
                          "append a fresh observation chunk into the running "
@@ -142,6 +152,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="write per-run JSONL metric streams + summary.json "
                          "under this directory (default: $REPRO_OBS_DIR, "
                          "else in-memory only)")
+    ob.add_argument("--alerts", action="store_true",
+                    help="evaluate the standard alert ruleset (threshold / "
+                         "SLO burn-rate / anomaly rules with a pending-"
+                         "firing-resolved state machine) over the live "
+                         "rollup; transitions land on the 'alerts' stream, "
+                         "/alerts + /health appear on --stats-addr, and an "
+                         "ALERTS_OK self-check prints on exit")
     ob.add_argument("--soak", action="store_true",
                     help="chaos soak: sustained mixed-class load on the "
                          "fleet while one replica is killed and restarted "
@@ -177,7 +194,8 @@ def _setup_obs(args, source=None):
     serve run, or (None, None, None, None) when no observability flag is
     set."""
     if not (args.stats_addr is not None or args.obs_dir or args.soak
-            or args.trace_dir or args.profile_dir):
+            or args.trace_dir or args.profile_dir or args.alerts
+            or args.autoscale):
         return None, None, None, None
     from repro.obs import Recorder, SLOSampler, StatsServer, Tracer
 
@@ -198,6 +216,88 @@ def _setup_obs(args, source=None):
         print(f"stats: live rollup at {server.url}")
     sampler = SLOSampler(recorder, source) if source is not None else None
     return recorder, server, sampler, tracer
+
+
+def _setup_alerts(args, recorder, stats_server, workload, fleet=None):
+    """AlertEngine over the run's recorder, wired into the stats endpoint
+    (``/alerts`` and a component-health ``/health``), or None with
+    ``--alerts`` off — the request path then never sees any of this."""
+    if not args.alerts or recorder is None:
+        return None
+    from repro.obs import default_rules, health_report
+    from repro.obs.alerts import AlertEngine
+
+    rules = default_rules(
+        args.workload, workload.default_class,
+        deadline_ms=args.deadline_ms, max_depth=args.max_depth,
+    )
+    engine = AlertEngine(recorder, rules)
+    if stats_server is not None:
+        stats_server.alerts = engine
+        stats_server.health = lambda: health_report(
+            recorder.rollup(),
+            fleet_report=fleet.report() if fleet is not None else None,
+            alert_status=engine.status(),
+            max_depth=args.max_depth if fleet is not None else None,
+        )
+        print(f"alerts: {len(rules)} rules over the live rollup; "
+              f"/alerts and /health at {stats_server.url}")
+    else:
+        print(f"alerts: {len(rules)} rules over the live rollup")
+    return engine
+
+
+def _setup_autoscaler(args, fleet, router, recorder, engine):
+    """The closed-loop actuator (``--autoscale``): scale between the launch
+    replica count and ``--autoscale-max`` on the admission/SLO signals (and
+    the overload alerts, when ``--alerts`` is also on)."""
+    if not args.autoscale:
+        return None
+    from repro.fleet import AutoScaleConfig, AutoScaler
+
+    launch = fleet.replica_count(args.workload)
+    ceiling = args.autoscale_max
+    if ceiling is None:
+        ceiling = launch + 2
+    config = AutoScaleConfig(
+        min_replicas=launch,
+        max_replicas=max(ceiling, launch),
+        scale_up_depth=args.max_depth,
+        scale_down_depth=max(args.max_depth // 16, 2),
+        quiesce_ticks=2,
+        cooldown_s=args.autoscale_cooldown,
+    )
+    scaler = AutoScaler(fleet, router, args.workload, config,
+                        recorder=recorder, engine=engine)
+    print(f"autoscale: replicas {launch}..{config.max_replicas}, "
+          f"scale_up_depth={config.scale_up_depth} "
+          f"scale_down_depth={config.scale_down_depth} "
+          f"cooldown={config.cooldown_s}s")
+    return scaler
+
+
+def _alerts_selfcheck(engine, server) -> bool:
+    """The ALERTS_OK line CI greps: the engine evaluated at least once and,
+    when an endpoint is up, ``/alerts`` serves its live status."""
+    ok = engine.evaluations >= 1
+    if server is not None:
+        import urllib.request
+
+        import json as _json
+
+        try:
+            with urllib.request.urlopen(server.url.rstrip("/") + "/alerts",
+                                        timeout=10) as resp:
+                ok = ok and bool(_json.loads(resp.read()).get("available"))
+        except Exception:  # noqa: BLE001 — an unreachable endpoint is a fail
+            ok = False
+    firing = ",".join(engine.firing()) or "-"
+    line = "ALERTS_OK" if ok else "ALERTS_FAIL"
+    print(f"{line} rules={len(engine.rules)} "
+          f"evaluations={engine.evaluations} "
+          f"transitions={engine.transitions} fired={engine.fired_total} "
+          f"resolved={engine.resolved_total} firing={firing}")
+    return ok
 
 
 def _obs_num_sections(ensemble):
@@ -388,6 +488,7 @@ def serve_posterior(args) -> int:
                          default_deadline_s=args.deadline_ms / 1e3)
     recorder, stats_server, sampler, tracer = _setup_obs(args, source=queue)
     queue.tracer = tracer
+    engine = _setup_alerts(args, recorder, stats_server, workload)
     num_sections = _obs_num_sections(resident.ensemble)
     classes = sorted(workload.query_specs)
     qkey = jax.random.key(args.seed + 1)
@@ -411,6 +512,8 @@ def serve_posterior(args) -> int:
             record_snapshot(recorder, args.workload, snap_now)
             _record_transition_cost(recorder, args.workload, snap_now,
                                     num_sections)
+            if engine is not None:
+                engine.evaluate()
     wall = time.perf_counter() - t0
     report = queue.slo_report()
 
@@ -458,7 +561,7 @@ def serve_posterior(args) -> int:
     if args.background:
         pool.stop()
 
-    stats_ok = True
+    stats_ok = alerts_ok = True
     if recorder is not None:
         from repro.obs import record_adaptation
 
@@ -466,6 +569,9 @@ def serve_posterior(args) -> int:
         record_adaptation(recorder, args.workload, snap.summary)
         _record_transition_cost(recorder, args.workload, snap, num_sections)
         _record_profile(recorder, args, pool.resident(args.workload))
+        if engine is not None:
+            engine.evaluate()
+            alerts_ok = _alerts_selfcheck(engine, stats_server)
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
         _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
@@ -473,13 +579,16 @@ def serve_posterior(args) -> int:
     first = next(
         (e for e in report["classes"].values() if e.get("count")), None
     )
-    if first is None or report["errors"] or not stats_ok:
+    if first is None or report["errors"] or not stats_ok or not alerts_ok:
         print(f"SERVE_FAIL workload={args.workload} errors={report['errors']}")
         return 1
+    # New fields go AFTER parity= so existing CI greps keep matching.
     print(f"SERVE_OK workload={args.workload} queries={served} "
           f"p50_ms={first['p50_ms']:.2f} p95_ms={first['p95_ms']:.2f} "
           f"deadline_hit={first['deadline_hit_rate']:.3f} "
-          f"staleness_s={snap_report['staleness_s']:.3f} parity={parity}")
+          f"staleness_s={snap_report['staleness_s']:.3f} parity={parity}"
+          + (f" alerts_fired={engine.fired_total}"
+             if engine is not None else ""))
     if smoke:
         assert served >= 100, f"smoke must serve >=100 queries, served {served}"
     return 0
@@ -635,6 +744,8 @@ def serve_fleet(args) -> int:
     router = _build_router(args, fleet, workload)
     recorder, stats_server, sampler, tracer = _setup_obs(args, source=router)
     router.tracer = tracer
+    engine = _setup_alerts(args, recorder, stats_server, workload, fleet)
+    scaler = _setup_autoscaler(args, fleet, router, recorder, engine)
     num_sections = _obs_num_sections(shard0.writer.ensemble)
     _compile_lanes(args, fleet, workload, router)
     if args.background:
@@ -673,6 +784,10 @@ def serve_fleet(args) -> int:
             record_fleet_sync(recorder, fleet)
             _record_transition_cost(recorder, args.workload,
                                     shard0.writer.snapshot(), num_sections)
+            if engine is not None:
+                engine.evaluate()
+            if scaler is not None:
+                scaler.tick()
     if args.background:
         for req in pending:
             req.done.wait(timeout=60.0)
@@ -684,7 +799,7 @@ def serve_fleet(args) -> int:
             if r.done.is_set() and not (r.error or "").startswith("shed")
         ])
     wall = time.perf_counter() - t0
-    stats_ok = True
+    stats_ok = alerts_ok = True
     if sampler is not None:
         from repro.obs import record_adaptation, record_fleet_sync, record_snapshot
 
@@ -695,6 +810,9 @@ def serve_fleet(args) -> int:
         record_adaptation(recorder, args.workload, snap.summary)
         _record_transition_cost(recorder, args.workload, snap, num_sections)
         _record_profile(recorder, args, shard0.writer)
+        if engine is not None:
+            engine.evaluate()
+            alerts_ok = _alerts_selfcheck(engine, stats_server)
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
     report = router.slo_report()
@@ -753,7 +871,8 @@ def serve_fleet(args) -> int:
     fleet.close()
 
     first = next((e for e in report["classes"].values() if e.get("count")), None)
-    if first is None or report["errors"] or (smoke and served < 100) or not stats_ok:
+    if (first is None or report["errors"] or (smoke and served < 100)
+            or not stats_ok or not alerts_ok):
         # The smoke floor gates BEFORE SERVE_OK: CI greps the log, so a
         # failed smoke must never have printed the success line.
         print(f"SERVE_FAIL workload={args.workload} fleet=1 "
@@ -767,7 +886,12 @@ def serve_fleet(args) -> int:
           f"deadline_hit={first['deadline_hit_rate']:.3f} "
           f"shed={report['shed']} delta_ratio={ratio:.2f} parity={parity} "
           f"subposterior={args.subposterior} combine={args.combine}"
-          + (f" stream_rows={stream_rows}" if args.stream else ""))
+          + (f" stream_rows={stream_rows}" if args.stream else "")
+          + (f" alerts_fired={engine.fired_total}"
+             if engine is not None else "")
+          + (f" scale_up={scaler.events['scale_up']} "
+             f"scale_down={scaler.events['scale_down']}"
+             if scaler is not None else ""))
     return 0
 
 
@@ -797,6 +921,8 @@ def serve_soak(args) -> int:
     router = _build_router(args, fleet, workload)
     recorder, stats_server, sampler, tracer = _setup_obs(args, source=router)
     router.tracer = tracer
+    engine = _setup_alerts(args, recorder, stats_server, workload, fleet)
+    scaler = _setup_autoscaler(args, fleet, router, recorder, engine)
     num_sections = _obs_num_sections(shard0.writer.ensemble)
     _compile_lanes(args, fleet, workload)
     top = workload.default_class
@@ -858,12 +984,72 @@ def serve_soak(args) -> int:
             record_snapshot(recorder, args.workload, snap_now)
             _record_transition_cost(recorder, args.workload, snap_now,
                                     num_sections)
+            if engine is not None:
+                engine.evaluate()
+            # The scaler deliberately does NOT tick during the kill/restart
+            # window: the choreography below is the deterministic
+            # scale-up-under-pressure / scale-down-after-quiesce proof, and
+            # a mid-chaos actuation would spend the replica headroom first.
             last_sample = now
+
+    # -- closed-loop overload burst (--autoscale) --------------------------
+    # Drive submissions past the admission shed point and hold them there
+    # until the loop closes: the sampler records the active shed floor, the
+    # admission_overload rule fires, and the scaler actuates a scale-up.
+    burst_submitted = burst_shed = 0
+    if scaler is not None:
+        low = next((c for c in classes if c != top), top)
+        up_before = scaler.events["scale_up"]
+        fired_before = engine.fired_total if engine is not None else 0
+        burst_done = lambda: (
+            scaler.events["scale_up"] > up_before
+            and (engine is None or engine.fired_total > fired_before)
+        )
+        burst_deadline = time.perf_counter() + 60.0
+        while not burst_done() and time.perf_counter() < burst_deadline:
+            while router.pending_count < args.max_depth + 8:
+                qkey, sub = jax.random.split(qkey)
+                xs = workload.query_specs[top].make_queries(
+                    sub, args.rows_per_query)
+                pending.append(router.submit(args.workload, top, xs))
+                burst_submitted += 1
+            # With the floor up, a low-class submission is refused — the
+            # shed that proves the overload point was actually crossed.
+            qkey, sub = jax.random.split(qkey)
+            shed_probe = router.submit(
+                args.workload, low,
+                workload.query_specs[low].make_queries(sub, args.rows_per_query))
+            burst_shed += int((shed_probe.error or "").startswith("shed"))
+            if sampler is not None:
+                sampler.sample()
+            if engine is not None:
+                engine.evaluate()
+            scaler.tick()
+            time.sleep(0.05)
+        print(f"chaos: overload burst submitted {burst_submitted} top-class "
+              f"requests (depth {router.pending_count}), "
+              f"{burst_shed} low-class shed, "
+              f"scale_up={scaler.events['scale_up']}")
 
     for req in pending:
         req.done.wait(timeout=120.0)
+
+    # -- quiesce: the backlog is drained; tick the scaler until it has
+    # retired every replica it added (calm depth -> scale-down events).
+    if scaler is not None:
+        scaler.observe()  # absorb the burst's shed counters: not fresh pressure
+        quiesce_deadline = time.perf_counter() + 60.0
+        while scaler.outstanding and time.perf_counter() < quiesce_deadline:
+            if sampler is not None:
+                sampler.sample()
+            if engine is not None:
+                engine.evaluate()
+            scaler.tick()
+            time.sleep(max(args.autoscale_cooldown / 4, 0.05))
+        print(f"chaos: quiesce done, scale_down={scaler.events['scale_down']} "
+              f"replicas={fleet.replica_count(args.workload)}")
     wall = time.perf_counter() - t0
-    stats_ok = True
+    stats_ok = alerts_ok = True
     if sampler is not None:
         sampler.sample()
         record_fleet_sync(recorder, fleet)
@@ -872,21 +1058,34 @@ def serve_soak(args) -> int:
         _record_transition_cost(recorder, args.workload, snap_final,
                                 num_sections)
         _record_profile(recorder, args, shard0.writer)
+        if engine is not None:
+            engine.evaluate()
+            alerts_ok = _alerts_selfcheck(engine, stats_server)
         if stats_server is not None:
             stats_ok = _stats_selfcheck(stats_server)
     report = router.slo_report()
     router.stop_workers()
     fleet.stop()
 
-    # -- post-chaos parity: the revived replica vs the warm writer ---------
+    # -- post-chaos parity: EVERY current replica (the revived victim and
+    # any autoscaler survivors) vs the warm writer, bit-exact ---------------
     fleet.sync_all()
     resyncs = fleet.sync_stats["full_deltas"] - full_before
     spec = workload.query_specs[top]
     qkey, sub = jax.random.split(qkey)
     xs = spec.make_queries(sub, 16)
+    # Re-read shard0: runtime add/remove_replica swapped the shard entry,
+    # so the launch-time NamedTuple's replica tuple is stale.
+    shard0 = fleet.shards(args.workload)[0]
     w_vals, w_snap = shard0.writer.query(spec, xs)
-    r_vals, _ = victim.serve(spec, top, xs)
-    parity_ok = np.array_equal(np.asarray(w_vals), np.asarray(r_vals))
+    parity_bad = []
+    for replica in shard0.replicas:
+        r_vals, _ = replica.serve(spec, top, xs)
+        if not np.array_equal(np.asarray(w_vals), np.asarray(r_vals)):
+            err = float(np.max(np.abs(np.asarray(w_vals) - np.asarray(r_vals))))
+            parity_bad.append(f"{replica.name} max|delta|={err:.3g} "
+                              f"v{replica.version}")
+    parity_ok = not parity_bad
 
     served = len([
         r for r in pending
@@ -920,25 +1119,40 @@ def serve_soak(args) -> int:
     if resyncs < 1:
         failures.append("restarted replica never full-resynced")
     if not parity_ok:
-        err = float(np.max(np.abs(np.asarray(w_vals) - np.asarray(r_vals))))
         failures.append(
-            f"parity: revived replica vs writer max|delta|={err:.3g} "
-            f"(writer v{w_snap.steps_done}, replica v{victim.version})")
+            f"parity vs writer v{w_snap.steps_done}: " + "; ".join(parity_bad))
     if not stats_ok:
         failures.append("stats endpoint self-check failed")
+    if not alerts_ok:
+        failures.append("alert engine self-check failed")
+    if scaler is not None:
+        if scaler.events["scale_up"] < 1:
+            failures.append("autoscaler never scaled up under overload")
+        if scaler.events["scale_down"] < 1:
+            failures.append("autoscaler never scaled down after quiesce")
+        if burst_shed < 1:
+            failures.append("overload burst never crossed the shed point")
+        if engine is not None and engine.fired_total < 1:
+            failures.append("no alert fired during the overload burst")
 
     _teardown_obs(recorder, stats_server, tracer, args.trace_dir)
     fleet.close()
     if failures:
         print(f"SOAK_FAIL workload={args.workload} " + "; ".join(failures))
         return 1
+    # New fields go AFTER parity= so existing CI greps keep matching.
     print(f"SOAK_OK workload={args.workload} soak_s={wall:.1f} "
           f"served={served} kills=1 recovered=1 resyncs={resyncs} "
           f"reroutes={recovery['rerouted']} "
           f"lane_deaths={recovery['lane_deaths']} shed={report['shed']} "
           f"top_class_errors=0 "
           f"p95_ms={top_entry.get('p95_ms') or float('nan'):.2f} "
-          f"parity=ok(bitexact)")
+          f"parity=ok(bitexact)"
+          + (f" alerts_fired={engine.fired_total}"
+             if engine is not None else "")
+          + (f" scale_up={scaler.events['scale_up']} "
+             f"scale_down={scaler.events['scale_down']}"
+             if scaler is not None else ""))
     return 0
 
 
@@ -1010,6 +1224,13 @@ def main(argv=None) -> None:
             parser.error("--subposterior/--stream serve posterior "
                          "workloads through the fleet, not the lm demo")
         args.fleet = True  # both modes live in the fleet serve path
+    if args.autoscale:
+        if args.workload == "lm":
+            parser.error("--autoscale scales the replica fleet, not the "
+                         "lm demo")
+        args.fleet = True  # the actuator needs replica lanes to scale
+    if args.alerts and args.workload == "lm":
+        parser.error("--alerts applies to posterior serving, not the lm demo")
     if args.fleet and args.devices:
         # Must land before JAX initializes its backends (importing jax is
         # fine; creating the first array is not) — hence a fresh

@@ -32,13 +32,37 @@ from .sources import (
 )
 from .trace import Tracer, chrome_trace_events, span_close, span_open
 
+# The alerting/health layer loads lazily: every serve path imports this
+# package (via .trace / .recorder), and a flags-off run must not pay for —
+# or even load — the alert engine.
+_LAZY = {
+    "AlertEngine": "alerts",
+    "AlertRule": "alerts",
+    "default_rules": "alerts",
+    "health_report": "health",
+}
+
+
+def __getattr__(name):
+    module = _LAZY.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{module}", __name__), name)
+
+
 __all__ = [
+    "AlertEngine",
+    "AlertRule",
     "HistoryStore",
     "Recorder",
     "SLOSampler",
     "StatsServer",
     "Tracer",
     "chrome_trace_events",
+    "default_rules",
+    "health_report",
     "json_default",
     "make_on_block",
     "record_adaptation",

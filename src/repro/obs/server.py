@@ -12,6 +12,13 @@ path                  payload
 ``/``                 the owning :meth:`repro.obs.Recorder.rollup` —
                       req/s, latency tails (incl. streaming p50/p95),
                       shed counts, snapshot staleness
+``/healthz``          cheap liveness probe: ``{"ok": true, "run_id": ...}``
+                      (no rollup computed — safe for tight probe loops)
+``/health``           the component health model
+                      (:func:`repro.obs.health.health_report`): per-
+                      component scores + the min-score overall grade
+``/alerts``           the attached :class:`repro.obs.alerts.AlertEngine`'s
+                      per-rule state (``{"available": false}`` without one)
 ``/spans``            the attached :class:`repro.obs.trace.Tracer`'s
                       in-memory span ring (newest ``max_spans``)
 ``/stages``           per-stage latency breakdown of those spans (queue
@@ -22,8 +29,9 @@ path                  payload
                       per-op breakdown for ``cycle()`` transitions
 ====================  =====================================================
 
-Any other path falls back to the full rollup, so pre-tracing dashboards
-keep working unchanged.
+Any other path is a **404** with a JSON body listing the valid routes (a
+typo'd dashboard URL used to silently get the full rollup with a 200 —
+indistinguishable from the intended answer).
 """
 from __future__ import annotations
 
@@ -32,6 +40,9 @@ import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 
 from .recorder import Recorder, json_default
+
+ROUTES = ("/", "/alerts", "/health", "/healthz", "/spans", "/stages",
+          "/sublinear")
 
 
 def _sublinear_view(rollup: dict) -> dict:
@@ -57,36 +68,62 @@ def _sublinear_view(rollup: dict) -> dict:
 
 
 class StatsServer:
-    """Serve ``recorder.rollup()`` (plus trace views) as JSON over GET."""
+    """Serve ``recorder.rollup()`` (plus alert/health/trace views) as JSON.
+
+    ``alerts`` (an :class:`~repro.obs.alerts.AlertEngine`), ``health`` (a
+    zero-arg callable returning the ``/health`` payload), and ``tracer``
+    are all optional and may also be attached after construction by
+    assigning the public attributes — the serve front-end builds the
+    engine after the server is already listening.
+    """
 
     def __init__(self, recorder: Recorder, addr: str = "127.0.0.1:0",
-                 tracer=None):
+                 tracer=None, alerts=None, health=None):
         host, _, port = addr.partition(":")
-        recorder_ref = recorder
-        tracer_ref = tracer
+        self.recorder = recorder
+        self.tracer = tracer
+        self.alerts = alerts
+        self.health = health
+        server_ref = self
 
         class _Handler(BaseHTTPRequestHandler):
             def do_GET(self):  # noqa: N802 — http.server API
                 path = self.path.split("?", 1)[0].rstrip("/") or "/"
-                if path == "/spans":
-                    spans = tracer_ref.spans() if tracer_ref else []
+                status = 200
+                if path == "/":
+                    payload = server_ref.recorder.rollup()
+                elif path == "/healthz":
+                    payload = {"ok": True,
+                               "run_id": server_ref.recorder.run_id}
+                elif path == "/health":
+                    payload = server_ref._health_view()
+                elif path == "/alerts":
+                    engine = server_ref.alerts
+                    payload = engine.status() if engine is not None \
+                        else {"available": False}
+                elif path == "/spans":
+                    tracer = server_ref.tracer
+                    spans = tracer.spans() if tracer else []
                     payload = {
                         "spans": spans,
                         "count": len(spans),
-                        "dropped": tracer_ref.dropped if tracer_ref else 0,
+                        "dropped": tracer.dropped if tracer else 0,
                     }
                 elif path == "/stages":
                     from ..core.stats import stage_latency_breakdown
 
+                    tracer = server_ref.tracer
                     payload = stage_latency_breakdown(
-                        tracer_ref.spans() if tracer_ref else []
+                        tracer.spans() if tracer else []
                     )
                 elif path == "/sublinear":
-                    payload = _sublinear_view(recorder_ref.rollup())
+                    payload = _sublinear_view(server_ref.recorder.rollup())
                 else:
-                    payload = recorder_ref.rollup()
+                    status = 404
+                    payload = {"error": f"unknown path {path!r}",
+                               "routes": list(ROUTES)}
                 body = json.dumps(payload, default=json_default).encode()
-                self.send_response(200)
+                self.send_response(status)
                 self.send_header("Content-Type", "application/json")
                 self.send_header("Content-Length", str(len(body)))
                 self.end_headers()
@@ -103,6 +140,17 @@ class StatsServer:
             target=self._server.serve_forever, name="stats-http", daemon=True
         )
         self._thread.start()
+
+    def _health_view(self) -> dict:
+        if self.health is not None:
+            return self.health()
+        from .health import health_report
+
+        engine = self.alerts
+        return health_report(
+            self.recorder.rollup(),
+            alert_status=engine.status() if engine is not None else None,
+        )
 
     @property
     def url(self) -> str:

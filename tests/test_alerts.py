@@ -1,0 +1,473 @@
+"""Alerting engine, component health model, and the autoscaler control loop.
+
+All synthetic: rules are evaluated against hand-built rollups (the engine
+never requires live serving), the health model against rollup + fleet
+report fixtures, and the AutoScaler against stub fleet/router objects so
+every decision branch (pressure kinds, cooldown, bounds, quiesce, LIFO
+retirement) is exercised without spinning up chains.
+"""
+import pytest
+
+from repro.core.stats import EwmaState, burn_rate, ewma_update, ewma_zscore
+from repro.fleet.autoscale import AutoScaleConfig, AutoScaler
+from repro.obs import Recorder
+from repro.obs.alerts import AlertEngine, AlertRule, default_rules
+from repro.obs.health import health_report
+
+
+def _rollup(**fields):
+    """A rollup with one 'slo' stream whose field aggregates all equal the
+    given value — `fields` for the alert engine, `last` for the health
+    model (both are what Recorder.rollup() maintains)."""
+    return {"streams": {"slo": {
+        "count": 1,
+        "last": dict(fields),
+        "fields": {k: {"last": v, "mean": v, "min": v, "max": v,
+                       "p50": v, "p95": v, "count": 1}
+                   for k, v in fields.items()},
+    }}}
+
+
+def _threshold_rule(**kw):
+    base = dict(name="hot", stream="slo", field="p95_ms", kind="threshold",
+                op=">", threshold=100.0, for_samples=2, clear_samples=2)
+    base.update(kw)
+    return AlertRule(**base)
+
+
+# ---------------------------------------------------------------------------
+# EWMA / burn-rate statistics (repro.core.stats)
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_tracks_mean_and_flags_outliers():
+    st = EwmaState(0, 0.0, 0.0)
+    for _ in range(50):
+        st = ewma_update(st, 10.0, alpha=0.3)
+    assert st.mean == pytest.approx(10.0)
+    assert abs(ewma_zscore(st, 10.0)) < 1e-6
+    # a constant series has ~zero variance: any deviation is a huge z
+    assert abs(ewma_zscore(st, 11.0)) > 100.0
+    # noisy series: z is scaled by the learned sigma
+    st = EwmaState(0, 0.0, 0.0)
+    for i in range(200):
+        st = ewma_update(st, 10.0 + (1.0 if i % 2 else -1.0), alpha=0.1)
+    assert abs(ewma_zscore(st, 10.0)) < 1.5
+    assert ewma_zscore(st, 50.0) > 10.0
+
+
+def test_burn_rate_is_bad_fraction_over_budget():
+    assert burn_rate(0.2, 0.1) == pytest.approx(2.0)
+    assert burn_rate(0.0, 0.1) == 0.0
+    assert burn_rate(1.0, 0.0) > 1e9  # zero budget never divides by zero
+
+
+# ---------------------------------------------------------------------------
+# AlertRule validation
+# ---------------------------------------------------------------------------
+
+
+def test_alert_rule_validates_kind_op_and_windows():
+    with pytest.raises(ValueError):
+        _threshold_rule(kind="vibes")
+    with pytest.raises(ValueError):
+        _threshold_rule(op="~")
+    with pytest.raises(ValueError):
+        _threshold_rule(source="p99")  # not a rollup aggregate
+    with pytest.raises(ValueError):
+        AlertRule(name="b", stream="slo", field="x", kind="burn_rate",
+                  objective=0.9, short_window=10, long_window=5)
+    with pytest.raises(ValueError):
+        AlertRule(name="a", stream="slo", field="x", kind="anomaly",
+                  direction="sideways")
+    with pytest.raises(ValueError):
+        AlertEngine(None, [_threshold_rule(), _threshold_rule()])  # dup names
+
+
+# ---------------------------------------------------------------------------
+# Threshold rules: the pending -> firing -> resolved -> ok state machine
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_state_machine_full_cycle():
+    eng = AlertEngine(None, [_threshold_rule()])
+    hot, cool = _rollup(p95_ms=500.0), _rollup(p95_ms=10.0)
+    assert [e["to"] for e in eng.evaluate(hot)] == ["pending"]
+    assert [e["to"] for e in eng.evaluate(hot)] == ["firing"]
+    assert eng.firing() == ["hot"]
+    assert eng.evaluate(hot) == []  # steady-state firing: no new events
+    assert eng.evaluate(cool) == []  # clear_samples=2: one clear holds
+    assert [e["to"] for e in eng.evaluate(cool)] == ["resolved"]
+    # resolved is visible for exactly one evaluation, then back to ok
+    assert [e["to"] for e in eng.evaluate(cool)] == ["ok"]
+    assert eng.firing() == []
+    assert eng.fired_total == 1 and eng.resolved_total == 1
+
+
+def test_threshold_pending_clears_without_firing_on_blip():
+    eng = AlertEngine(None, [_threshold_rule(for_samples=3)])
+    eng.evaluate(_rollup(p95_ms=500.0))  # pending
+    events = eng.evaluate(_rollup(p95_ms=10.0))  # breach streak broken
+    assert [e["to"] for e in events] == ["ok"]
+    assert eng.fired_total == 0
+    # the breach counter reset: two more breaches still only reach pending
+    eng.evaluate(_rollup(p95_ms=500.0))
+    assert eng.state("hot") == "pending"
+
+
+def test_cooldown_suppresses_reentry_with_injected_clock():
+    now = [0.0]
+    eng = AlertEngine(
+        None,
+        [_threshold_rule(for_samples=1, clear_samples=1, cooldown_s=60.0)],
+        clock=lambda: now[0],
+    )
+    hot, cool = _rollup(p95_ms=500.0), _rollup(p95_ms=10.0)
+    eng.evaluate(hot)  # pending -> firing (for_samples=1 fires same pass)
+    assert eng.state("hot") == "firing"
+    eng.evaluate(cool)  # resolved
+    eng.evaluate(cool)  # ok
+    now[0] = 30.0  # inside cooldown: a fresh breach is suppressed
+    assert eng.evaluate(hot) == []
+    assert eng.state("hot") == "ok"
+    now[0] = 61.0  # cooldown expired: normal re-entry
+    events = eng.evaluate(hot)
+    assert [e["to"] for e in events] == ["pending", "firing"]
+
+
+def test_missing_stream_or_field_leaves_state_untouched():
+    eng = AlertEngine(None, [_threshold_rule()])
+    eng.evaluate(_rollup(p95_ms=500.0))
+    assert eng.state("hot") == "pending"
+    assert eng.evaluate({"streams": {}}) == []  # no slo stream this pass
+    assert eng.state("hot") == "pending"  # neither breach nor clear
+
+
+# ---------------------------------------------------------------------------
+# Burn-rate rules: multi-window SLO error-budget burn
+# ---------------------------------------------------------------------------
+
+
+def _burn_engine():
+    rule = AlertRule(
+        name="burn", stream="slo", field="hit_rate", kind="burn_rate",
+        objective=0.9, max_burn=2.0, short_window=3, long_window=6,
+        good_metric=True, for_samples=1, clear_samples=1,
+    )
+    return AlertEngine(None, [rule])
+
+
+def test_burn_rate_fires_on_sustained_budget_burn_and_resolves():
+    eng = _burn_engine()
+    # budget = 1 - 0.9 = 0.1; hit_rate 0.6 -> bad 0.4 -> burn 4x > 2x
+    for _ in range(2):
+        eng.evaluate(_rollup(hit_rate=0.6))
+    assert eng.state("burn") == "ok"  # < short_window samples: no verdict
+    eng.evaluate(_rollup(hit_rate=0.6))
+    assert eng.state("burn") == "firing"
+    # recovery: good samples dilute both windows below max_burn
+    for _ in range(6):
+        eng.evaluate(_rollup(hit_rate=1.0))
+    assert eng.state("burn") in ("resolved", "ok")
+
+
+def test_burn_rate_ignores_short_spike_the_long_window_absorbs():
+    eng = _burn_engine()
+    for _ in range(6):
+        eng.evaluate(_rollup(hit_rate=1.0))  # long window full of good
+    eng.evaluate(_rollup(hit_rate=0.0))  # one catastrophic sample
+    # short burn is huge but the long window still averages under 2x
+    assert eng.state("burn") == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Anomaly rules: EWMA z-score with a baseline that regressions don't teach
+# ---------------------------------------------------------------------------
+
+
+def test_anomaly_fires_below_baseline_and_keeps_baseline_unpoisoned():
+    rule = AlertRule(
+        name="rate", stream="slo", field="req_per_s", kind="anomaly",
+        z_threshold=4.0, min_samples=8, direction="below",
+        for_samples=2, clear_samples=2,
+    )
+    eng = AlertEngine(None, [rule])
+    for i in range(20):
+        eng.evaluate(_rollup(req_per_s=1000.0 + (i % 2)))
+    assert eng.state("rate") == "ok"
+    eng.evaluate(_rollup(req_per_s=5.0))  # collapse: pending
+    eng.evaluate(_rollup(req_per_s=5.0))  # still collapsed: firing
+    assert eng.state("rate") == "firing"
+    # the collapsed samples were NOT folded into the EWMA, so the baseline
+    # still reads ~1000 and recovery resolves the alert
+    for _ in range(2):
+        eng.evaluate(_rollup(req_per_s=1001.0))
+    assert eng.state("rate") == "resolved"
+    eng.evaluate(_rollup(req_per_s=1001.0))
+    assert eng.state("rate") == "ok"
+    # direction='below' never fires on an upward spike
+    eng.evaluate(_rollup(req_per_s=50000.0))
+    assert eng.state("rate") == "ok"
+
+
+# ---------------------------------------------------------------------------
+# Engine bookkeeping: the alerts stream, status(), default rules
+# ---------------------------------------------------------------------------
+
+
+def test_transitions_land_on_the_alerts_stream(tmp_path):
+    rec = Recorder(str(tmp_path), run_id="r")
+    eng = AlertEngine(rec, [_threshold_rule(severity="page")])
+    eng.evaluate(_rollup(p95_ms=500.0))
+    eng.evaluate(_rollup(p95_ms=500.0))
+    eng.evaluate(_rollup(p95_ms=1.0))
+    eng.evaluate(_rollup(p95_ms=1.0))
+    rec.close()
+    events = rec.read_stream("alerts")
+    assert [(e["from"], e["to"]) for e in events] == [
+        ("ok", "pending"), ("pending", "firing"), ("firing", "resolved")]
+    assert all(e["rule"] == "hot" and e["severity"] == "page"
+               and e["stream"] == "slo" and "value" in e for e in events)
+
+
+def test_status_payload_shape_and_counters():
+    eng = AlertEngine(None, [_threshold_rule(for_samples=1)])
+    eng.evaluate(_rollup(p95_ms=500.0))
+    st = eng.status()
+    assert st["available"] is True and st["firing"] == ["hot"]
+    assert st["evaluations"] == 1 and st["fired_total"] == 1
+    rule = st["rules"]["hot"]
+    assert rule["state"] == "firing" and rule["kind"] == "threshold"
+    assert rule["value"] == 500.0 and rule["severity"] == "warning"
+
+
+def test_default_rules_cover_the_standard_streams_and_fire_sanely():
+    rules = default_rules("bayeslr", "predictive",
+                          deadline_ms=100.0, max_depth=32)
+    names = {r.name for r in rules}
+    assert {"p95_over_budget", "admission_overload", "queue_depth_high",
+            "deadline_burn", "req_rate_anomaly", "sublinear_regression",
+            "rhat_regression", "ess_anomaly"} <= names
+    eng = AlertEngine(None, list(rules))
+    # an active shed floor fires admission_overload within one evaluation
+    eng.evaluate(_rollup(admission_shed_floor=1.0, admission_depth=5.0))
+    assert "admission_overload" in eng.firing()
+    # floor back to the -1 sentinel: resolves on the next pass
+    eng.evaluate(_rollup(admission_shed_floor=-1.0, admission_depth=0.0))
+    assert "admission_overload" not in eng.firing()
+
+
+# ---------------------------------------------------------------------------
+# Component health model
+# ---------------------------------------------------------------------------
+
+
+def test_health_report_healthy_when_signals_are_clean():
+    roll = _rollup(admission_depth=3.0, admission_shed_floor=-1.0,
+                   dead_lanes=0.0)
+    rep = health_report(roll, max_depth=64)
+    assert rep["status"] == "ok" and rep["score"] >= 0.9
+    assert set(rep["components"]) >= {"queue", "router"}
+
+
+def test_health_report_degrades_on_shed_floor_and_dead_lanes():
+    roll = _rollup(admission_depth=80.0, admission_shed_floor=1.0,
+                   dead_lanes=1.0)
+    rep = health_report(roll, max_depth=64)
+    assert rep["score"] <= 0.5
+    assert rep["components"]["queue"]["score"] <= 0.5
+    assert rep["components"]["router"]["score"] <= 0.5
+    assert rep["status"] in ("degraded", "critical")
+
+
+def test_health_report_page_alert_caps_score():
+    roll = _rollup(admission_depth=0.0, admission_shed_floor=-1.0)
+    status = {"available": True, "firing": ["p95_over_budget"],
+              "rules": {"p95_over_budget": {"state": "firing",
+                                            "severity": "page"}}}
+    rep = health_report(roll, alert_status=status, max_depth=64)
+    assert rep["score"] <= 0.4 and rep["status"] == "critical"
+    assert rep["firing"] == ["p95_over_budget"]
+
+
+def test_health_report_replica_and_writer_components():
+    roll = {"streams": {"snapshot": {
+        "count": 2, "last": {"rhat": 1.6, "num_draws": 64}}}}
+    fleet_report = {
+        "sync": {"syncs": 10},
+        "errors": {"s/r1": "ReplicaDeadError: down"},
+        "shards": {"s": {"writer_steps": 100,
+                         "replica_versions": [100, 40],
+                         "replicas": [{"alive": True}, {"alive": False}]}},
+    }
+    rep = health_report(roll, fleet_report=fleet_report)
+    assert rep["components"]["replicas"]["score"] < 0.8
+    assert rep["components"]["writer"]["score"] <= 0.4  # rhat 1.6 diverging
+    assert rep["status"] == "critical"
+
+
+# ---------------------------------------------------------------------------
+# AutoScaler control loop (stub fleet/router: every branch, no chains)
+# ---------------------------------------------------------------------------
+
+
+class _StubReplica:
+    def __init__(self, name):
+        self.name = name
+
+
+class _StubFleet:
+    def __init__(self, n=1):
+        self.replicas = [_StubReplica(f"w@0#r{i}") for i in range(n)]
+        self._seq = n
+        self.added, self.removed = [], []
+
+    def replica_count(self, workload):
+        return len(self.replicas)
+
+    def add_replica(self, workload, shard_index=0):
+        rep = _StubReplica(f"w@0#r{self._seq}")
+        self._seq += 1
+        self.replicas.append(rep)
+        self.added.append(rep.name)
+        return ("shard-stub", rep)
+
+    def remove_replica(self, workload, replica_name=None):
+        rep = next(r for r in self.replicas if r.name == replica_name)
+        self.replicas.remove(rep)
+        self.removed.append(rep.name)
+        return rep.name
+
+
+class _StubRouter:
+    def __init__(self):
+        self.depth = 0
+        self.shed = 0
+        self.shed_floor = None
+        self.p95_ms = None
+        self.attached, self.detached = [], []
+
+    def slo_report(self):
+        return {
+            "shed": self.shed,
+            "admission": {"depth": self.depth, "shed_floor": self.shed_floor,
+                          "predicted_miss_rate": 0.0},
+            "classes": {"w.q": {"p95_ms": self.p95_ms}},
+        }
+
+    def attach_lane(self, shard, replica):
+        self.attached.append(replica.name)
+
+    def detach_lane(self, workload, name, timeout_s=30.0):
+        self.detached.append(name)
+        return True
+
+
+def _scaler(fleet, router, clock, **cfg_kw):
+    cfg = dict(min_replicas=1, max_replicas=3, scale_up_depth=10,
+               scale_down_depth=2, quiesce_ticks=2, cooldown_s=5.0)
+    cfg.update(cfg_kw)
+    return AutoScaler(fleet, router, "w", AutoScaleConfig(**cfg),
+                      clock=lambda: clock[0])
+
+
+def test_autoscale_config_validates_bounds():
+    with pytest.raises(ValueError):
+        AutoScaleConfig(min_replicas=0)
+    with pytest.raises(ValueError):
+        AutoScaleConfig(min_replicas=3, max_replicas=2)
+    with pytest.raises(ValueError):
+        AutoScaleConfig(quiesce_ticks=0)
+
+
+def test_scale_up_on_depth_pressure_actuates_fleet_and_router():
+    fleet, router, clock = _StubFleet(), _StubRouter(), [0.0]
+    scaler = _scaler(fleet, router, clock)
+    router.depth = 50
+    d = scaler.tick()
+    assert d["action"] == "scale_up" and d["replicas_after"] == 2
+    assert fleet.added == ["w@0#r1"] and router.attached == ["w@0#r1"]
+    assert scaler.outstanding == 1
+
+
+def test_cooldown_and_max_bound_block_and_are_recorded(tmp_path):
+    rec = Recorder(str(tmp_path), run_id="r")
+    fleet, router, clock = _StubFleet(), _StubRouter(), [0.0]
+    scaler = _scaler(fleet, router, clock)
+    scaler.recorder = rec
+    router.depth = 50
+    assert scaler.tick()["action"] == "scale_up"
+    clock[0] = 1.0  # inside cooldown
+    d = scaler.tick()
+    assert d["action"] == "hold" and "cooldown" in d["reason"]
+    clock[0] = 6.0
+    assert scaler.tick()["action"] == "scale_up"  # 3 replicas now (max)
+    clock[0] = 12.0
+    d = scaler.tick()
+    assert d["action"] == "hold" and "max_replicas" in d["reason"]
+    assert scaler.events == {"scale_up": 2, "scale_down": 0, "blocked": 2}
+    rec.close()
+    # every actuation AND every blocked intent landed on the stream
+    assert [e["action"] for e in rec.read_stream("autoscale")] == [
+        "scale_up", "hold", "scale_up", "hold"]
+
+
+def test_scale_down_needs_consecutive_calm_and_retires_lifo_only_own():
+    fleet, router, clock = _StubFleet(), _StubRouter(), [0.0]
+    scaler = _scaler(fleet, router, clock, cooldown_s=0.0)
+    router.depth = 50
+    scaler.tick()
+    scaler.tick()  # 3 replicas: r1, r2 added by the scaler
+    router.depth = 0
+    scaler.tick()  # calm 1
+    assert fleet.removed == []
+    d = scaler.tick()  # calm 2 -> retire newest own replica
+    assert d["action"] == "scale_down"
+    assert router.detached == ["w@0#r2"] and fleet.removed == ["w@0#r2"]
+    scaler.tick()
+    scaler.tick()  # quiesce again -> r1
+    assert fleet.removed == ["w@0#r2", "w@0#r1"]
+    # back at the floor with nothing of its own left: calm holds forever
+    for _ in range(5):
+        assert scaler.tick()["action"] == "hold"
+    assert fleet.replica_count("w") == 1  # launch replica never touched
+
+
+def test_pressure_reasons_alert_shed_and_p95():
+    fleet, router, clock = _StubFleet(), _StubRouter(), [0.0]
+
+    class _Eng:
+        def firing(self):
+            return ["admission_overload", "rhat_regression"]
+
+    scaler = _scaler(fleet, router, clock, cooldown_s=0.0)
+    scaler.engine = _Eng()
+    d = scaler.tick()  # alert wins even with depth 0
+    assert d["action"] == "scale_up" and d["reason"] == "alert:admission_overload"
+    scaler.engine = None
+    router.shed = 7  # fresh sheds since the last tick
+    d = scaler.tick()
+    assert d["action"] == "scale_up" and "shed_delta=7" in d["reason"]
+    d = scaler.tick()  # same cumulative counter: no new sheds, calm
+    assert d["action"] == "hold" and d["reason"] == "calm"
+    # p95 pressure only when configured
+    fleet2, router2 = _StubFleet(), _StubRouter()
+    router2.p95_ms = 900.0
+    assert _scaler(fleet2, router2, clock).tick()["action"] == "hold"
+    s = _scaler(fleet2, router2, clock, scale_up_p95_ms=500.0)
+    assert s.tick()["action"] == "scale_up"
+
+
+def test_observe_absorbs_shed_baseline_without_acting():
+    fleet, router, clock = _StubFleet(), _StubRouter(), [0.0]
+    scaler = _scaler(fleet, router, clock, cooldown_s=0.0)
+    router.shed = 100
+    scaler.observe()  # burst already handled elsewhere
+    assert scaler.tick()["action"] == "hold"  # no stale pressure
+    assert fleet.added == []
+
+
+def test_default_overload_alerts_exclude_cumulative_latency_rules():
+    cfg = AutoScaleConfig()
+    assert "p95_over_budget" not in cfg.overload_alerts
+    assert "admission_overload" in cfg.overload_alerts

@@ -209,3 +209,79 @@ def test_soak_sigkills_replica_process_and_recovers():
     assert "parity=ok(bitexact)" in soak_line
     assert "resyncs=0" not in soak_line
     assert "STATS_OK" in out  # live endpoint answered under load
+
+
+def test_closed_loop_overload_scales_up_then_quiesce_scales_down(tmp_path):
+    """The full observability loop in-proc: an admission overload recorded
+    on the slo stream fires ``admission_overload``, the autoscaler traces
+    that alert into a scale-up whose replica serves bit-exact, and after
+    the queue drains the quiesce path retires exactly the replica it added
+    — with the whole decision history on the ``autoscale`` stream."""
+    from repro.fleet import AdmissionConfig, AutoScaleConfig, AutoScaler
+    from repro.obs import AlertEngine, Recorder, SLOSampler, default_rules
+
+    fleet = _tiny_fleet(replicas=1)
+    rec = Recorder(str(tmp_path), run_id="loop")
+    try:
+        router = FleetRouter(fleet, priorities={"predictive": 1, "vote": 0},
+                             max_batch=4, default_deadline_s=30.0,
+                             admission=AdmissionConfig(max_depth=8))
+        sampler = SLOSampler(rec, router)
+        engine = AlertEngine(rec, default_rules("bayeslr", "predictive",
+                                                max_depth=8))
+        scaler = AutoScaler(
+            fleet, router, "bayeslr",
+            AutoScaleConfig(min_replicas=1, max_replicas=2, scale_up_depth=8,
+                            scale_down_depth=2, quiesce_ticks=2,
+                            cooldown_s=0.0),
+            recorder=rec, engine=engine)
+        spec_v = fleet.spec("bayeslr", "vote")
+
+        # Overload: flood the low class until the shed floor rises.
+        shed = 0
+        for i in range(32):
+            req = router.submit("bayeslr", "vote",
+                                spec_v.make_queries(jax.random.key(i), 2))
+            if req.error and req.error.startswith("shed"):
+                shed += 1
+        assert shed >= 1
+        sampler.sample()
+        engine.evaluate()
+        assert "admission_overload" in engine.firing()
+
+        # The alert becomes the scale-up, and the newcomer is bit-exact.
+        decision = scaler.tick()
+        assert decision["action"] == "scale_up"
+        assert decision["reason"] == "alert:admission_overload"
+        assert fleet.replica_count("bayeslr") == 2
+        shard = fleet.shards("bayeslr")[0]
+        newcomer = shard.replicas[-1]
+        spec_p = fleet.spec("bayeslr", "predictive")
+        xs = spec_p.make_queries(jax.random.key(99), 4)
+        want, _ = shard.writer.query(spec_p, xs)
+        got, _ = newcomer.serve(spec_p, "predictive", xs)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+        # Drain through both lanes, then quiesce: the alert resolves and
+        # two calm ticks retire exactly the replica the scaler added.
+        router.drain()
+        sampler.sample()
+        engine.evaluate()
+        assert "admission_overload" not in engine.firing()
+        assert scaler.tick()["action"] == "hold"  # calm 1 of 2
+        down = scaler.tick()
+        assert down["action"] == "scale_down"
+        assert down["replica"] == newcomer.name
+        assert fleet.replica_count("bayeslr") == 1
+        assert scaler.events == {"scale_up": 1, "scale_down": 1, "blocked": 0}
+
+        rec.close()
+        alerts = rec.read_stream("alerts")
+        assert any(e["rule"] == "admission_overload" and e["to"] == "firing"
+                   for e in alerts)
+        decisions = rec.read_stream("autoscale")
+        assert [d["action"] for d in decisions] == ["scale_up", "scale_down"]
+        assert decisions[0]["alerts_firing"] != ""
+    finally:
+        rec.close()
+        fleet.close()

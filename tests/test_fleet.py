@@ -716,3 +716,99 @@ def test_router_workers_serve_mixed_classes_correctly(warm_fleet):
             np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     finally:
         router.stop_workers()
+
+
+# ---------------------------------------------------------------------------
+# Runtime scaling — add_replica / remove_replica + attach_lane / detach_lane
+# ---------------------------------------------------------------------------
+
+
+def test_add_replica_joins_bit_exact_with_fresh_name():
+    fleet = _tiny_fleet()
+    fleet.warm()
+    try:
+        assert fleet.replica_count("bayeslr") == 2
+        shard_before = fleet.shards("bayeslr")[0]
+        shard, replica = fleet.add_replica("bayeslr")
+        assert fleet.replica_count("bayeslr") == 3
+        # the shard entry was swapped, not mutated: the new tuple is the
+        # old one plus the newcomer, and the live list holds the new entry
+        assert fleet.shards("bayeslr")[0] is shard
+        assert shard.replicas[:-1] == shard_before.replicas
+        assert replica is shard.replicas[-1]
+        assert replica.name == f"{shard.name}#r2"
+        # the join resync seeded the full window: bit-exact immediately
+        assert replica.version == shard.writer.steps_done
+        spec = fleet.spec("bayeslr", "predictive")
+        xs = spec.make_queries(jax.random.key(0), 8)
+        want, _ = shard.writer.query(spec, xs)
+        got, _ = replica.serve(spec, "predictive", xs)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+        # retire + re-add: the #rN sequence never reuses a name
+        fleet.remove_replica("bayeslr", replica_name=replica.name)
+        _, again = fleet.add_replica("bayeslr")
+        assert again.name == f"{shard.name}#r3"
+    finally:
+        fleet.close()
+
+
+def test_remove_replica_retires_newest_and_guards_the_last():
+    fleet = _tiny_fleet()  # 2 launch replicas
+    fleet.warm()
+    try:
+        _, added = fleet.add_replica("bayeslr")
+        assert fleet.remove_replica("bayeslr", replica_name=added.name) \
+            == added.name
+        shard = fleet.shards("bayeslr")[0]
+        assert added not in shard.replicas
+        assert fleet.replica_count("bayeslr") == 2
+        with pytest.raises(KeyError):
+            fleet.remove_replica("bayeslr", replica_name=added.name)
+        # no name: the newest goes first
+        newest = shard.replicas[-1].name
+        assert fleet.remove_replica("bayeslr") == newest
+        assert fleet.replica_count("bayeslr") == 1
+        with pytest.raises(ValueError, match="last replica"):
+            fleet.remove_replica("bayeslr")
+        assert fleet.replica_count("bayeslr") == 1
+    finally:
+        fleet.close()
+
+
+def test_attach_lane_serves_and_detach_reroutes_cleanly():
+    fleet = _tiny_fleet(replicas=1)
+    fleet.warm()
+    try:
+        spec = fleet.spec("bayeslr", "predictive")
+        router = FleetRouter(fleet, priorities={"predictive": 0},
+                             max_batch=4, default_deadline_s=30.0)
+        shard, replica = fleet.add_replica("bayeslr")
+        router.attach_lane(shard, replica)
+        reqs = []
+        for i in range(12):
+            xs = spec.make_queries(jax.random.key(i), 2)
+            reqs.append((xs, router.submit("bayeslr", "predictive", xs)))
+        router.drain()
+        for xs, req in reqs:
+            want, _ = shard.writer.query(spec, xs)
+            np.testing.assert_array_equal(
+                np.asarray(req.result()), np.asarray(want))
+        lanes = router._lanes["bayeslr"]
+        assert len(lanes) == 2
+        assert all(l.served > 0 for l in lanes)  # least-loaded used both
+        # detach with a backlog queued: the pending work reroutes, nothing
+        # is dropped, and the surviving lane keeps serving
+        tail = []
+        for i in range(6):
+            xs = spec.make_queries(jax.random.key(100 + i), 2)
+            tail.append((xs, router.submit("bayeslr", "predictive", xs)))
+        assert router.detach_lane("bayeslr", replica.name) is True
+        fleet.remove_replica("bayeslr", replica_name=replica.name)
+        router.drain()
+        for xs, req in tail:
+            want, _ = shard.writer.query(spec, xs)
+            np.testing.assert_array_equal(
+                np.asarray(req.result()), np.asarray(want))
+        assert router.slo_report()["errors"] == 0
+    finally:
+        fleet.close()

@@ -492,13 +492,153 @@ def test_stats_server_spans_stages_and_sublinear_paths():
         assert sub["available"] is True
         assert sub["frac_data_touched"]["mean"] == pytest.approx(0.1)
         assert sub["frac_data_touched"]["mean"] < 1.0
-        # unknown paths keep serving the full rollup (back-compat)
         with urllib.request.urlopen(base + "/", timeout=10) as resp:
             roll = json.loads(resp.read())
         assert "streams" in roll
     finally:
         server.close()
         rec.close()
+
+
+def test_stats_server_unknown_path_is_json_404_listing_routes():
+    import urllib.error
+
+    rec = Recorder()
+    server = StatsServer(rec, "127.0.0.1:0")
+    try:
+        with pytest.raises(urllib.error.HTTPError) as exc_info:
+            urllib.request.urlopen(server.url.rstrip("/") + "/nope",
+                                   timeout=10)
+        err = exc_info.value
+        assert err.code == 404
+        body = json.loads(err.read())
+        assert "unknown path" in body["error"]
+        assert {"/", "/alerts", "/health", "/healthz"} <= set(body["routes"])
+    finally:
+        server.close()
+        rec.close()
+
+
+def test_stats_server_healthz_alerts_and_health_paths():
+    from repro.obs import AlertEngine, AlertRule
+
+    rec = Recorder(run_id="probe")
+    server = StatsServer(rec, "127.0.0.1:0")
+    try:
+        base = server.url.rstrip("/")
+        with urllib.request.urlopen(base + "/healthz", timeout=10) as resp:
+            hz = json.loads(resp.read())
+        assert hz == {"ok": True, "run_id": "probe"}
+        # no engine attached yet: /alerts degrades, /health still grades
+        with urllib.request.urlopen(base + "/alerts", timeout=10) as resp:
+            assert json.loads(resp.read()) == {"available": False}
+        with urllib.request.urlopen(base + "/health", timeout=10) as resp:
+            health = json.loads(resp.read())
+        assert health["status"] == "ok" and health["score"] == 1.0
+        # the serve front-end attaches the engine after the server is up
+        rule = AlertRule(name="hot", stream="slo", field="p95_ms",
+                         op=">", threshold=10.0, for_samples=1,
+                         clear_samples=1, severity="page")
+        engine = AlertEngine(rec, [rule])
+        server.alerts = engine
+        rec.record("slo", p95_ms=99.0)
+        engine.evaluate()
+        with urllib.request.urlopen(base + "/alerts", timeout=10) as resp:
+            status = json.loads(resp.read())
+        assert status["available"] is True and status["firing"] == ["hot"]
+        assert status["rules"]["hot"]["state"] == "firing"
+        # a firing page alert drags /health to critical
+        with urllib.request.urlopen(base + "/health", timeout=10) as resp:
+            health = json.loads(resp.read())
+        assert health["status"] == "critical" and health["firing"] == ["hot"]
+        assert set(health["components"]) == {
+            "queue", "router", "replicas", "writer", "sublinear"}
+    finally:
+        server.close()
+        rec.close()
+
+
+def test_alert_and_health_modules_load_lazily():
+    """Every serve path imports repro.obs (via trace/recorder); a flags-off
+    run must not even *load* the alerting layer. PEP 562 lazy exports keep
+    the names importable while deferring the modules."""
+    import subprocess
+
+    code = (
+        "import sys, repro.obs, repro.obs.trace, repro.obs.server\n"
+        "assert 'repro.obs.alerts' not in sys.modules, 'alerts eager'\n"
+        "assert 'repro.obs.health' not in sys.modules, 'health eager'\n"
+        "from repro.obs import AlertEngine, health_report\n"
+        "assert 'repro.obs.alerts' in sys.modules\n"
+        "assert 'repro.obs.health' in sys.modules\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_REPO, "src")
+    subprocess.run([sys.executable, "-c", code], check=True, env=env)
+
+
+# ---------------------------------------------------------------------------
+# repro.obs.dash — one-shot terminal summary of a recorded run dir
+# ---------------------------------------------------------------------------
+
+
+def _dash_run_dir(tmp_path, close=True):
+    from repro.obs import record_transition_cost
+
+    rec = Recorder(str(tmp_path), run_id="dashrun")
+    rec.record("slo", {"count": 4, "req_per_s": 120.0, "p95_ms": 8.0,
+                       "shed": 2, "errors": 0, "dead_lanes": 0})
+    record_transition_cost(rec, "w", {"mean_n_evaluated_overall": 5.0},
+                           num_sections=50)
+    rec.record("alerts", {"rule": "hot", "from": "pending", "to": "firing",
+                          "severity": "page", "value": 99.0})
+    rec.record("autoscale", {"action": "scale_up", "replica": "w@0#r1",
+                             "replicas_before": 1, "replicas_after": 2,
+                             "reason": "alert:hot"})
+    run_dir = rec.dir
+    if close:
+        rec.close()
+    else:
+        rec._closed = True  # simulate a crash: streams flushed, no summary
+        for f in rec._files.values():
+            f.close()
+    return run_dir
+
+
+def test_dash_renders_summary_alerts_and_autoscale(tmp_path):
+    import io
+
+    from repro.obs import dash
+
+    out = io.StringIO()
+    assert dash.main([_dash_run_dir(tmp_path)], out=out) == 0
+    text = out.getvalue()
+    assert "run dashrun" in text
+    assert "frac_data_touched mean=0.1000" in text
+    assert "hot" in text and "fired x1" in text
+    assert "STILL FIRING at exit: hot" in text
+    assert "scale_up w@0#r1 replicas 1->2 (alert:hot)" in text
+
+
+def test_dash_rebuilds_rollup_when_run_crashed_before_summary(tmp_path):
+    import io
+
+    from repro.obs import dash
+
+    run_dir = _dash_run_dir(tmp_path, close=False)
+    assert not os.path.exists(os.path.join(run_dir, "summary.json"))
+    out = io.StringIO()
+    assert dash.main([run_dir], out=out) == 0
+    assert "run dashrun" in out.getvalue()  # rebuilt from raw streams
+
+
+def test_dash_exits_2_on_missing_or_empty_run_dir(tmp_path):
+    from repro.obs import dash
+
+    assert dash.main([str(tmp_path / "nope")]) == 2
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert dash.main([str(empty)]) == 2
 
 
 def test_stats_server_sublinear_unavailable_without_stream():
@@ -559,6 +699,57 @@ def test_history_store_refuses_empty_and_rebuilds_index(tmp_path):
     assert "only" in rebuilt.runs()[0]["id"]
     rebuilt.append(str(art), run_id="second")  # next_seq survived the rebuild
     assert len(rebuilt) == 2
+
+
+def test_history_store_accepts_bench_artifacts_without_verdict(tmp_path):
+    """A run that crashed before (or never ran) the gate still joins the
+    trend baseline: BENCH_*.json alone is enough, GATE_verdict.json is
+    optional."""
+    from repro.obs import HistoryStore
+
+    art = tmp_path / "run"
+    _write_bench(art, qps=1234.0)  # no GATE_verdict.json written
+    store = HistoryStore(str(tmp_path / "hist"))
+    run_id = store.append(str(art), run_id="noverdict")
+    entry = store.runs()[0]
+    assert entry["artifacts"] == ["BENCH_multichain.json",
+                                  "BENCH_serving.json"]
+    assert not os.path.exists(
+        os.path.join(store.run_dir(run_id), "GATE_verdict.json"))
+    # the trend gate consumes a verdict-less history entry like any other
+    recs = gate.load_records(store.run_dir(run_id), "serving")
+    assert any(r["qps"] == 1234.0 for r in recs.values())
+    code = gate.main(["--trend", "--history", str(tmp_path / "hist"),
+                      "--current", str(art), "--benches", "serving"])
+    assert code == 0
+
+
+def test_history_store_interleaved_appends_from_two_stores(tmp_path):
+    """Two writers (e.g. racing CI jobs restoring the same cache) each hold
+    a cached index: neither crashes nor clobbers the other's artifacts —
+    the last index write wins, and an index rebuild recovers both runs
+    with a collision-free next_seq."""
+    from repro.obs import HistoryStore
+
+    art = tmp_path / "run"
+    _write_bench(art)
+    root = tmp_path / "hist"
+    store_a = HistoryStore(str(root))
+    store_b = HistoryStore(str(root))  # cached next_seq=0, same as a's
+    id_a = store_a.append(str(art), run_id="a")
+    id_b = store_b.append(str(art), run_id="b")
+    assert id_a == "000000-a" and id_b == "000000-b"  # same seq, two dirs
+    assert os.path.isdir(store_a.run_dir(id_a))
+    assert os.path.isdir(store_b.run_dir(id_b))
+    # b wrote the index last: a fresh reader sees only b's entry...
+    assert [r["id"] for r in HistoryStore(str(root)).runs()] == [id_b]
+    # ...but a rebuild (corrupt/missing index) recovers both from disk,
+    # and the next append lands past the collision.
+    (root / "index.json").unlink()
+    rebuilt = HistoryStore(str(root))
+    assert [r["id"] for r in rebuilt.runs()] == [id_a, id_b]
+    assert rebuilt.append(str(art), run_id="c") == "000001-c"
+    assert len(rebuilt) == 3
 
 
 # ---------------------------------------------------------------------------
